@@ -1,0 +1,63 @@
+"""Paper Table 2: average insertion time (AIT) / average deletion time (ADT)
+for inter- vs intra-partition edge updates, per dataset, 8 blocks.
+
+The measured quantity is the full BLADYG maintenance latency per update:
+candidate search (Theorem 1 frontier) + restricted coreness recompute +
+graph mutation, end to end, after JIT warmup — the same protocol as the
+paper (averaged over the update batch).
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import coreness, insert_edge_maintain, delete_edge_maintain
+from repro.core.updates import sample_insertions, sample_deletions
+
+from .common import build, CI_SCALES, row
+
+
+def _run_updates(g, core, ups, fn):
+    # warmup/compile on the first update, then time the rest
+    (u, v, _) = ups[0]
+    g, core, st = fn(g, core, jnp.int32(u), jnp.int32(v))
+    jax.block_until_ready(core)
+    times = []
+    for u, v, _ in ups[1:]:
+        t0 = time.perf_counter()
+        g, core, st = fn(g, core, jnp.int32(u), jnp.int32(v))
+        jax.block_until_ready(core)
+        times.append(time.perf_counter() - t0)
+    return g, core, float(np.mean(times)) * 1e3  # ms
+
+
+def run(updates: int = 30, full: bool = False, seed: int = 0
+        ) -> List[Tuple[str, float, str]]:
+    rows = []
+    for ds in CI_SCALES:
+        g0, edges, n = build(ds, P=8, full=full, seed=seed)
+        core0 = coreness(g0)
+        jax.block_until_ready(core0)
+        for scenario in ("inter", "intra"):
+            # insertions
+            g = jax.tree.map(lambda x: x.copy(), g0)
+            core = core0.copy()
+            ins = sample_insertions(g, updates, scenario, seed=seed + 1)
+            g, core, ait = _run_updates(g, core, ins, insert_edge_maintain)
+            rows.append(row(f"table2/{ds}/AIT/{scenario}", ait * 1e3,
+                            f"ms={ait:.2f};n={n}"))
+            # deletions (delete the edges we just inserted ∪ existing)
+            dels = sample_deletions(g, updates, scenario, seed=seed + 2)
+            g, core, adt = _run_updates(g, core, dels, delete_edge_maintain)
+            rows.append(row(f"table2/{ds}/ADT/{scenario}", adt * 1e3,
+                            f"ms={adt:.2f};n={n}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import print_rows
+    print_rows(run())

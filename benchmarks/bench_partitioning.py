@@ -1,0 +1,63 @@
+"""Paper Tables 3-5: dynamic graph partitioning.
+
+Protocol (paper §5.2.2): partition 90% of the graph (PT = partitioning
+time), insert the remaining 10% (UT = update time) under two strategies:
+
+  * IncrementalPart — apply the technique only to the new edges
+    (UB-UPDATE for DFEP, per-edge assignment for hash/random)
+  * NaivePart       — full repartition from scratch
+
+One table per method: hash (T3), random (T4), DFEP (T5).
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core.partition_dynamic import (
+    initial_partition, incremental_part, naive_part)
+from repro.core.partition import edge_balance
+
+from .common import load_dataset, CI_SCALES, row
+
+TABLE_OF = {"hash": "table3", "random": "table4", "dfep": "table5"}
+
+
+def run(full: bool = False, seed: int = 0, methods=("hash", "random", "dfep"),
+        repeats: int = 3) -> List[Tuple[str, float, str]]:
+    rows = []
+    for method in methods:
+        table = TABLE_OF.get(method, f"table_{method}")
+        for ds in CI_SCALES:
+            edges = load_dataset(ds, full=full, seed=seed)
+            rng = np.random.default_rng(seed)
+            perm = rng.permutation(len(edges))
+            cut = int(0.9 * len(edges))
+            base, delta = edges[perm[:cut]], edges[perm[cut:]]
+            n = int(edges.max()) + 1
+
+            pts, uts_inc, uts_nv = [], [], []
+            for r in range(repeats):
+                st0, pt = initial_partition(base, n, 8, method, seed=seed + r)
+                st_inc, ut_inc = incremental_part(st0, delta)
+                st_nv, ut_nv = naive_part(st0, delta)
+                pts.append(pt)
+                uts_inc.append(ut_inc)
+                uts_nv.append(ut_nv)
+                assert len(st_inc.owner) == len(edges)
+                assert len(st_nv.owner) == len(edges)
+            pt, ut_inc, ut_nv = map(np.mean, (pts, uts_inc, uts_nv))
+            bal = edge_balance(st_inc.owner, 8)
+            rows.append(row(f"{table}/{ds}/PT/{method}", pt * 1e6,
+                            f"s={pt:.3f}"))
+            rows.append(row(f"{table}/{ds}/UT/IncrementalPart", ut_inc * 1e6,
+                            f"s={ut_inc:.4f};balance={bal:.2f}"))
+            rows.append(row(f"{table}/{ds}/UT/NaivePart", ut_nv * 1e6,
+                            f"s={ut_nv:.4f};speedup={ut_nv / max(ut_inc, 1e-9):.1f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import print_rows
+    print_rows(run())

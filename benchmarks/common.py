@@ -1,0 +1,57 @@
+"""Shared benchmark helpers: datasets, timers, CSV rows.
+
+Datasets are the paper's Table 1 entries, generated as shape-matched
+stand-ins (SNAP is not redistributable offline; see DESIGN.md §5).  The
+default `scale` keeps CI runtime in minutes — pass --full for paper-scale.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Tuple
+
+import numpy as np
+
+from repro.core import build_blocks
+from repro.core.partition import node_random_partition
+from repro.graphgen import snap_like
+
+# paper Table 1 datasets at CI scale (nodes kept ~1-4k each)
+CI_SCALES: Dict[str, float] = {
+    "DS1": 0.04,
+    "DS2": 0.02,
+    "ego-Facebook": 0.40,
+    "roadNet-CA": 0.0012,
+    "com-LiveJournal": 0.0005,
+}
+FULL_SCALES: Dict[str, float] = {k: 1.0 for k in CI_SCALES}
+# LiveJournal at 4M nodes exceeds CI memory; paper-scale run caps at 10%.
+FULL_SCALES["com-LiveJournal"] = 0.1
+
+
+def load_dataset(name: str, full: bool = False, seed: int = 0) -> np.ndarray:
+    scale = (FULL_SCALES if full else CI_SCALES)[name]
+    return snap_like(name, scale=scale, seed=seed)
+
+
+def build(name: str, P: int = 8, full: bool = False, seed: int = 0):
+    edges = load_dataset(name, full=full, seed=seed)
+    n = int(edges.max()) + 1
+    assign = node_random_partition(n, P, seed=seed)  # paper: random, 8 parts
+    g = build_blocks(edges, n, assign, P=P, deg_slack=64)
+    return g, edges, n
+
+
+def timeit_us(fn: Callable, n: int = 1) -> float:
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / max(1, n) * 1e6
+
+
+def row(name: str, us: float, derived: str = "") -> Tuple[str, float, str]:
+    return (name, us, derived)
+
+
+def print_rows(rows: List[Tuple[str, float, str]]):
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,199 @@
+"""Roofline aggregation: reads the dry-run JSONs (experiments/roofline for
+the exact unrolled pass, experiments/dryrun for the compile-proof pass) and
+emits the three-term roofline table per (arch × shape) — EXPERIMENTS.md
+§Roofline is generated from this.
+
+Terms (TPU v5e, per chip: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link):
+
+  compute    = HLO_FLOPs / (chips · peak)      [per-device flops / peak]
+  memory     = HLO_bytes / (chips · HBM_bw)
+  collective = collective_bytes / (chips · link_bw)
+
+MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) per train step; decode /
+prefill use 2·N(_active)·D per generated/processed token.  The ratio
+MODEL_FLOPS / HLO_FLOPs exposes remat/redundancy overhead.
+"""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs import ARCHS, SHAPES_BY_NAME
+
+PEAK = 197e12
+HBM = 819e9
+LINK = 50e9
+
+
+def active_params(cfg) -> Tuple[float, float]:
+    """(total params, active params per token), analytic."""
+    d = cfg.d_model
+    V = cfg.vocab
+    emb = V * d * (1 if cfg.tie_embeddings else 2)
+
+    def attn_params():
+        if cfg.attn_impl == "mla":
+            q = d * cfg.q_lora_rank + cfg.q_lora_rank * cfg.n_heads * (
+                cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+            kv = d * (cfg.kv_lora_rank + cfg.qk_rope_head_dim) + \
+                cfg.kv_lora_rank * cfg.n_heads * (cfg.qk_nope_head_dim
+                                                  + cfg.v_head_dim)
+            o = cfg.n_heads * cfg.v_head_dim * d
+            return q + kv + o
+        hd = cfg.hd
+        return d * hd * (cfg.n_heads + 2 * cfg.n_kv_heads) + cfg.n_heads * hd * d
+
+    def mlp_params(ff):
+        return 3 * d * ff
+
+    def mamba_params():
+        d_in = cfg.d_inner
+        G, N = cfg.ssm_groups, cfg.ssm_state
+        return d * (2 * d_in + 2 * G * N + cfg.n_ssm_heads) + d_in * d
+
+    total = emb
+    act = emb
+    if cfg.mixer == "mamba":
+        total += cfg.n_layers * mamba_params()
+        act += cfg.n_layers * mamba_params()
+        if cfg.shared_attn_period:
+            shared = attn_params() + mlp_params(cfg.d_ff)
+            total += shared
+            act += shared * (cfg.n_layers // cfg.shared_attn_period)
+    elif cfg.n_experts:
+        dense_layers = cfg.first_k_dense
+        moe_layers = cfg.n_layers - dense_layers
+        total += cfg.n_layers * attn_params()
+        act += cfg.n_layers * attn_params()
+        total += dense_layers * mlp_params(cfg.dense_d_ff or cfg.d_ff)
+        act += dense_layers * mlp_params(cfg.dense_d_ff or cfg.d_ff)
+        expert = mlp_params(cfg.moe_d_ff)
+        total += moe_layers * cfg.n_experts * expert
+        act += moe_layers * cfg.top_k * expert
+        if cfg.n_shared_experts:
+            total += moe_layers * cfg.n_shared_experts * mlp_params(cfg.moe_d_ff)
+            act += moe_layers * cfg.n_shared_experts * mlp_params(cfg.moe_d_ff)
+    else:
+        per = attn_params() + mlp_params(cfg.d_ff)
+        layers = cfg.n_layers + cfg.enc_layers
+        if cfg.is_encdec:
+            per_dec = attn_params() * 2 + mlp_params(cfg.d_ff)
+            total += cfg.enc_layers * per + cfg.n_layers * per_dec
+            act = total
+        else:
+            total += layers * per
+            act += layers * per
+    return float(total), float(act)
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS for the whole step (global, all chips)."""
+    total, act = active_params(cfg)
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * act * tokens
+    if shape.kind == "prefill":
+        return 2.0 * act * tokens
+    # decode: one token per sequence
+    return 2.0 * act * shape.global_batch
+
+
+def load_records(dirs=("experiments/roofline", "experiments/perf",
+                       "experiments/perf2", "experiments/dryrun")
+                 ) -> List[Dict]:
+    recs = []
+    for d in dirs:
+        for f in glob.glob(str(Path(d) / "*.json")):
+            recs.append(json.load(open(f)))
+    return recs
+
+
+def best_record(recs, arch, shape, mesh="16x16") -> Optional[Dict]:
+    """Prefer unrolled (exact) over scanned records."""
+    cands = [r for r in recs
+             if r["arch"] == arch and r["shape"] == shape
+             and r["mesh"] == mesh and r["status"] == "OK"
+             and not r.get("mla_absorbed") and not r.get("ring")]
+    if not cands:
+        return None
+    # preference: fully-unrolled exact > affine-extrapolated > scanned
+    cands.sort(key=lambda r: (not r.get("unrolled", False),
+                              bool(r.get("extrapolated", False))))
+    return cands[0]
+
+
+def roofline_rows(mesh="16x16"):
+    recs = load_records()
+    rows = []
+    for arch, cfg in ARCHS.items():
+        for sname, shape in SHAPES_BY_NAME.items():
+            r = best_record(recs, arch, sname, mesh)
+            if r is None:
+                skips = [x for x in recs if x["arch"] == arch
+                         and x["shape"] == sname and x["status"] == "SKIP"]
+                if skips:
+                    rows.append({"arch": arch, "shape": sname,
+                                 "status": "SKIP",
+                                 "reason": skips[0].get("reason", "")[:60]})
+                continue
+            chips = r["chips"]
+            ct = r["compute_term_s"]
+            mt = r["memory_term_s"]
+            lt = r["collective_term_s"]
+            dom = max((ct, "compute"), (mt, "memory"), (lt, "collective"))[1]
+            mf = model_flops(cfg, SHAPES_BY_NAME[sname])
+            hlo_total = r["per_device_flops"] * chips
+            ratio = mf / hlo_total if hlo_total else 0.0
+            bound = max(ct, mt, lt)
+            frac = ct / bound if bound else 0.0  # roofline fraction: compute share
+            rows.append({
+                "arch": arch, "shape": sname, "status": "OK",
+                "unrolled": r.get("unrolled", False),
+                "extrapolated": bool(r.get("extrapolated", False)),
+                "compute_s": ct, "memory_s": mt, "collective_s": lt,
+                "dominant": dom, "model_flops": mf,
+                "hlo_flops_total": hlo_total, "useful_ratio": ratio,
+                "roofline_fraction": frac,
+            })
+    return rows
+
+
+def run(full=False, seed=0):
+    """CSV rows for benchmarks.run."""
+    out = []
+    for r in roofline_rows():
+        if r["status"] != "OK":
+            out.append((f"roofline/{r['arch']}/{r['shape']}", 0.0,
+                        f"SKIP:{r.get('reason','')[:40]}"))
+            continue
+        dom_s = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        out.append((
+            f"roofline/{r['arch']}/{r['shape']}",
+            dom_s * 1e6,
+            (f"dom={r['dominant']};C={r['compute_s']:.2e};"
+             f"M={r['memory_s']:.2e};L={r['collective_s']:.2e};"
+             f"useful={r['useful_ratio']:.2f};"
+             f"exact={'extrap' if r.get('extrapolated') else 'y' if r['unrolled'] else 'scan'}"),
+        ))
+    return out
+
+
+def main():
+    rows = roofline_rows()
+    hdr = (f"{'arch':26s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} "
+           f"{'collect_s':>10s} {'dominant':>10s} {'useful':>7s} {'exact':>6s}")
+    print(hdr)
+    for r in rows:
+        if r["status"] == "SKIP":
+            print(f"{r['arch']:26s} {r['shape']:12s} {'SKIP: '+r['reason']}")
+            continue
+        print(f"{r['arch']:26s} {r['shape']:12s} {r['compute_s']:10.2e} "
+              f"{r['memory_s']:10.2e} {r['collective_s']:10.2e} "
+              f"{r['dominant']:>10s} {r['useful_ratio']:7.2f} "
+              f"{'unroll' if r['unrolled'] else 'scan':>6s}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Render the §Roofline table into EXPERIMENTS.md (at the marker)."""
+from __future__ import annotations
+
+from pathlib import Path
+
+from .roofline import roofline_rows, model_flops
+from repro.configs import ARCHS, SHAPES_BY_NAME
+
+MARK = "<!-- ROOFLINE_TABLE -->"
+
+
+def render() -> str:
+    rows = roofline_rows()
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant "
+        "| MODEL_FLOPS | useful | source |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["status"] == "SKIP":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | SKIP | — | — | "
+                f"{r['reason'][:48]} |")
+            continue
+        src = ("exact" if (r["unrolled"] and not r.get("extrapolated"))
+               else "extrap" if r.get("extrapolated") else "scan*")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+            f"{r['dominant']} | {r['model_flops']:.2e} | "
+            f"{r['useful_ratio']:.2f} | {src} |")
+    lines.append("")
+    lines.append(
+        "(source: `exact` = fully-unrolled compile; `extrap` = affine "
+        "layer-count extrapolation, flops ±6%, bytes −35% bound, "
+        "collectives exact; `scan*` = scan-counted — flop/collective totals "
+        "understate by the layer trip count and are superseded wherever an "
+        "exact/extrap record exists.  One-sentence lever per dominant term: "
+        "compute-bound cells want the §Perf kernel/absorption changes; "
+        "memory-bound decode wants ring caches / cache quantization; "
+        "collective-bound prefill wants banded attention + "
+        "sequence-parallel few-head attention.)")
+    return "\n".join(lines)
+
+
+def main():
+    md = Path("EXPERIMENTS.md")
+    text = md.read_text()
+    assert MARK in text, "marker missing"
+    # replace marker (idempotent: keep marker line, replace following block
+    # between marker and the next '---'-or-'Reading' sentinel)
+    table = render()
+    out = text.replace(MARK, MARK + "\n\n" + table, 1) if MARK + "\n\n|" not in text else text
+    if MARK + "\n\n|" in text:
+        # already rendered: re-render by splitting at marker and next blank
+        head, rest = text.split(MARK, 1)
+        tail = rest.split("\n\nReading of the table", 1)[1]
+        out = head + MARK + "\n\n" + table + "\n\nReading of the table" + tail
+    md.write_text(out)
+    print(table)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Benchmark harness entry: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  table2  — AIT/ADT inter- vs intra-partition k-core maintenance (Table 2)
+  fig7    — incremental maintenance vs naive full recompute    (Figure 7)
+  table3/4/5 — dynamic partitioning PT/UT hash/random/DFEP     (Tables 3-5)
+  kcore_static — static decomposition time + supersteps        (§4.1 step 1)
+  roofline — three-term roofline per (arch × shape) from the dry-run JSONs
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--full] [--updates N]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale datasets (slow; CI default is scaled)")
+    ap.add_argument("--updates", type=int, default=20)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--only", default=None,
+                    help="comma list: table2,fig7,partitioning,static,roofline")
+    args = ap.parse_args()
+
+    from . import (bench_kcore_maintenance, bench_vs_naive_kcore,
+                   bench_partitioning, bench_static_kcore, roofline)
+
+    benches = {
+        "table2": lambda: bench_kcore_maintenance.run(
+            updates=args.updates, full=args.full, seed=args.seed),
+        "fig7": lambda: bench_vs_naive_kcore.run(
+            updates=max(5, args.updates // 4), full=args.full, seed=args.seed),
+        "partitioning": lambda: bench_partitioning.run(
+            full=args.full, seed=args.seed),
+        "static": lambda: bench_static_kcore.run(full=args.full,
+                                                 seed=args.seed),
+        "roofline": lambda: roofline.run(full=args.full, seed=args.seed),
+    }
+    only = set(args.only.split(",")) if args.only else set(benches)
+
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, fn in benches.items():
+        if name not in only:
+            continue
+        try:
+            for r in fn():
+                print(f"{r[0]},{r[1]:.1f},{r[2]}")
+            sys.stdout.flush()
+        except Exception:
+            failed += 1
+            print(f"{name},nan,ERROR", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Serve a small LM with batched requests: block prefill + batched decode.
+
+Demonstrates the serving path the decode_32k/long_500k dry-run cells lower:
+a batch of prompts is prefilled into the KV cache in one shot, then decoded
+token-by-token (greedy) — prefix-LM and MQA archs included.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py [--arch internlm2-1.8b]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models import build
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="internlm2-1.8b")
+ap.add_argument("--batch", type=int, default=4)
+ap.add_argument("--prompt-len", type=int, default=24)
+ap.add_argument("--gen", type=int, default=16)
+args = ap.parse_args()
+
+cfg = get_arch(args.arch).reduced()
+bundle = build(cfg)
+params = bundle.init(jax.random.PRNGKey(0))
+B, Sp, G = args.batch, args.prompt_len, args.gen
+max_seq = Sp + G
+
+rng = np.random.default_rng(0)
+prompts = jnp.asarray(rng.integers(0, cfg.vocab, (B, Sp)), jnp.int32)
+
+print(f"== serving {cfg.name} (reduced): batch={B} prompt={Sp} gen={G} ==")
+caches = bundle.cache_init(B, max_seq)
+
+# block prefill into the cache (attention archs; SSM archs decode from 0)
+decode = jax.jit(bundle.decode_fn)
+t0 = time.time()
+if cfg.mixer == "mamba":
+    # SSM path: stream the prompt token by token (conv+state carry)
+    logits = None
+    for t in range(Sp):
+        logits, caches = decode(params, prompts[:, t:t + 1], caches,
+                                jnp.int32(t))
+else:
+    logits, caches = bundle.decode_fn(params, prompts, caches, jnp.int32(0))
+    logits = logits[:, -1:]
+jax.block_until_ready(logits)
+print(f"prefill: {time.time() - t0:.2f}s")
+
+tokens = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+out = [tokens]
+t0 = time.time()
+for t in range(Sp, Sp + G - 1):
+    logits, caches = decode(params, tokens, caches, jnp.int32(t))
+    tokens = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    out.append(tokens)
+jax.block_until_ready(tokens)
+dt = time.time() - t0
+gen = jnp.concatenate(out, axis=1)
+print(f"decode:  {G - 1} steps x {B} seqs in {dt:.2f}s "
+      f"({(G - 1) * B / dt:.1f} tok/s on CPU)")
+print("generated token ids (first sequence):", np.asarray(gen[0]))

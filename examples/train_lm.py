@@ -1,0 +1,27 @@
+"""Train an assigned-architecture LM end to end (reduced scale on CPU).
+
+Uses the production launcher (mesh, sharding, AdamW, checkpointing, fault
+handling) — the same path that runs the full configs on pods.
+
+Run (CPU demo, ~1 min):
+  PYTHONPATH=src python examples/train_lm.py
+
+Pod-scale equivalent (for reference; requires TPU):
+  python -m repro.launch.train --arch gemma3-1b --mesh single \
+      --steps 300 --batch 256 --seq 4096 --ckpt-dir gs://... --resume auto
+"""
+import sys
+
+from repro.launch.train import main
+
+sys.exit(main([
+    "--arch", "gemma3-1b",
+    "--reduced",
+    "--steps", "30",
+    "--batch", "8",
+    "--seq", "128",
+    "--ckpt-dir", "/tmp/repro_train_lm",
+    "--ckpt-every", "10",
+    "--resume", "auto",
+    "--log-every", "5",
+]))

@@ -1,0 +1,5 @@
+"""Fault-tolerant checkpointing (atomic, keep-N, async, elastic remesh)."""
+from .manager import CheckpointManager
+from .elastic import remesh_restore, save_train_state
+
+__all__ = ["CheckpointManager", "remesh_restore", "save_train_state"]

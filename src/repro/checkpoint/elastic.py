@@ -1,0 +1,64 @@
+"""Elastic restart: resume the same checkpoint on a different mesh.
+
+Node-failure runbook (documented here, simulated on CPU in tests):
+
+  1. A collective times out / heartbeat misses -> the run controller marks
+     the slice degraded and tears the job down (distributed/fault.py).
+  2. The launcher restarts on the surviving topology (e.g. 15x16 instead of
+     16x16, or single-pod instead of 2 pods), passing --resume auto.
+  3. `remesh_restore` rebuilds the sharding rules against the NEW mesh and
+     restores the latest committed checkpoint onto it.  Because checkpoints
+     are topology-independent (full logical arrays, see manager.py), no
+     reshard preprocessing job is needed.
+  4. The data pipeline cursor (saved with the train state) makes batch
+     delivery exactly-once across the restart.
+
+The same path implements scale-UP (new nodes join): restore onto the larger
+mesh and continue.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from repro.distributed import sharding as SH
+from .manager import CheckpointManager
+
+
+def remesh_restore(
+    mgr: CheckpointManager,
+    step: Optional[int],
+    params_like: Any,
+    opt_like: Any,
+    new_mesh: Mesh,
+):
+    """Restore (params, opt_state) onto `new_mesh` with recomputed shardings.
+
+    `*_like` are pytrees of ShapeDtypeStruct or arrays describing the target
+    structure (e.g. from jax.eval_shape of init on the new mesh).
+    """
+    if step is None:
+        step = mgr.latest_step()
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint to restore in {mgr.dir}")
+    pshard = SH.param_shardings(params_like, new_mesh)
+    params = mgr_restore_tree(mgr, step, "params", params_like, pshard)
+    oshard = SH.opt_shardings(opt_like, params_like, new_mesh)
+    opt = mgr_restore_tree(mgr, step, "opt", opt_like, oshard)
+    return step, params, opt
+
+
+def mgr_restore_tree(mgr: CheckpointManager, step: int, name: str, like, shardings):
+    sub = CheckpointManager(str(mgr.dir / name), keep_n=mgr.keep_n)
+    return sub.restore(step, like, shardings)
+
+
+def save_train_state(mgr: CheckpointManager, step: int, params, opt_state,
+                     blocking: bool = True):
+    """Save params and optimizer state as sibling sub-checkpoints."""
+    CheckpointManager(str(mgr.dir / "params"), mgr.keep_n).save(
+        step, params, blocking=blocking)
+    CheckpointManager(str(mgr.dir / "opt"), mgr.keep_n).save(
+        step, opt_state, blocking=blocking)

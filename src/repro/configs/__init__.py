@@ -1,0 +1,41 @@
+"""Config registry: the 10 assigned architectures + the paper's graph tasks."""
+from .base import ArchConfig, ShapeConfig, SHAPES, SHAPES_BY_NAME, cell_applicable
+
+from .seamless_m4t_large_v2 import CONFIG as seamless_m4t_large_v2
+from .mamba2_370m import CONFIG as mamba2_370m
+from .deepseek_v3_671b import CONFIG as deepseek_v3_671b
+from .llama4_scout_17b_a16e import CONFIG as llama4_scout_17b_a16e
+from .gemma3_1b import CONFIG as gemma3_1b
+from .codeqwen1_5_7b import CONFIG as codeqwen1_5_7b
+from .granite_34b import CONFIG as granite_34b
+from .internlm2_1_8b import CONFIG as internlm2_1_8b
+from .zamba2_7b import CONFIG as zamba2_7b
+from .paligemma_3b import CONFIG as paligemma_3b
+
+ARCHS = {
+    c.name: c
+    for c in (
+        seamless_m4t_large_v2,
+        mamba2_370m,
+        deepseek_v3_671b,
+        llama4_scout_17b_a16e,
+        gemma3_1b,
+        codeqwen1_5_7b,
+        granite_34b,
+        internlm2_1_8b,
+        zamba2_7b,
+        paligemma_3b,
+    )
+}
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+__all__ = [
+    "ArchConfig", "ShapeConfig", "SHAPES", "SHAPES_BY_NAME",
+    "cell_applicable", "ARCHS", "get_arch",
+]

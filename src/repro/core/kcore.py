@@ -1,0 +1,99 @@
+"""Distributed k-core decomposition — BLADYG application #1 (paper §4.1).
+
+Algorithm: the locality-based distributed coreness computation of
+[Montresor, De Pellegrini, Miorandi, TPDS'13], expressed as BLADYG
+supersteps.  Each node keeps a coreness *estimate*; one superstep applies
+
+    est' = min(est, H(est))        H(est)(u) = h-index of {est(v) : v ~ u}
+
+Correctness (why the fixpoint is exactly the coreness):
+  * est starts at deg >= core and H is monotone, H(core) = core, so est >= core
+    is invariant under est' = min(est, H(est)).
+  * the sequence is pointwise non-increasing and integral -> converges to
+    some x with H(x) >= x.
+  * for such x, every u with x(u) = k has >= k neighbors with x >= k, so each
+    level set S_k = {v : x(v) >= k} induces a subgraph of min degree >= k,
+    i.e. S_k is inside the k-core and x <= core pointwise.  Hence x = core.
+
+The same argument is *local*: clamping any set of nodes at their true
+coreness and iterating only on the rest still converges to the true
+coreness of the rest — that is what makes the incremental maintenance in
+`kcore_dynamic.py` exact.
+
+Communication pattern (BLADYG modes): the gather of neighbor estimates is
+the W2W halo exchange; the convergence test is a W2M reduction; the loop
+continuation is the master's M2W broadcast.  Under `jit` with sharded
+arrays, XLA emits exactly those collectives (all-gather for the halo,
+all-reduce for the flag) — see EXPERIMENTS.md §Dry-run.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .graph import GraphBlocks
+
+
+def hindex_rows(vals: jax.Array) -> jax.Array:
+    """Row-wise h-index of a padded value matrix (PAD/-1 entries ignored).
+
+    h = max{k : at least k entries >= k}.  Computed by descending sort +
+    position compare — the pure-jnp oracle; the Pallas dense-tile kernel in
+    `repro.kernels.kcore_hindex` computes the same thing MXU-style.
+    """
+    Cd = vals.shape[-1]
+    s = -jnp.sort(-vals, axis=-1)  # descending
+    ranks = jnp.arange(1, Cd + 1, dtype=vals.dtype)
+    return jnp.sum(s >= ranks, axis=-1).astype(vals.dtype)
+
+
+def neighbor_estimates(g: GraphBlocks, est: jax.Array) -> jax.Array:
+    """Gather est over the ELL adjacency; PAD slots -> -1 (ignored by hindex)."""
+    vals = est[jnp.clip(g.nbr, 0, None)]
+    return jnp.where(g.nbr >= 0, vals, -1)
+
+
+def coreness_step(g: GraphBlocks, est: jax.Array, active: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """One BLADYG superstep on an `active` node mask; returns (est', changed)."""
+    h = hindex_rows(neighbor_estimates(g, est))
+    new = jnp.where(active & g.node_mask, jnp.minimum(est, h), est)
+    return new, jnp.any(new != est)
+
+
+@partial(jax.jit, static_argnames=("max_steps",))
+def coreness(g: GraphBlocks, max_steps: int = 10_000) -> jax.Array:
+    """Coreness of every node (0 on padding rows)."""
+    est0 = jnp.where(g.node_mask, g.deg, 0).astype(jnp.int32)
+    active = g.node_mask
+
+    def cond(c):
+        est, changed, it = c
+        return changed & (it < max_steps)
+
+    def body(c):
+        est, _, it = c
+        est2, changed = coreness_step(g, est, active)
+        return est2, changed, it + 1
+
+    est, _, _ = jax.lax.while_loop(cond, body, (est0, jnp.bool_(True), 0))
+    return est
+
+
+def coreness_with_stats(g: GraphBlocks, max_steps: int = 10_000):
+    """Python-loop variant that reports superstep count (for benchmarks)."""
+    est = jnp.where(g.node_mask, g.deg, 0).astype(jnp.int32)
+    steps = 0
+    while steps < max_steps:
+        est2, changed = jax.jit(coreness_step)(g, est, g.node_mask)
+        steps += 1
+        if not bool(changed):
+            break
+        est = est2
+    return est, steps
+
+
+def max_coreness(g: GraphBlocks) -> int:
+    return int(jax.device_get(jnp.max(coreness(g))))

@@ -1,0 +1,161 @@
+"""Incremental k-core maintenance — the heart of BLADYG (paper §4.1).
+
+On an edge update the coordinator does NOT recompute coreness from scratch.
+Per Theorem 1 [Li, Yu, Mao, TKDE'14] only nodes *k-reachable* from the
+lower-coreness endpoint can change, where k = min(core(u), core(v)):
+a node w is k-reachable from r if there is a path r ~> w whose nodes all
+have coreness exactly k.
+
+BLADYG execution plan (paper fig. 5 generalized):
+  1. M2W: master ships the update (u, v) to the blocks owning u and v.
+  2. workerCompute: frontier search for the candidate set, propagating
+     W2W whenever the frontier crosses a block boundary.
+  3. W2M: candidate summary back to the master.
+  4. masterCompute: restricted recomputation on the candidate set only
+     (clamped min-H supersteps; see kcore.py for the exactness argument),
+     candidates' new coreness is written back.
+
+Bounds used (both from Li-Yu-Mao): insertion can only *raise* a candidate's
+coreness, by at most 1; deletion can only *lower* it, by at most 1.  So the
+restricted iteration starts from `core + 1` (insert) / `core` (delete) on
+candidates — a valid pointwise upper bound — and clamps everyone else.
+
+We take the union of the k-reachable sets from both endpoints (a superset of
+the theorem's candidate set in the unequal-coreness cases; supersets only
+cost work, never correctness).  The search runs in the *pre-update* graph
+for insertions (the theorem's "original graph G") and in the pre-update
+graph for deletions as well, then the edge is applied and the restricted
+iteration runs on the post-update graph.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .graph import GraphBlocks, insert_edge, delete_edge
+from .kcore import hindex_rows, neighbor_estimates
+
+
+class MaintenanceStats(NamedTuple):
+    candidates: jax.Array      # int32 — |candidate set|
+    bfs_steps: jax.Array       # int32 — frontier supersteps (W2W rounds)
+    recompute_steps: jax.Array # int32 — clamped min-H supersteps
+    blocks_touched: jax.Array  # int32 — #blocks containing candidates
+    inter_partition: jax.Array # bool  — update crossed a block boundary
+
+
+def k_reachable(
+    g: GraphBlocks, core: jax.Array, roots: jax.Array, k: jax.Array,
+    max_steps: int = 10_000,
+) -> Tuple[jax.Array, jax.Array]:
+    """Mask of nodes k-reachable from `roots` (incl. roots with core==k).
+
+    Frontier expansion over the ELL adjacency: one hop per superstep; each
+    hop is a scatter-or over neighbor slots (the dense-tile Pallas kernel
+    `repro.kernels.frontier` implements the same hop as A @ f on the MXU).
+    Returns (visited mask, number of supersteps).
+    """
+    eligible = (core == k) & g.node_mask
+    visited0 = roots & eligible
+    N = g.N
+
+    def cond(c):
+        visited, frontier, it = c
+        return jnp.any(frontier) & (it < max_steps)
+
+    def body(c):
+        visited, frontier, it = c
+        # scatter-or: every neighbor slot of a frontier node gets hit
+        idx = jnp.where(g.nbr >= 0, g.nbr, N).reshape(-1)
+        src = jnp.repeat(frontier, g.Cd)
+        hit = jnp.zeros(N + 1, bool).at[idx].max(src)[:N]
+        nxt = hit & eligible & ~visited
+        return visited | nxt, nxt, it + 1
+
+    visited, _, steps = jax.lax.while_loop(
+        cond, body, (visited0, visited0, jnp.int32(0))
+    )
+    return visited, steps
+
+
+def _restricted_recompute(
+    g: GraphBlocks, est0: jax.Array, cand: jax.Array, max_steps: int = 10_000
+) -> Tuple[jax.Array, jax.Array]:
+    """Clamped min-H iteration: only `cand` nodes move; returns (core', steps)."""
+
+    def cond(c):
+        est, changed, it = c
+        return changed & (it < max_steps)
+
+    def body(c):
+        est, _, it = c
+        h = hindex_rows(neighbor_estimates(g, est))
+        new = jnp.where(cand & g.node_mask, jnp.minimum(est, h), est)
+        return new, jnp.any(new != est), it + 1
+
+    est, _, steps = jax.lax.while_loop(cond, body, (est0, jnp.bool_(True), jnp.int32(0)))
+    return est, steps
+
+
+def _stats(g: GraphBlocks, cand, bfs_steps, rec_steps, u, v) -> MaintenanceStats:
+    blocks = jnp.zeros(g.P, bool).at[jnp.arange(g.N) // g.Cn].max(cand)
+    return MaintenanceStats(
+        candidates=jnp.sum(cand).astype(jnp.int32),
+        bfs_steps=bfs_steps.astype(jnp.int32),
+        recompute_steps=rec_steps.astype(jnp.int32),
+        blocks_touched=jnp.sum(blocks).astype(jnp.int32),
+        inter_partition=(u // g.Cn) != (v // g.Cn),
+    )
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def insert_edge_maintain(
+    g: GraphBlocks, core: jax.Array, u: jax.Array, v: jax.Array
+) -> Tuple[GraphBlocks, jax.Array, MaintenanceStats]:
+    """Insert (u, v) and maintain coreness.  u, v are global padded ids."""
+    k = jnp.minimum(core[u], core[v])
+    roots = jnp.zeros(g.N, bool).at[u].set(True).at[v].set(True)
+    cand, bfs_steps = k_reachable(g, core, roots, k)
+    # the endpoints themselves are always candidates (their degree changed)
+    cand = cand | roots
+
+    g2 = insert_edge(g, u, v)
+    ub = jnp.where(cand, jnp.minimum(core + 1, g2.deg), core)
+    new_core, rec_steps = _restricted_recompute(g2, ub, cand)
+    return g2, new_core, _stats(g2, cand, bfs_steps, rec_steps, u, v)
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def delete_edge_maintain(
+    g: GraphBlocks, core: jax.Array, u: jax.Array, v: jax.Array
+) -> Tuple[GraphBlocks, jax.Array, MaintenanceStats]:
+    """Delete (u, v) and maintain coreness."""
+    k = jnp.minimum(core[u], core[v])
+    roots = jnp.zeros(g.N, bool).at[u].set(True).at[v].set(True)
+    cand, bfs_steps = k_reachable(g, core, roots, k)
+    cand = cand | roots
+
+    g2 = delete_edge(g, u, v)
+    # deletion can only lower candidates, by at most 1; old core is a UB,
+    # but degree may now be below it.
+    ub = jnp.where(cand, jnp.minimum(core, g2.deg), core)
+    new_core, rec_steps = _restricted_recompute(g2, ub, cand)
+    return g2, new_core, _stats(g2, cand, bfs_steps, rec_steps, u, v)
+
+
+def maintain_batch_host(g, core, updates):
+    """Host loop applying a sequence of (u, v, op) updates (op: +1 ins, -1 del).
+
+    Returns (g, core, list_of_stats).  This mirrors the paper's experiment:
+    per-edge maintenance latency, not batched amortization.
+    """
+    stats = []
+    for u, v, op in updates:
+        fn = insert_edge_maintain if op > 0 else delete_edge_maintain
+        g, core, s = fn(g, jnp.asarray(core), jnp.int32(u), jnp.int32(v))
+        stats.append(jax.device_get(s))
+    return g, core, stats

@@ -1,0 +1,113 @@
+"""Dynamic edge-partitioning maintenance — BLADYG application #2 (paper §4.2).
+
+Two update strategies, exactly the paper's §5.2.2 experiment:
+
+  * IncrementalPart — apply the partitioning technique only to the
+    incremental changes (hash/random: stateless per-edge assignment;
+    DFEP: the UB-UPDATE neighbor-funding rule).
+  * NaivePart — destroy the old partitioning and restart from scratch.
+
+Deletions trigger the repartition-threshold protocol of §4.2: every worker
+computes a local balance summary (workerCompute, W2M), the coordinator
+decides whether a full repartition is needed (masterCompute).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Optional, Tuple
+
+import numpy as np
+
+from . import partition as P_
+
+
+@dataclass
+class PartitionState:
+    edges: np.ndarray   # (m, 2) original ids
+    owner: np.ndarray   # (m,) block of each edge
+    n: int
+    P: int
+    method: str         # 'hash' | 'random' | 'dfep' | 'vertex_cut'
+    seed: int = 0
+
+
+_STATIC = {
+    "hash": lambda e, n, P, seed: P_.edge_hash_partition(e, P, seed),
+    "random": lambda e, n, P, seed: P_.edge_random_partition(e, P, seed),
+    "dfep": lambda e, n, P, seed: P_.dfep(e, n, P, seed),
+    "vertex_cut": lambda e, n, P, seed: P_.vertex_cut_greedy(e, n, P),
+}
+
+
+def initial_partition(
+    edges: np.ndarray, n: int, P: int, method: str, seed: int = 0
+) -> Tuple[PartitionState, float]:
+    """Run the static partitioner; returns (state, partitioning-time seconds)."""
+    t0 = time.perf_counter()
+    owner = _STATIC[method](np.asarray(edges), n, P, seed)
+    pt = time.perf_counter() - t0
+    return PartitionState(np.asarray(edges), owner, n, P, method, seed), pt
+
+
+def incremental_part(
+    st: PartitionState, new_edges: np.ndarray
+) -> Tuple[PartitionState, float]:
+    """IncrementalPart: assign only the new edges, keep everything else."""
+    new_edges = np.asarray(new_edges)
+    t0 = time.perf_counter()
+    if st.method in ("hash", "random"):
+        new_owner = _STATIC[st.method](new_edges, st.n, st.P, st.seed)
+    elif st.method == "dfep":
+        new_owner = P_.ub_update(st.edges, st.owner, new_edges, st.n, st.P)
+    elif st.method == "vertex_cut":
+        # greedy continues from current per-node partition sets
+        new_owner = P_.ub_update(st.edges, st.owner, new_edges, st.n, st.P)
+    else:
+        raise ValueError(st.method)
+    ut = time.perf_counter() - t0
+    st2 = PartitionState(
+        np.concatenate([st.edges, new_edges]),
+        np.concatenate([st.owner, new_owner]),
+        st.n, st.P, st.method, st.seed,
+    )
+    return st2, ut
+
+
+def naive_part(
+    st: PartitionState, new_edges: np.ndarray
+) -> Tuple[PartitionState, float]:
+    """NaivePart: throw the assignment away and repartition everything."""
+    all_edges = np.concatenate([st.edges, np.asarray(new_edges)])
+    t0 = time.perf_counter()
+    owner = _STATIC[st.method](all_edges, st.n, st.P, st.seed)
+    ut = time.perf_counter() - t0
+    return PartitionState(all_edges, owner, st.n, st.P, st.method, st.seed), ut
+
+
+def delete_edges(
+    st: PartitionState,
+    idx: np.ndarray,
+    threshold: float = 1.5,
+) -> Tuple[PartitionState, bool, float]:
+    """Deletion protocol (§4.2): drop edges, workers report balance, the
+    coordinator repartitions iff imbalance exceeds `threshold`.
+
+    Returns (state', repartitioned?, update-time seconds).
+    """
+    t0 = time.perf_counter()
+    keep = np.ones(len(st.edges), bool)
+    keep[np.asarray(idx)] = False
+    edges = st.edges[keep]
+    owner = st.owner[keep]
+    # workerCompute: per-block sizes (W2M); masterCompute: threshold test
+    bal = P_.edge_balance(owner, st.P)
+    repart = bal > threshold
+    if repart:
+        owner = _STATIC[st.method](edges, st.n, st.P, st.seed)
+    ut = time.perf_counter() - t0
+    return (
+        PartitionState(edges, owner, st.n, st.P, st.method, st.seed),
+        bool(repart),
+        ut,
+    )

@@ -1,0 +1,3 @@
+"""Data pipelines."""
+from .pipeline import SyntheticTokens, ByteCorpus
+__all__ = ["SyntheticTokens", "ByteCorpus"]

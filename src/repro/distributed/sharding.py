@@ -1,0 +1,210 @@
+"""Sharding rules: parameter / optimizer / activation / cache layouts.
+
+Mesh axes: ``("data", "model")`` single-pod, ``("pod", "data", "model")``
+multi-pod.  Batch (and sequence, for serve shapes) shards over the
+data-parallel axes; weights shard over ``model`` (TP/EP); optimizer state is
+additionally ZeRO-sharded over ``data``.
+
+Rules are *name-anchored on the trailing dimensions* of each leaf, so the
+same rule covers a plain layer and its scan-stacked (L, ...) or
+(periods, p, ...) variants.  Every rule degrades to replication when the
+dimension is not divisible by the axis size — a config can therefore never
+fail to shard, it only loses parallelism (and the dry-run roofline makes
+that visible).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Params = Any
+
+
+# (suffix, trailing-ndim, trailing spec) — first match wins.
+# 'M' = model axis, None = replicated.
+_RULES: Tuple[Tuple[str, int, Tuple], ...] = (
+    ("embed/w", 2, ("M", None)),
+    ("lm_head/w", 2, (None, "M")),
+    ("prefix_proj/w", 2, (None, "M")),
+    ("router/w", 2, (None, None)),
+    ("w_gate/w", 3, ("M", None, None)),     # experts on EP axis
+    ("w_up/w", 3, ("M", None, None)),
+    ("w_down/w", 3, ("M", None, None)),
+    ("gate/w", 2, (None, "M")),
+    ("up/w", 2, (None, "M")),
+    ("down/w", 2, ("M", None)),
+    ("wq_a/w", 2, (None, "M")),
+    ("wq_b/w", 2, (None, "M")),
+    ("wkv_a/w", 2, (None, None)),           # small latent proj, replicated
+    ("wkv_b/w", 2, (None, "M")),
+    ("wq/w", 2, (None, "M")),
+    ("wk/w", 2, (None, "M")),
+    ("wv/w", 2, (None, "M")),
+    ("wo/w", 2, ("M", None)),
+    ("in_proj/w", 2, (None, "M")),
+    ("out_proj/w", 2, ("M", None)),
+    ("conv_w", 2, (None, "M")),
+    ("conv_b", 1, ("M",)),
+)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+    return "/".join(parts)
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape.get(name, 1)
+
+
+def _resolve(spec: Sequence, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Map 'M' -> 'model' with divisibility check; pad leading dims."""
+    tp = _axis_size(mesh, "model")
+    trailing = []
+    for dim, s in zip(shape[len(shape) - len(spec):], spec):
+        if s == "M" and tp > 1 and dim % tp == 0:
+            trailing.append("model")
+        else:
+            trailing.append(None)
+    lead = [None] * (len(shape) - len(spec))
+    return P(*(lead + trailing))
+
+
+def param_spec(path: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    for suffix, nd, spec in _RULES:
+        if path.endswith(suffix) and len(shape) >= nd:
+            return _resolve(spec, shape, mesh)
+    return P()  # norms, scalars, biases: replicated
+
+
+def param_shardings(params_shapes: Params, mesh: Mesh) -> Params:
+    """Pytree of NamedSharding for a pytree of ShapeDtypeStruct/arrays."""
+    def f(path, leaf):
+        return NamedSharding(mesh, param_spec(_path_str(path), leaf.shape, mesh))
+    return jax.tree_util.tree_map_with_path(f, params_shapes)
+
+
+def zero_spec(pspec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """ZeRO: additionally shard the first replicated dim over 'data'."""
+    dp = _axis_size(mesh, "data")
+    if dp <= 1:
+        return pspec
+    spec = list(pspec) + [None] * (len(shape) - len(pspec))
+    for i, (s, dim) in enumerate(zip(spec, shape)):
+        if s is None and dim % dp == 0 and dim >= dp:
+            spec[i] = "data"
+            return P(*spec)
+    return P(*spec)
+
+
+def opt_shardings(opt_shapes, params_shapes, mesh: Mesh):
+    """AdamWState shardings: master/m/v get param spec + ZeRO over data."""
+    pshard = {}
+
+    def record(path, leaf):
+        ps = param_spec(_path_str(path), leaf.shape, mesh)
+        return NamedSharding(mesh, zero_spec(ps, leaf.shape, mesh))
+
+    def for_tree(tree):
+        return jax.tree_util.tree_map_with_path(record, tree)
+
+    import repro.optim.adamw as adamw
+    return adamw.AdamWState(
+        step=NamedSharding(mesh, P()),
+        master=for_tree(opt_shapes.master),
+        m=for_tree(opt_shapes.m),
+        v=for_tree(opt_shapes.v),
+    )
+
+
+# ---------------------------------------------------------------------------
+# activations / batch / caches
+# ---------------------------------------------------------------------------
+
+def dp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def dp_size(mesh: Mesh) -> int:
+    return int(np.prod([_axis_size(mesh, a) for a in dp_axes(mesh)]))
+
+
+def batch_spec(mesh: Mesh, batch: int, extra_dims: int = 1) -> P:
+    """Shard leading batch dim over the dp axes if divisible."""
+    if batch % dp_size(mesh) == 0:
+        return P(dp_axes(mesh), *([None] * extra_dims))
+    return P(*([None] * (1 + extra_dims)))
+
+
+def cache_sharding(mesh: Mesh, shape: Tuple[int, ...], kind: str) -> NamedSharding:
+    """KV / state cache layout.
+
+    kind 'kv':      (L, B, S, Hkv, hd)  — B over dp; else S over model(+dp)
+    kind 'mla':     (L, B, S, r)        — B over dp; else S over model(+dp)
+    kind 'ssm':     (L, B, H, P, N)     — B over dp; H over model
+    kind 'conv':    (L, B, W, C)        — B over dp; C over model
+    Leading extra dims (period stacking) are replicated.
+    """
+    dp = dp_size(mesh)
+    tp = _axis_size(mesh, "model")
+    nd = len(shape)
+    spec = [None] * nd
+
+    def core_dims(n):  # index of the trailing n dims
+        return list(range(nd - n, nd))
+
+    if kind in ("kv", "mla"):
+        n = 5 if kind == "kv" else 4
+        li, bi, si = core_dims(n)[0:3]
+        if shape[bi] % dp == 0 and shape[bi] >= dp:
+            spec[bi] = dp_axes(mesh)
+            if kind == "kv" and shape[nd - 2] % tp == 0 and shape[nd - 2] >= tp:
+                spec[nd - 2] = "model"  # kv heads over model when divisible
+        else:
+            axes = dp_axes(mesh) + ("model",)
+            total = dp * tp
+            if shape[si] % total == 0:
+                spec[si] = axes
+            elif shape[si] % tp == 0:
+                spec[si] = "model"
+    elif kind == "ssm":
+        li, bi, hi, pi, ni = core_dims(5)
+        if shape[bi] % dp == 0 and shape[bi] >= dp:
+            spec[bi] = dp_axes(mesh)
+        if shape[hi] % tp == 0 and shape[hi] >= tp:
+            spec[hi] = "model"
+    elif kind == "conv":
+        li, bi, wi, ci = core_dims(4)
+        if shape[bi] % dp == 0 and shape[bi] >= dp:
+            spec[bi] = dp_axes(mesh)
+        if shape[ci] % tp == 0:
+            spec[ci] = "model"
+    return NamedSharding(mesh, P(*spec))
+
+
+def cache_shardings(cache_shapes, mesh: Mesh):
+    """Walk a cache pytree, classify each leaf by its key name."""
+    def f(path, leaf):
+        name = _path_str(path)
+        last = name.rsplit("/", 1)[-1]
+        if last in ("k", "v"):
+            return cache_sharding(mesh, leaf.shape, "kv")
+        if last in ("ckv", "krope"):
+            return cache_sharding(mesh, leaf.shape, "mla")
+        if last == "state":
+            return cache_sharding(mesh, leaf.shape, "ssm")
+        if last == "conv":
+            return cache_sharding(mesh, leaf.shape, "conv")
+        return NamedSharding(mesh, P())
+    return jax.tree_util.tree_map_with_path(f, cache_shapes)

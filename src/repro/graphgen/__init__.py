@@ -1,0 +1,15 @@
+"""Synthetic graph generators (the paper's data sources, offline).
+
+The paper uses (a) synthetic graphs from the Nearest-Neighbor model
+[Sala et al., WWW'10] (DS1/DS2) and (b) SNAP real graphs.  SNAP data is not
+redistributable offline, so `snap_like` generates size/degree/clustering
+matched stand-ins; the substitution is recorded in EXPERIMENTS.md.
+"""
+from .nn_model import nearest_neighbor_graph
+from .simple import erdos_renyi, barabasi_albert, grid_like
+from .snap_like import snap_like, DATASETS
+
+__all__ = [
+    "nearest_neighbor_graph", "erdos_renyi", "barabasi_albert",
+    "grid_like", "snap_like", "DATASETS",
+]

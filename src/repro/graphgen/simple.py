@@ -1,0 +1,71 @@
+"""Simple reference generators: ER, BA, and grid-like (roadNet-shaped)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def erdos_renyi(n: int, m: int, seed: int = 0) -> np.ndarray:
+    """G(n, m): m distinct uniform edges (no loops)."""
+    rng = np.random.default_rng(seed)
+    seen = set()
+    out = []
+    while len(out) < m:
+        a, b = rng.integers(0, n, size=2)
+        if a == b:
+            continue
+        key = (min(a, b), max(a, b))
+        if key in seen:
+            continue
+        seen.add(key)
+        out.append(key)
+    return np.asarray(out, dtype=np.int64)
+
+
+def barabasi_albert(n: int, k: int, seed: int = 0) -> np.ndarray:
+    """Preferential attachment, k edges per new node."""
+    rng = np.random.default_rng(seed)
+    targets = list(range(k))
+    repeated: list[int] = []
+    edges = []
+    for v in range(k, n):
+        chosen = set()
+        for t in targets:
+            if t not in chosen:
+                chosen.add(t)
+                edges.append((v, t))
+        repeated.extend(chosen)
+        repeated.extend([v] * len(chosen))
+        # next targets: preferential sample
+        targets = [repeated[rng.integers(len(repeated))] for _ in range(k)]
+    e = np.asarray(edges, dtype=np.int64)
+    lo = np.minimum(e[:, 0], e[:, 1])
+    hi = np.maximum(e[:, 0], e[:, 1])
+    return np.unique(np.stack([lo, hi], 1), axis=0)
+
+
+def grid_like(n: int, seed: int = 0, diag_frac: float = 0.05) -> np.ndarray:
+    """Planar-ish lattice with sparse diagonals — roadNet shape: huge
+    diameter, tiny clustering, max degree ~4."""
+    side = int(np.ceil(np.sqrt(n)))
+    rng = np.random.default_rng(seed)
+    xs, ys = np.meshgrid(np.arange(side), np.arange(side), indexing="ij")
+    idx = (xs * side + ys).reshape(-1)
+    keep = idx < n
+    edges = []
+    right = (xs * side + (ys + 1)).reshape(-1)
+    ok = (ys + 1 < side).reshape(-1) & keep & (right < n)
+    edges.append(np.stack([idx[ok], right[ok]], 1))
+    down = ((xs + 1) * side + ys).reshape(-1)
+    ok = (xs + 1 < side).reshape(-1) & keep & (down < n)
+    edges.append(np.stack([idx[ok], down[ok]], 1))
+    e = np.concatenate(edges)
+    # sparse random diagonals
+    extra = int(diag_frac * len(e))
+    if extra:
+        a = rng.integers(0, n, size=extra)
+        b = np.clip(a + side + 1, 0, n - 1)
+        ok = a != b
+        e = np.concatenate([e, np.stack([a[ok], b[ok]], 1)])
+    lo = np.minimum(e[:, 0], e[:, 1])
+    hi = np.maximum(e[:, 0], e[:, 1])
+    return np.unique(np.stack([lo, hi], 1), axis=0)

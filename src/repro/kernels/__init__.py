@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the BLADYG hot loops (dense-tile GraphBLAS style).
+
+Validated in interpret mode against the pure-jnp oracles in `ref.py`;
+TPU is the compile target (explicit BlockSpec VMEM tiling, MXU-aligned).
+"""
+from . import ops, ref
+from .kcore_hindex import hindex_counts
+from .frontier import frontier_step
+
+__all__ = ["ops", "ref", "hindex_counts", "frontier_step"]

@@ -1,0 +1,94 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handle padding to hardware-aligned shapes, dtype conversion, platform
+dispatch (interpret=True off-TPU), and expose a dense-path coreness solver
+used by benchmarks and the optional kernel execution path in `core.kcore`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from .kcore_hindex import hindex_counts as _hindex_pallas
+from .frontier import frontier_step as _frontier_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.devices()[0].platform == "tpu"
+
+
+def _pad_to(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def hindex(
+    adj: jax.Array,
+    est: jax.Array,
+    K: Optional[int] = None,
+    T: int = 256,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """h-index per node via the dense-tile kernel (pads N, K as needed)."""
+    N = adj.shape[0]
+    if K is None:
+        K = int(jax.device_get(jnp.max(est))) + 1
+    Kp = max(128, _pad_to(K, 128))
+    Tp = min(T, max(128, _pad_to(N, 128)))
+    Np = _pad_to(N, Tp)
+    if interpret is None:
+        interpret = not _on_tpu()
+    adj_p = jnp.zeros((Np, Np), jnp.bfloat16).at[:N, :N].set(adj.astype(jnp.bfloat16))
+    est_p = jnp.full((Np,), -1, jnp.int32).at[:N].set(est.astype(jnp.int32))
+    h = _hindex_pallas(adj_p, est_p, K=Kp, T=Tp, interpret=interpret)
+    return h[:N]
+
+
+def frontier_step(
+    adj: jax.Array,
+    f: jax.Array,
+    eligible: jax.Array,
+    visited: jax.Array,
+    T: int = 256,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Masked BFS hop; pads N to tile and R to 128 lanes."""
+    N, R = f.shape
+    Rp = max(128, _pad_to(R, 128))
+    Tp = min(T, max(128, _pad_to(N, 128)))
+    Np = _pad_to(N, Tp)
+    if interpret is None:
+        interpret = not _on_tpu()
+    adj_p = jnp.zeros((Np, Np), jnp.bfloat16).at[:N, :N].set(adj.astype(jnp.bfloat16))
+    f_p = jnp.zeros((Np, Rp), jnp.bfloat16).at[:N, :R].set(f.astype(jnp.bfloat16))
+    e_p = jnp.zeros((Np,), jnp.int8).at[:N].set(eligible.astype(jnp.int8))
+    v_p = jnp.zeros((Np, Rp), jnp.int8).at[:N, :R].set(visited.astype(jnp.int8))
+    nxt = _frontier_pallas(adj_p, f_p, e_p, v_p, T=Tp, interpret=interpret)
+    return nxt[:N, :R]
+
+
+def coreness_dense(
+    adj: jax.Array,
+    T: int = 256,
+    max_steps: int = 10_000,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Full coreness via the kernelized min-H iteration (dense path).
+
+    Matches `ref.coreness_dense_ref` and `core.kcore.coreness` exactly.
+    """
+    N = adj.shape[0]
+    deg = jnp.sum(adj > 0, axis=1).astype(jnp.int32)
+    K = int(jax.device_get(jnp.max(deg))) + 1 if N else 1
+    est = deg
+    for _ in range(max_steps):
+        h = hindex(adj, est, K=K, T=T, interpret=interpret)
+        new = jnp.minimum(est, h)
+        if bool(jax.device_get(jnp.all(new == est))):
+            break
+        est = new
+    return est

@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the semantic ground truth: kernels must `assert_allclose` against
+them for every shape/dtype in the sweep tests.  They are also the fallback
+execution path on platforms without Pallas support.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def hindex_counts_ref(adj: jax.Array, est: jax.Array, K: int) -> jax.Array:
+    """h-index of every node from a dense adjacency.
+
+    adj: (N, N) 0/1 matrix (any float/int dtype), est: (N,) int32.
+    cnt[u, k] = #neighbors v of u with est[v] >= k+1, k = 0..K-1 (via matmul);
+    h[u] = max{k in 1..K : cnt[u, k-1] >= k}.  Requires K >= max(est)+1 for
+    exactness (h <= max est always, so thresholds above K never fire).
+    """
+    ks = jnp.arange(1, K + 1, dtype=jnp.int32)  # thresholds
+    B = (est[:, None] >= ks[None, :]).astype(jnp.float32)  # (N, K)
+    cnt = adj.astype(jnp.float32) @ B  # (N, K)
+    ok = cnt >= ks.astype(jnp.float32)[None, :]
+    return jnp.sum(ok, axis=1).astype(jnp.int32)  # prefix-monotone -> sum = h
+
+
+def frontier_step_ref(
+    adj: jax.Array, f: jax.Array, eligible: jax.Array, visited: jax.Array
+) -> jax.Array:
+    """One BFS hop for R stacked frontiers.
+
+    adj: (N, N) 0/1; f: (N, R) 0/1; eligible: (N,) bool; visited: (N, R) bool.
+    next[u, r] = (∃v~u: f[v, r]) ∧ eligible[u] ∧ ¬visited[u, r].
+    """
+    hit = adj.astype(jnp.float32) @ f.astype(jnp.float32) > 0
+    return hit & eligible[:, None] & ~visited
+
+
+def coreness_dense_ref(adj: jax.Array, max_steps: int = 10_000) -> jax.Array:
+    """Full min-H coreness iteration on a dense adjacency (oracle)."""
+    deg = jnp.sum(adj > 0, axis=1).astype(jnp.int32)
+    K = int(jax.device_get(jnp.max(deg))) + 1 if deg.size else 1
+
+    def cond(c):
+        est, changed, it = c
+        return changed & (it < max_steps)
+
+    def body(c):
+        est, _, it = c
+        h = hindex_counts_ref(adj, est, K)
+        new = jnp.minimum(est, h)
+        return new, jnp.any(new != est), it + 1
+
+    est, _, _ = jax.lax.while_loop(cond, body, (deg, jnp.bool_(True), 0))
+    return est
+
+
+def ell_to_dense(nbr: jax.Array, N: int) -> jax.Array:
+    """ELL adjacency (rows of padded neighbor ids) -> dense 0/1 (N, N)."""
+    rows = jnp.repeat(jnp.arange(N), nbr.shape[1])
+    cols = nbr.reshape(-1)
+    ok = cols >= 0
+    dense = jnp.zeros((N, N), jnp.float32)
+    return dense.at[rows, jnp.clip(cols, 0)].max(ok.astype(jnp.float32))

@@ -1,0 +1,234 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+cell on the production mesh, record memory/cost analysis and the collective
+schedule for the roofline (EXPERIMENTS.md §Dry-run / §Roofline).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch internlm2-1.8b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+      --out experiments/dryrun
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro import optim
+from repro.configs import ARCHS, SHAPES, SHAPES_BY_NAME, cell_applicable
+from repro.launch import specs as SP
+from repro.launch.mesh import make_production_mesh
+
+# TPU v5e hardware model (per chip)
+PEAK_FLOPS = 197e12      # bf16
+HBM_BW = 819e9           # bytes/s
+LINK_BW = 50e9           # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.I)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _line_result_bytes(line: str) -> int:
+    """Sum bytes of the result type(s) on an HLO instruction line."""
+    lhs = line.split("=", 1)
+    if len(lhs) != 2:
+        return 0
+    # result type sits between '=' and the op name
+    head = lhs[1]
+    m = _COLL_RE.search(line)
+    if m:
+        head = head[: m.start(1) - len(lhs[0]) - 1]
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(head):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str):
+    """Per-device bytes by collective op kind (post-partitioning module)."""
+    out = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or "-done" in line.split("=")[0]:
+            continue
+        kind = m.group(1).lower()
+        out[kind] = out.get(kind, 0) + _line_result_bytes(line)
+    return out
+
+
+def _cost(compiled):
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca) if ca else {}
+
+
+def _memory(compiled):
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return None
+    if ma is None:
+        return None
+    out = {}
+    for f in ("temp_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        if hasattr(ma, f):
+            out[f] = int(getattr(ma, f))
+    return out or str(ma)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             mla_absorbed: bool = False, ring: bool = False,
+             prefill_last_only: bool = False, verbose: bool = True):
+    cfg = ARCHS[arch]
+    shape = SHAPES_BY_NAME[shape_name]
+    ok, reason = cell_applicable(cfg, shape)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "mla_absorbed": mla_absorbed,
+        "ring": ring,
+        "prefill_last_only": prefill_last_only,
+        "unrolled": os.environ.get("REPRO_SCAN_UNROLL", "0") == "1",
+    }
+    if not ok:
+        rec["status"] = "SKIP"
+        rec["reason"] = reason
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ocfg = optim.AdamWConfig()
+    t0 = time.perf_counter()
+    with mesh:
+        step, kwargs, donate = SP.abstract_cell(
+            cfg, shape, mesh, ocfg, mla_absorbed=mla_absorbed, ring=ring,
+            prefill_last_only=prefill_last_only)
+        jitted = jax.jit(step, donate_argnums=donate)
+        lowered = jitted.lower(**kwargs)
+        t1 = time.perf_counter()
+        # backend optimization level 0: we need the partitioned module +
+        # analyses, not fast host code (halves CPU compile time).
+        compiled = lowered.compile(
+            compiler_options={"xla_backend_optimization_level": 0})
+        t2 = time.perf_counter()
+
+    coll = collective_bytes(compiled.as_text())
+    cost = _cost(compiled)
+    mem = _memory(compiled)
+
+    chips = 512 if multi_pod else 256
+    flops = float(cost.get("flops", 0.0))          # per-device (partitioned)
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    coll_total = float(sum(coll.values()))
+    rec.update({
+        "status": "OK",
+        "chips": chips,
+        "lower_s": round(t1 - t0, 2),
+        "compile_s": round(t2 - t1, 2),
+        "per_device_flops": flops,
+        "per_device_bytes": bytes_acc,
+        "collective_bytes_per_device": coll,
+        "collective_bytes_total": coll_total,
+        "compute_term_s": flops / PEAK_FLOPS,
+        "memory_term_s": bytes_acc / HBM_BW,
+        "collective_term_s": coll_total / LINK_BW,
+        "memory_analysis": mem,
+    })
+    if verbose:
+        print(f"[{arch} × {shape_name} × {rec['mesh']}] OK "
+              f"compile={rec['compile_s']}s flops/dev={flops:.3e} "
+              f"bytes/dev={bytes_acc:.3e} coll/dev={coll_total:.3e}")
+        print(f"  memory_analysis: {mem}")
+        print(f"  cost_analysis keys: flops={flops:.3e} bytes={bytes_acc:.3e}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mla-absorbed", action="store_true")
+    ap.add_argument("--ring", action="store_true",
+                    help="window-sized ring KV caches for sliding layers")
+    ap.add_argument("--prefill-last-only", action="store_true",
+                    help="prefill computes last-position logits only")
+    ap.add_argument("--unroll", action="store_true",
+                    help="fully unroll layer scans for exact flop/collective "
+                         "counts (slower compiles; used for the roofline pass)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+    if args.unroll:
+        os.environ["REPRO_SCAN_UNROLL"] = "1"
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    cells = []
+    if args.all:
+        for a in ARCHS:
+            for s in SHAPES:
+                cells.append((a, s.name))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+
+    failures = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{arch}_{shape}_{'multi' if mp else 'single'}"
+            if args.mla_absorbed:
+                tag += "_absorbed"
+            if args.ring:
+                tag += "_ring"
+            if args.prefill_last_only:
+                tag += "_lastonly"
+            if args.unroll:
+                tag += "_unrolled"
+            fp = outdir / f"{tag}.json"
+            try:
+                rec = run_cell(arch, shape, mp, mla_absorbed=args.mla_absorbed,
+                               ring=args.ring,
+                               prefill_last_only=args.prefill_last_only)
+            except Exception as e:
+                rec = {"arch": arch, "shape": shape,
+                       "mesh": "2x16x16" if mp else "16x16",
+                       "status": "FAIL", "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-2000:]}
+                failures += 1
+                print(f"[{arch} × {shape}] FAIL: {rec['error'][:200]}")
+            fp.write_text(json.dumps(rec, indent=2, default=str))
+    print(f"done; {failures} failures")
+    return failures
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

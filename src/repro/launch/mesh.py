@@ -1,0 +1,19 @@
+"""Mesh construction.  IMPORTANT: functions only — importing this module
+never touches jax device state (jax locks the device count on first use).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """TPU v5e production mesh: 16x16 per pod; 2 pods for multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(dp: int = 1, tp: int = 1) -> Mesh:
+    """Small mesh over whatever devices exist (CPU tests)."""
+    return jax.make_mesh((dp, tp), ("data", "model"))

@@ -1,0 +1,134 @@
+"""Abstract input construction for the dry-run: ShapeDtypeStruct stand-ins
+(weak-type-correct, shardable, zero allocation) for every model input of
+every (arch × shape) cell, plus the step functions that get lowered.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import optim
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.distributed import sharding as SH
+from repro.models import build
+from repro.models.layers import _dtype
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _shard_like(tree_shapes, shardings):
+    return jax.tree.map(
+        lambda s, sh: _sds(s.shape, s.dtype, sh), tree_shapes, shardings
+    )
+
+
+def abstract_params(cfg: ArchConfig, mesh: Mesh):
+    bundle = build(cfg)
+    shapes = jax.eval_shape(bundle.init, jax.random.PRNGKey(0))
+    return _shard_like(shapes, SH.param_shardings(shapes, mesh))
+
+
+def abstract_opt_state(cfg: ArchConfig, mesh: Mesh, params_abs, ocfg):
+    shapes = jax.eval_shape(functools.partial(optim.init, cfg=ocfg), params_abs)
+    shardings = SH.opt_shardings(shapes, params_abs, mesh)
+    return optim.AdamWState(
+        step=_sds((), jnp.int32, shardings.step),
+        master=_shard_like(shapes.master, shardings.master),
+        m=_shard_like(shapes.m, shardings.m),
+        v=_shard_like(shapes.v, shardings.v),
+    )
+
+
+def abstract_batch(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh, train: bool):
+    B, S = shape.global_batch, shape.seq_len
+    bspec = NamedSharding(mesh, SH.batch_spec(mesh, B, 1))
+    out: Dict[str, Any] = {"tokens": _sds((B, S), jnp.int32, bspec)}
+    if train:
+        out["labels"] = _sds((B, S), jnp.int32, bspec)
+    if cfg.n_prefix_tokens:
+        e3 = NamedSharding(mesh, SH.batch_spec(mesh, B, 2))
+        out["prefix_embeds"] = _sds(
+            (B, cfg.n_prefix_tokens, cfg.prefix_dim), jnp.bfloat16, e3)
+    if cfg.is_encdec:
+        e3 = NamedSharding(mesh, SH.batch_spec(mesh, B, 2))
+        out["src_embeds"] = _sds((B, S, cfg.d_model), jnp.bfloat16, e3)
+    return out
+
+
+def abstract_caches(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                    ring: bool = False):
+    bundle = build(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    shapes = jax.eval_shape(
+        functools.partial(bundle.cache_init, B, S, ring=ring))
+    return _shard_like(shapes, SH.cache_shardings(shapes, mesh))
+
+
+def make_train_step(cfg: ArchConfig, ocfg):
+    bundle = build(cfg)
+    compute_dtype = _dtype(cfg.dtype)
+
+    def train_step(params, opt_state, batch):
+        def loss_of(p):
+            loss, aux = bundle.loss_fn(p, batch, moe_path="capacity", remat=True)
+            return loss
+        loss, grads = jax.value_and_grad(loss_of)(params)
+        new_params, new_state = optim.update(grads, opt_state, ocfg, compute_dtype)
+        return new_params, new_state, {"loss": loss}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, *, last_only: bool = False):
+    bundle = build(cfg)
+
+    def prefill_step(params, batch):
+        if cfg.is_encdec:
+            out, aux = bundle.prefill_fn(params, batch)
+        else:
+            out, aux = bundle.prefill_fn(params, batch, last_only=last_only)
+        return out
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, *, mla_absorbed: bool = False):
+    bundle = build(cfg)
+
+    def serve_step(params, token, caches, pos):
+        logits, new_caches = bundle.decode_fn(
+            params, token, caches, pos, mla_absorbed=mla_absorbed)
+        return logits, new_caches
+
+    return serve_step
+
+
+def abstract_cell(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh, ocfg,
+                  *, mla_absorbed: bool = False, ring: bool = False,
+                  prefill_last_only: bool = False):
+    """Returns (step_fn, kwargs of abstract inputs, donate_argnums)."""
+    params = abstract_params(cfg, mesh)
+    if shape.kind == "train":
+        step = make_train_step(cfg, ocfg)
+        opt = abstract_opt_state(cfg, mesh, params, ocfg)
+        batch = abstract_batch(cfg, shape, mesh, train=True)
+        return step, dict(params=params, opt_state=opt, batch=batch), (0, 1)
+    if shape.kind == "prefill":
+        step = make_prefill_step(cfg, last_only=prefill_last_only)
+        batch = abstract_batch(cfg, shape, mesh, train=False)
+        return step, dict(params=params, batch=batch), ()
+    if shape.kind == "decode":
+        step = make_serve_step(cfg, mla_absorbed=mla_absorbed)
+        B = shape.global_batch
+        tok_spec = NamedSharding(mesh, SH.batch_spec(mesh, B, 1))
+        token = _sds((B, 1), jnp.int32, tok_spec)
+        caches = abstract_caches(cfg, shape, mesh, ring=ring)
+        pos = _sds((), jnp.int32, NamedSharding(mesh, P()))
+        return step, dict(params=params, token=token, caches=caches, pos=pos), (2,)
+    raise ValueError(shape.kind)

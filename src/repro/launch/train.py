@@ -1,0 +1,209 @@
+"""Training launcher: mesh + model + data + optimizer + checkpointing +
+fault handling, end to end.
+
+CPU (this container): reduced configs, tiny mesh — the same code path that
+targets pods.  TPU pods: run under your cluster launcher with
+``--mesh single|multi``; XLA latency-hiding scheduler flags for
+compute/comm overlap are applied automatically for TPU backends.
+
+Examples
+--------
+  PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
+      --reduced --steps 20 --batch 8 --seq 128 --ckpt-dir /tmp/ck --resume auto
+
+Fault-tolerance drill (exits 42, restart resumes):
+  ... --simulate-failure 7
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import optim
+from repro.checkpoint import CheckpointManager, save_train_state
+from repro.configs import get_arch
+from repro.data.pipeline import SyntheticTokens
+from repro.distributed import sharding as SH
+from repro.distributed.fault import (
+    Heartbeat, StragglerMonitor, SimulatedFailure, RESTART_EXIT_CODE)
+from repro.launch.mesh import make_production_mesh, make_test_mesh
+from repro.models import build
+from repro.models.layers import _dtype
+
+# XLA flags for compute/comm overlap on TPU (no-ops on CPU): enable the
+# latency-hiding scheduler and async collectives so the per-layer DP
+# all-reduces overlap the backward pass.
+TPU_OVERLAP_FLAGS = (
+    "--xla_tpu_enable_latency_hiding_scheduler=true "
+    "--xla_enable_async_all_gather=true "
+    "--xla_enable_async_collective_permute=true "
+)
+
+
+def build_mesh(kind: str):
+    if kind in ("single", "multi"):
+        return make_production_mesh(multi_pod=(kind == "multi"))
+    n = jax.device_count()
+    return make_test_mesh(dp=n, tp=1)
+
+
+def make_step(bundle, ocfg, cfg, grad_compression: bool, mesh):
+    compute_dtype = _dtype(cfg.dtype)
+
+    if not grad_compression:
+        def train_step(params, opt_state, batch):
+            def loss_of(p):
+                loss, aux = bundle.loss_fn(p, batch, remat=True)
+                return loss
+            loss, grads = jax.value_and_grad(loss_of)(params)
+            new_params, new_state = optim.update(grads, opt_state, ocfg,
+                                                 compute_dtype)
+            return new_params, new_state, loss
+        return jax.jit(train_step, donate_argnums=(0, 1))
+
+    # int8-compressed DP gradient sync: per-shard grads + compressed psum
+    # inside shard_map over the data axis, then the optimizer update.
+    from jax.experimental.shard_map import shard_map
+    from repro.optim.compress import compressed_psum_mean
+
+    dp = SH.dp_axes(mesh)
+
+    def train_step(params, opt_state, ef, batch):
+        @partial(
+            shard_map, mesh=mesh,
+            in_specs=(P(), jax.tree.map(lambda _: P(), ef),
+                      jax.tree.map(lambda _: P(dp), batch)),
+            out_specs=(P(), P(), jax.tree.map(lambda _: P(), ef)),
+            check_rep=False,
+        )
+        def grads_sync(p, ef_, local_batch):
+            def loss_of(pp):
+                loss, aux = bundle.loss_fn(pp, local_batch, remat=True)
+                return loss
+            loss, g = jax.value_and_grad(loss_of)(p)
+            for ax in dp:
+                loss = jax.lax.pmean(loss, ax)
+            g, ef2 = compressed_psum_mean(g, ef_, dp[0])
+            return loss, g, ef2
+
+        loss, grads, ef2 = grads_sync(params, ef, batch)
+        new_params, new_state = optim.update(grads, opt_state, ocfg,
+                                             compute_dtype)
+        return new_params, new_state, ef2, loss
+
+    return jax.jit(train_step, donate_argnums=(0, 1, 2))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--mesh", default="test", choices=["test", "single", "multi"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--resume", default=None, choices=[None, "auto"])
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--simulate-failure", type=int, default=None,
+                    help="raise a simulated node failure at this step")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = build_mesh(args.mesh)
+    bundle = build(cfg)
+    ocfg = optim.AdamWConfig(total_steps=max(args.steps, 10))
+
+    with mesh:
+        params = bundle.init(jax.random.PRNGKey(args.seed))
+        pshard = SH.param_shardings(params, mesh)
+        params = jax.device_put(params, pshard)
+        opt_state = optim.init(params, ocfg)
+        # de-alias cached constant buffers (zeros/ones leaves can share a
+        # device buffer, which breaks donation)
+        params = jax.tree.map(lambda x: x.copy(), params)
+        opt_state = jax.tree.map(lambda x: x.copy(), opt_state)
+
+        data = SyntheticTokens(cfg.vocab, args.seq, args.batch, seed=args.seed)
+        start_step = 0
+        mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+        if mgr and args.resume == "auto":
+            latest = CheckpointManager(str(mgr.dir / "params")).latest_step()
+            if latest is not None:
+                params = CheckpointManager(str(mgr.dir / "params")).restore(
+                    latest, params, pshard)
+                opt_state = CheckpointManager(str(mgr.dir / "opt")).restore(
+                    latest, opt_state)
+                start_step = latest
+                print(f"[resume] restored step {latest}")
+
+        ef = None
+        if args.grad_compression:
+            from repro.optim.compress import init_error_feedback
+            ef = init_error_feedback(params)
+        step_fn = make_step(bundle, ocfg, cfg, args.grad_compression, mesh)
+
+        hb = Heartbeat(f"/tmp/repro_heartbeat_{args.arch}.json")
+        strag = StragglerMonitor()
+        bspec = NamedSharding(mesh, SH.batch_spec(mesh, args.batch, 1))
+
+        t_start = time.time()
+        for step in range(start_step, args.steps):
+            hostb = data.batch(step)
+            batch = {k: jax.device_put(v, bspec) for k, v in hostb.items()}
+            if cfg.n_prefix_tokens:
+                batch["prefix_embeds"] = jnp.zeros(
+                    (args.batch, cfg.n_prefix_tokens, cfg.prefix_dim),
+                    jnp.float32)
+            if cfg.is_encdec:
+                batch["src_embeds"] = jax.device_put(
+                    np.random.default_rng(step).normal(
+                        size=(args.batch, args.seq, cfg.d_model)
+                    ).astype(np.float32) * 0.1)
+            t0 = time.time()
+            try:
+                if args.simulate_failure is not None and step == args.simulate_failure:
+                    raise SimulatedFailure(f"injected failure at step {step}")
+                if args.grad_compression:
+                    params, opt_state, ef, loss = step_fn(params, opt_state, ef, batch)
+                else:
+                    params, opt_state, loss = step_fn(params, opt_state, batch)
+                loss = float(loss)
+            except SimulatedFailure as e:
+                print(f"[fault] {e}; flushing checkpoint and exiting "
+                      f"{RESTART_EXIT_CODE} for restart")
+                if mgr:
+                    save_train_state(mgr, step, params, opt_state)
+                sys.exit(RESTART_EXIT_CODE)
+            dt = time.time() - t0
+            hb.beat(step)
+            if strag.observe(dt):
+                print(f"[straggler] step {step} took {dt:.2f}s (>3x EWMA)")
+            if step % args.log_every == 0:
+                print(f"step {step:5d} loss {loss:8.4f} ({dt:.2f}s)")
+            if not np.isfinite(loss):
+                raise FloatingPointError(f"loss diverged at step {step}")
+            if mgr and (step + 1) % args.ckpt_every == 0:
+                save_train_state(mgr, step + 1, params, opt_state,
+                                 blocking=False)
+        if mgr:
+            save_train_state(mgr, args.steps, params, opt_state)
+        print(f"done: {args.steps - start_step} steps in "
+              f"{time.time() - t_start:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,8 @@
+"""Assigned-architecture model substrate (pure JAX, dict pytree params)."""
+from .model_zoo import build, ModelBundle, cross_entropy, param_count
+from . import layers, attention, moe, ssm, transformer, encdec
+
+__all__ = [
+    "build", "ModelBundle", "cross_entropy", "param_count",
+    "layers", "attention", "moe", "ssm", "transformer", "encdec",
+]

@@ -1,0 +1,137 @@
+"""Multi-head Latent Attention (DeepSeek-V3) — latent-compressed KV.
+
+Two decode paths:
+  * naive    — expand K/V from the cached latent every step (baseline).
+  * absorbed — fold W^UK into the query and W^UV into the output projection
+    so attention runs directly in latent space; the per-step expansion cost
+    S·r·H·(d_nope+d_v) drops to r·H·(d_nope+d_v) (+S·r per head) — the
+    technique-representative hillclimb in EXPERIMENTS §Perf.
+
+Cache stores only (c_kv: (B,S,r), k_rope: (B,S,d_rope)) — the MLA memory win.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import init_linear, linear, init_rmsnorm, rmsnorm, apply_rope
+
+Params = Dict[str, Any]
+
+
+def init_mla(key, cfg, dtype) -> Params:
+    d = cfg.d_model
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": init_linear(ks[0], d, cfg.q_lora_rank, dtype),
+        "q_norm": init_rmsnorm(cfg.q_lora_rank, dtype),
+        "wq_b": init_linear(ks[1], cfg.q_lora_rank, H * (dn + dr), dtype),
+        "wkv_a": init_linear(ks[2], d, cfg.kv_lora_rank + dr, dtype),
+        "kv_norm": init_rmsnorm(cfg.kv_lora_rank, dtype),
+        "wkv_b": init_linear(ks[3], cfg.kv_lora_rank, H * (dn + dv), dtype),
+        "wo": init_linear(ks[4], H * dv, d, dtype),
+    }
+
+
+def _project_q(p, cfg, x, rope):
+    B, S, _ = x.shape
+    H, dn, dr = cfg.n_heads, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    q = linear(p["wq_b"], rmsnorm(p["q_norm"], linear(p["wq_a"], x)))
+    q = q.reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    cos, sin = rope
+    q_rope = apply_rope(q_rope, cos, sin)
+    return q_nope, q_rope
+
+
+def _latent_kv(p, cfg, x, rope):
+    """Returns (c_kv normalized (B,S,r), k_rope roped (B,S,dr))."""
+    dr = cfg.qk_rope_head_dim
+    kv_a = linear(p["wkv_a"], x)
+    c_kv, k_rope = kv_a[..., : cfg.kv_lora_rank], kv_a[..., cfg.kv_lora_rank :]
+    c_kv = rmsnorm(p["kv_norm"], c_kv)
+    cos, sin = rope
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def mla_attention(
+    p: Params,
+    cfg,
+    x: jax.Array,
+    rope: Tuple[jax.Array, jax.Array],
+    cache: Optional[Dict[str, jax.Array]] = None,  # {'ckv','krope'}
+    pos: Optional[jax.Array] = None,
+    absorbed: bool = False,
+):
+    """Returns (out (B,S,D), new_cache)."""
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    scale = 1.0 / math.sqrt(dn + dr)
+
+    q_nope, q_rope = _project_q(p, cfg, x, rope)
+    c_new, kr_new = _latent_kv(p, cfg, x, rope)
+
+    if cache is not None:
+        ckv = jax.lax.dynamic_update_slice(
+            cache["ckv"], c_new.astype(cache["ckv"].dtype), (0, pos, 0)
+        )
+        krope = jax.lax.dynamic_update_slice(
+            cache["krope"], kr_new.astype(cache["krope"].dtype), (0, pos, 0)
+        )
+        new_cache = {"ckv": ckv, "krope": krope}
+        kv_len = pos + S
+        q_offset = pos
+    else:
+        ckv, krope = c_new, kr_new
+        new_cache = None
+        kv_len = None
+        q_offset = 0
+
+    Sk = ckv.shape[1]
+    wkv_b = p["wkv_b"]["w"].reshape(cfg.kv_lora_rank, H, dn + dv)
+    w_uk, w_uv = wkv_b[..., :dn], wkv_b[..., dn:]
+
+    if absorbed:
+        # latent-space attention: scores = (q_nope W_uk^T) · c + q_rope · k_rope
+        q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope, w_uk)
+        logits = (
+            jnp.einsum("bqhr,bkr->bhqk", q_lat, ckv)
+            + jnp.einsum("bqhd,bkd->bhqk", q_rope, krope)
+        ).astype(jnp.float32) * scale
+    else:
+        kv = jnp.einsum("bkr,rhd->bkhd", ckv, wkv_b)
+        k_nope, v = kv[..., :dn], kv[..., dn:]
+        logits = (
+            jnp.einsum("bqhd,bkhd->bhqk", q_nope, k_nope)
+            + jnp.einsum("bqhd,bkd->bhqk", q_rope, krope)
+        ).astype(jnp.float32) * scale
+
+    qpos = jnp.arange(S) + q_offset
+    kpos = jnp.arange(Sk)
+    mask = qpos[:, None] >= kpos[None, :]
+    if kv_len is not None:
+        mask = mask & (kpos[None, :] < kv_len)
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+
+    if absorbed:
+        out_lat = jnp.einsum("bhqk,bkr->bqhr", probs, ckv)
+        out = jnp.einsum("bqhr,rhd->bqhd", out_lat, w_uv)
+    else:
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+    return linear(p["wo"], out.reshape(B, S, H * dv)), new_cache
+
+
+def init_mla_cache(cfg, batch: int, max_seq: int, dtype) -> Dict[str, jax.Array]:
+    return {
+        "ckv": jnp.zeros((batch, max_seq, cfg.kv_lora_rank), dtype),
+        "krope": jnp.zeros((batch, max_seq, cfg.qk_rope_head_dim), dtype),
+    }

@@ -1,0 +1,147 @@
+"""Encoder-decoder stack (seamless-m4t): bidirectional encoder over stub
+frame embeddings + causal decoder with cross-attention.
+
+The audio frontend is a STUB per assignment — `src_embeds` arrives
+pre-computed as (B, S_src, d_model) frame embeddings.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import scan_util
+
+from .layers import (
+    Params, _dtype, init_linear, linear, init_rmsnorm, rmsnorm,
+    init_embedding, embed, swiglu_init, swiglu, rope_tables,
+    init_attention, attention, init_attention_cache,
+)
+
+
+def _init_enc_layer(key, cfg, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": init_rmsnorm(cfg.d_model, dtype),
+        "attn": init_attention(k1, cfg, dtype),
+        "ln2": init_rmsnorm(cfg.d_model, dtype),
+        "mlp": swiglu_init(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _init_dec_layer(key, cfg, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": init_rmsnorm(cfg.d_model, dtype),
+        "self_attn": init_attention(k1, cfg, dtype),
+        "ln_x": init_rmsnorm(cfg.d_model, dtype),
+        "cross_attn": init_attention(k2, cfg, dtype),
+        "ln2": init_rmsnorm(cfg.d_model, dtype),
+        "mlp": swiglu_init(k3, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def init_encdec(key, cfg) -> Params:
+    dtype = _dtype(cfg.dtype)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "embed": init_embedding(k1, cfg.vocab, cfg.d_model, dtype),
+        "lm_head": init_linear(k2, cfg.d_model, cfg.vocab, dtype),
+        "enc": jax.vmap(lambda k: _init_enc_layer(k, cfg, dtype))(
+            jax.random.split(k3, cfg.enc_layers)),
+        "dec": jax.vmap(lambda k: _init_dec_layer(k, cfg, dtype))(
+            jax.random.split(k4, cfg.n_layers)),
+        "enc_norm": init_rmsnorm(cfg.d_model, dtype),
+        "final_norm": init_rmsnorm(cfg.d_model, dtype),
+    }
+
+
+def encode(params, cfg, src_embeds, *, remat: bool = False):
+    """Bidirectional encoder over (B, S_src, D) stub embeddings."""
+    x = src_embeds.astype(_dtype(cfg.dtype))
+    rope = rope_tables(x.shape[1], cfg.hd, cfg.rope_theta)
+
+    def body(h, p):
+        a, _ = attention(p["attn"], cfg, rmsnorm(p["ln1"], h, cfg.norm_eps),
+                         rope, causal=False)
+        h = h + a
+        h = h + swiglu(p["mlp"], rmsnorm(p["ln2"], h, cfg.norm_eps))
+        return h, None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, _ = scan_util.scan(body_fn, x, params["enc"])
+    return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _dec_layer(p, cfg, x, rope, memory, self_cache=None, cross_cache=None, pos=None):
+    a, new_self = attention(p["self_attn"], cfg,
+                            rmsnorm(p["ln1"], x, cfg.norm_eps), rope,
+                            causal=True, cache=self_cache, pos=pos)
+    x = x + a
+    a, new_cross = attention(p["cross_attn"], cfg,
+                             rmsnorm(p["ln_x"], x, cfg.norm_eps), None,
+                             memory=memory, cache=cross_cache,
+                             static_kv=memory is None and cross_cache is not None)
+    x = x + a
+    x = x + swiglu(p["mlp"], rmsnorm(p["ln2"], x, cfg.norm_eps))
+    return x, new_self, new_cross
+
+
+def encdec_forward(params, cfg, src_embeds, tgt_tokens, *, remat: bool = False):
+    """Training forward.  Returns (logits, aux=0)."""
+    memory = encode(params, cfg, src_embeds, remat=remat)
+    x = embed(params["embed"], tgt_tokens)
+    rope = rope_tables(x.shape[1], cfg.hd, cfg.rope_theta)
+
+    def body(h, p):
+        h, _, _ = _dec_layer(p, cfg, h, rope, memory)
+        return h, None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, _ = scan_util.scan(body_fn, x, params["dec"])
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return linear(params["lm_head"], x), jnp.float32(0.0)
+
+
+def init_encdec_cache(cfg, batch: int, max_seq: int, memory_len: int):
+    """Self-attn KV (L,B,Smax,..) + cross K/V computed once from memory."""
+    dtype = _dtype(cfg.dtype)
+    one_self = init_attention_cache(cfg, batch, max_seq, dtype)
+    one_cross = init_attention_cache(cfg, batch, memory_len, dtype)
+    L = cfg.n_layers
+    return {
+        "self": jax.tree.map(lambda a: jnp.broadcast_to(a, (L,) + a.shape), one_self),
+        "cross": jax.tree.map(lambda a: jnp.broadcast_to(a, (L,) + a.shape), one_cross),
+    }
+
+
+def encdec_prime_cross(params, cfg, memory, caches):
+    """Precompute per-layer cross K/V from encoder memory (prefill phase)."""
+    B, Sm, _ = memory.shape
+
+    def per_layer(p):
+        k = linear(p["cross_attn"]["wk"], memory).reshape(B, Sm, cfg.n_kv_heads, cfg.hd)
+        v = linear(p["cross_attn"]["wv"], memory).reshape(B, Sm, cfg.n_kv_heads, cfg.hd)
+        return {"k": k, "v": v}
+
+    cross = jax.vmap(per_layer)(params["dec"])
+    return {"self": caches["self"], "cross": cross}
+
+
+def encdec_decode_step(params, cfg, token, caches, pos):
+    """One decoder step against primed cross caches."""
+    x = embed(params["embed"], token)
+    rope = rope_tables(1, cfg.hd, cfg.rope_theta, offset=pos)
+
+    def body(h, xs):
+        p, cs, cx = xs
+        h, new_self, _ = _dec_layer(p, cfg, h, rope, memory=None,
+                                    self_cache=cs, cross_cache=cx, pos=pos)
+        return h, new_self
+
+    # memory=None but cross_cache primed -> attention uses cached K/V
+    x, new_self = scan_util.scan(body, x, (params["dec"], caches["self"], caches["cross"]))
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return linear(params["lm_head"], x), {"self": new_self, "cross": caches["cross"]}

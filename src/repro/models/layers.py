@@ -1,0 +1,285 @@
+"""Shared neural layers (pure JAX, params as nested dict pytrees).
+
+No flax/optax in this environment — parameters are plain dicts, every layer
+is an (init, apply) pair.  Compute dtype follows the param dtype; norms and
+softmax accumulate in float32.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg_dtype: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg_dtype]
+
+
+# --------------------------------------------------------------------------
+# primitives
+# --------------------------------------------------------------------------
+
+def init_linear(key, d_in: int, d_out: int, dtype) -> Params:
+    std = 1.0 / math.sqrt(d_in)
+    return {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32) * std).astype(dtype)}
+
+
+def linear(p: Params, x: jax.Array) -> jax.Array:
+    return x @ p["w"]
+
+
+def init_rmsnorm(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    h = x.astype(jnp.float32)
+    h = h * jax.lax.rsqrt(jnp.mean(h * h, axis=-1, keepdims=True) + eps)
+    return (h * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_embedding(key, vocab: int, d: int, dtype) -> Params:
+    return {"w": (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)}
+
+
+def embed(p: Params, ids: jax.Array) -> jax.Array:
+    return p["w"][ids]
+
+
+def swiglu_init(key, d: int, ff: int, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": init_linear(k1, d, ff, dtype),
+        "up": init_linear(k2, d, ff, dtype),
+        "down": init_linear(k3, ff, d, dtype),
+    }
+
+
+def swiglu(p: Params, x: jax.Array) -> jax.Array:
+    return linear(p["down"], jax.nn.silu(linear(p["gate"], x)) * linear(p["up"], x))
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+def rope_tables(seq: int, dim: int, theta: float, offset: Any = 0):
+    """(cos, sin) of shape (seq, dim/2), float32.  `offset` may be traced."""
+    pos = jnp.arange(seq, dtype=jnp.float32) + offset
+    inv = theta ** (-jnp.arange(0, dim, 2, dtype=jnp.float32) / dim)
+    ang = pos[:, None] * inv[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., S, H, D); cos/sin: (S, D/2)."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    c = cos[None, :, None, :]
+    s = sin[None, :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# scaled-dot-product attention core (GQA, windows, prefix-LM, cross)
+# --------------------------------------------------------------------------
+
+def sdpa(
+    q: jax.Array,             # (B, Sq, H, D)
+    k: jax.Array,             # (B, Sk, Hkv, D)
+    v: jax.Array,             # (B, Sk, Hkv, Dv)
+    causal: bool,
+    window: int = 0,          # >0: sliding window over keys
+    q_offset: Any = 0,        # absolute position of q[0] (int or traced)
+    prefix_len: int = 0,      # prefix-LM: first `prefix_len` positions dense
+    kv_len: Optional[jax.Array] = None,  # decode: #valid cache entries
+    softmax_scale: Optional[float] = None,
+    key_positions: Optional[jax.Array] = None,  # ring caches: abs pos per slot
+) -> jax.Array:
+    B, Sq, H, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(D)
+
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32) * scale
+
+    qpos = jnp.arange(Sq) + q_offset          # (Sq,)
+    kpos = (jnp.arange(Sk) if key_positions is None
+            else key_positions)               # (Sk,)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        cm = qpos[:, None] >= kpos[None, :]
+        if prefix_len:
+            cm = cm | ((qpos[:, None] < prefix_len) & (kpos[None, :] < prefix_len))
+        mask = mask & cm
+    if window:
+        mask = mask & (qpos[:, None] - kpos[None, :] < window)
+    if kv_len is not None:
+        mask = mask & (kpos[None, :] < kv_len)
+    if key_positions is not None:
+        mask = mask & (kpos[None, :] >= 0)  # ring slots not yet written
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(B, Sq, H, v.shape[-1])
+
+
+def sdpa_banded(
+    q: jax.Array, k: jax.Array, v: jax.Array, window: int,
+    softmax_scale: Optional[float] = None,
+) -> jax.Array:
+    """Causal sliding-window attention in banded/blocked form (§Perf).
+
+    The masked-full formulation materializes (S, S) scores — at 32k that is
+    a multi-GB intermediate per head and S²·d flops, 97% of it masked away
+    for window ≪ S.  Banded form: split the sequence into blocks of W =
+    window; a query block attends only to its own block and the previous one
+    (2W keys), which covers every key with 0 ≤ qpos − kpos < W exactly.
+    Flops drop S/(2W)-fold; the giant intermediate disappears.  W-aligned
+    blocks are also the natural MXU tiling.
+
+    Requires S % window == 0 (callers pad/fall back otherwise).
+    """
+    import math as _math
+    B, S, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    W = window
+    nb = S // W
+    scale = softmax_scale if softmax_scale is not None else 1.0 / _math.sqrt(D)
+
+    qb = q.reshape(B, nb, W, Hkv, G, D)
+    kb = k.reshape(B, nb, W, Hkv, D)
+    vb = v.reshape(B, nb, W, Hkv, v.shape[-1])
+    kprev = jnp.pad(kb, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :nb]
+    vprev = jnp.pad(vb, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :nb]
+    k2 = jnp.concatenate([kprev, kb], axis=2)   # (B, nb, 2W, Hkv, D)
+    v2 = jnp.concatenate([vprev, vb], axis=2)
+
+    logits = jnp.einsum("bnqhgd,bnkhd->bnhgqk", qb, k2).astype(jnp.float32)
+    logits = logits * scale
+
+    qi = jnp.arange(W)[:, None]          # position within block
+    kj = jnp.arange(2 * W)[None, :]      # position within [prev | own]
+    delta = qi + W - kj                  # qpos - kpos
+    mask = (delta >= 0) & (delta < W)    # causal, within window
+    first = (jnp.arange(nb) == 0)[:, None, None]
+    mask = mask[None, :, :] & (~first | (kj >= W))[...]  # block -1 invalid at i=0
+    logits = jnp.where(mask[None, :, None, None], logits, -1e30)
+
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bnhgqk,bnkhd->bnqhgd", probs, v2)
+    return out.reshape(B, S, H, v.shape[-1])
+
+
+def banded_enabled() -> bool:
+    import os
+    return os.environ.get("REPRO_NO_BANDED", "0") != "1"
+
+
+# --------------------------------------------------------------------------
+# GQA attention layer (self or cross), with decode KV cache
+# --------------------------------------------------------------------------
+
+def init_attention(key, cfg, dtype, d_model: Optional[int] = None) -> Params:
+    d = d_model or cfg.d_model
+    hd = cfg.hd
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": init_linear(k1, d, cfg.n_heads * hd, dtype),
+        "wk": init_linear(k2, d, cfg.n_kv_heads * hd, dtype),
+        "wv": init_linear(k3, d, cfg.n_kv_heads * hd, dtype),
+        "wo": init_linear(k4, cfg.n_heads * hd, d, dtype),
+    }
+
+
+def attention(
+    p: Params,
+    cfg,
+    x: jax.Array,                      # (B, S, D)
+    rope: Optional[Tuple[jax.Array, jax.Array]],
+    causal: bool = True,
+    window: int = 0,
+    prefix_len: int = 0,
+    memory: Optional[jax.Array] = None,   # cross-attention source
+    cache: Optional[Dict[str, jax.Array]] = None,  # {'k','v'} (B, Smax, Hkv, hd)
+    pos: Optional[jax.Array] = None,      # decode position
+    static_kv: bool = False,              # cache holds primed cross K/V
+):
+    """Returns (out, new_cache)."""
+    B, S, _ = x.shape
+    hd = cfg.hd
+    q = linear(p["wq"], x).reshape(B, S, cfg.n_heads, hd)
+
+    new_cache = cache
+    kv_len = None
+    q_offset = 0
+    key_positions = None
+    if static_kv:
+        # cross-attention against precomputed K/V (decode phase)
+        k, v = cache["k"], cache["v"]
+        causal = False
+    else:
+        src = memory if memory is not None else x
+        k = linear(p["wk"], src).reshape(B, src.shape[1], cfg.n_kv_heads, hd)
+        v = linear(p["wv"], src).reshape(B, src.shape[1], cfg.n_kv_heads, hd)
+        if rope is not None and memory is None:
+            cos, sin = rope
+            q = apply_rope(q, cos, sin)
+            k = apply_rope(k, cos, sin)
+        if memory is not None:
+            causal = False
+        elif cache is not None and window and cache["k"].shape[1] == window:
+            # ring-buffer cache for sliding-window layers (optimized serve
+            # path): cache holds only the last W positions; slot = pos % W.
+            # Single-token decode only (S == 1).
+            W = cache["k"].shape[1]
+            slot = pos % W
+            kc = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+            vc = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+            new_cache = {"k": kc, "v": vc}
+            k, v = kc, vc
+            # absolute position held by each slot j: pos - ((pos - j) mod W)
+            j = jnp.arange(W)
+            key_positions = pos - ((pos - j) % W)
+            kv_len = pos + S
+            q_offset = pos
+        elif cache is not None:
+            # decode self-attention: write k/v at `pos`, attend over cache
+            kc = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+            vc = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+            new_cache = {"k": kc, "v": vc}
+            k, v = kc, vc
+            kv_len = pos + S
+            q_offset = pos
+
+    if (window and causal and cache is None and memory is None
+            and not static_kv and prefix_len == 0 and S % window == 0
+            and S // window >= 2 and banded_enabled()):
+        out = sdpa_banded(q, k, v, window)
+    else:
+        out = sdpa(
+            q, k, v,
+            causal=causal,
+            window=window,
+            q_offset=q_offset,
+            prefix_len=prefix_len,
+            kv_len=kv_len,
+            key_positions=key_positions,
+        )
+    return linear(p["wo"], out.reshape(B, S, cfg.n_heads * hd)), new_cache
+
+
+def init_attention_cache(cfg, batch: int, max_seq: int, dtype) -> Dict[str, jax.Array]:
+    hd = cfg.hd
+    shape = (batch, max_seq, cfg.n_kv_heads, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}

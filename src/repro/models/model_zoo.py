@@ -1,0 +1,111 @@
+"""Unified model API: build(config) -> ModelBundle with init/step functions.
+
+All 10 assigned architectures are served by three assemblies:
+  * decoder-only (`transformer.py`)   — 8 archs (incl. VLM prefix stub)
+  * encoder-decoder (`encdec.py`)     — seamless-m4t
+and three step kinds per shape config:
+  * train_step   — CE loss (+ MoE aux), grads, optimizer update
+  * prefill_step — forward building the decode caches
+  * serve_step   — single-token decode against the caches
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer as T
+from . import encdec as ED
+from .layers import _dtype
+
+Params = Dict[str, Any]
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean next-token CE; logits (B,S,V), labels (B,S) (already shifted)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - ll)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelBundle:
+    cfg: Any
+    init: Callable[[jax.Array], Params]
+    loss_fn: Callable[..., Tuple[jax.Array, jax.Array]]   # (params, batch) -> (loss, aux)
+    prefill_fn: Optional[Callable] = None
+    decode_fn: Optional[Callable] = None
+    cache_init: Optional[Callable] = None
+
+
+def _decoder_bundle(cfg) -> ModelBundle:
+    prefix = cfg.n_prefix_tokens > 0
+
+    def init(key):
+        return T.init_lm(key, cfg)
+
+    def loss_fn(params, batch, *, moe_path="capacity", remat=True):
+        tokens = batch["tokens"]
+        labels = batch["labels"]
+        pfx = batch.get("prefix_embeds") if prefix else None
+        logits, aux = T.lm_forward(params, cfg, tokens, prefix_embeds=pfx,
+                                   moe_path=moe_path, remat=remat)
+        if prefix:
+            logits = logits[:, cfg.n_prefix_tokens :]
+        loss = cross_entropy(logits[:, :-1], labels[:, 1:])
+        return loss + 0.01 * aux, aux
+
+    def cache_init(batch, max_seq, ring=False):
+        return T.init_lm_cache(cfg, batch, max_seq, ring=ring)
+
+    def prefill_fn(params, batch, last_only=False):
+        """Forward over the prompt; returns (logits, aux).  The dry-run
+        lowers this for prefill shapes (cache write is decode-side).
+        `last_only`: serving semantics — logits for the final position only
+        (the §Perf prefill optimization)."""
+        pfx = batch.get("prefix_embeds") if prefix else None
+        return T.lm_forward(params, cfg, batch["tokens"], prefix_embeds=pfx,
+                            moe_path="capacity", remat=False,
+                            last_only=last_only)
+
+    def decode_fn(params, token, caches, pos, *, mla_absorbed=False,
+                  moe_path="capacity", prefix_embeds=None):
+        return T.lm_decode_step(params, cfg, token, caches, pos,
+                                mla_absorbed=mla_absorbed, moe_path=moe_path,
+                                prefix_embeds=prefix_embeds)
+
+    return ModelBundle(cfg, init, loss_fn, prefill_fn, decode_fn, cache_init)
+
+
+def _encdec_bundle(cfg) -> ModelBundle:
+    def init(key):
+        return ED.init_encdec(key, cfg)
+
+    def loss_fn(params, batch, *, moe_path="capacity", remat=True):
+        logits, aux = ED.encdec_forward(params, cfg, batch["src_embeds"],
+                                        batch["tokens"], remat=remat)
+        loss = cross_entropy(logits[:, :-1], batch["labels"][:, 1:])
+        return loss, aux
+
+    def cache_init(batch, max_seq):
+        return ED.init_encdec_cache(cfg, batch, max_seq, cfg.mem_len)
+
+    def prefill_fn(params, batch):
+        memory = ED.encode(params, cfg, batch["src_embeds"])
+        return memory, jnp.float32(0.0)
+
+    def decode_fn(params, token, caches, pos, **_):
+        return ED.encdec_decode_step(params, cfg, token, caches, pos)
+
+    return ModelBundle(cfg, init, loss_fn, prefill_fn, decode_fn, cache_init)
+
+
+def build(cfg) -> ModelBundle:
+    return _encdec_bundle(cfg) if cfg.is_encdec else _decoder_bundle(cfg)
+
+
+def param_count(params: Params) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))

@@ -1,0 +1,123 @@
+"""Mixture-of-Experts layer: top-k router + capacity-bounded dispatch.
+
+Two execution paths with identical semantics (cross-validated in tests):
+
+  * `dense`    — every expert processes every token, gates mask the output.
+    O(T·E·d·f); exact; used by tiny smoke configs and as the oracle.
+  * `capacity` — sort-based dispatch: tokens sorted by expert, each expert
+    processes a static-capacity tile (E, C, d) via batched matmul; overflow
+    tokens are dropped (standard capacity-factor semantics).  This is the
+    sharded production path: expert weights are laid out (E, ...) so the EP
+    mesh axis shards dim 0, and XLA turns the gather/scatter into
+    all-to-alls on the `model` axis.
+
+BLADYG connection (DESIGN §4): experts = blocks, token→expert assignments =
+edges; the capacity path is the "incremental" assignment (only overflow
+tokens are re-routed/dropped), vs. re-dispatching everything.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import init_linear, linear, swiglu_init, swiglu
+
+Params = Dict[str, Any]
+
+
+def init_moe(key, cfg, dtype, d_ff: Optional[int] = None) -> Params:
+    d = cfg.d_model
+    f = d_ff or cfg.moe_d_ff
+    E = cfg.n_experts
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    std = 1.0 / jnp.sqrt(d)
+    p: Params = {
+        "router": init_linear(k1, d, E, jnp.float32),  # router in f32
+        "w_gate": {"w": (jax.random.normal(k2, (E, d, f), jnp.float32) * std).astype(dtype)},
+        "w_up": {"w": (jax.random.normal(k3, (E, d, f), jnp.float32) * std).astype(dtype)},
+        "w_down": {"w": (jax.random.normal(k4, (E, f, d), jnp.float32) / jnp.sqrt(f)).astype(dtype)},
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = swiglu_init(k5, d, f * cfg.n_shared_experts, dtype)
+    return p
+
+
+def _router(p: Params, cfg, x2d: jax.Array):
+    """Returns (top-k weights (T,k), top-k expert ids (T,k), aux losses)."""
+    logits = (x2d.astype(jnp.float32) @ p["router"]["w"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, cfg.top_k)
+    topv = topv / jnp.sum(topv, axis=-1, keepdims=True)  # renormalize
+    # load-balance aux (Switch-style) + router z-loss
+    T, E = probs.shape
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(topi, E, dtype=jnp.float32), axis=1), axis=0
+    )
+    lb = E * jnp.sum(me * ce)
+    z = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
+    return topv, topi, lb + 1e-3 * z
+
+
+def _expert_ffn(p: Params, xe: jax.Array) -> jax.Array:
+    """xe: (E, C, d) -> (E, C, d) via per-expert SwiGLU (batched matmul)."""
+    g = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"]["w"])
+    u = jnp.einsum("ecd,edf->ecf", xe, p["w_up"]["w"])
+    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, p["w_down"]["w"])
+
+
+def moe_dense(p: Params, cfg, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Oracle path: all experts on all tokens."""
+    B, S, d = x.shape
+    x2 = x.reshape(-1, d)
+    topv, topi, aux = _router(p, cfg, x2)
+    E = cfg.n_experts
+    xe = jnp.broadcast_to(x2[None], (E, x2.shape[0], d))
+    ye = _expert_ffn(p, xe)                          # (E, T, d)
+    gates = jnp.zeros((x2.shape[0], E), x.dtype)
+    gates = gates.at[jnp.arange(x2.shape[0])[:, None], topi].set(topv.astype(x.dtype))
+    y = jnp.einsum("te,etd->td", gates, ye)
+    if "shared" in p:
+        y = y + swiglu(p["shared"], x2)
+    return y.reshape(B, S, d), aux
+
+
+def moe_capacity(
+    p: Params, cfg, x: jax.Array, capacity: Optional[int] = None
+) -> Tuple[jax.Array, jax.Array]:
+    """Production path: sort-based capacity dispatch."""
+    B, S, d = x.shape
+    x2 = x.reshape(-1, d)
+    T = x2.shape[0]
+    E, k = cfg.n_experts, cfg.top_k
+    C = capacity or max(1, int(cfg.capacity_factor * T * k / E))
+
+    topv, topi, aux = _router(p, cfg, x2)
+
+    flat_e = topi.reshape(-1)                         # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(T), k)
+    flat_w = topv.reshape(-1)
+    order = jnp.argsort(flat_e)                       # stable in jax
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    # position within expert group
+    seg_start = jnp.searchsorted(se, jnp.arange(E))   # (E,)
+    pos_in_e = jnp.arange(T * k) - seg_start[se]
+    keep = pos_in_e < C
+    slot = jnp.where(keep, se * C + pos_in_e, E * C)  # overflow -> scratch slot
+
+    buf_t = jnp.full((E * C + 1,), T, jnp.int32).at[slot].set(st.astype(jnp.int32))
+    buf_w = jnp.zeros((E * C + 1,), jnp.float32).at[slot].set(sw)
+    buf_t, buf_w = buf_t[:-1], buf_w[:-1]
+
+    x_pad = jnp.concatenate([x2, jnp.zeros((1, d), x2.dtype)], axis=0)
+    xe = x_pad[buf_t].reshape(E, C, d)
+    ye = _expert_ffn(p, xe).reshape(E * C, d)
+
+    y = jnp.zeros((T + 1, d), jnp.float32)
+    y = y.at[buf_t].add(ye.astype(jnp.float32) * buf_w[:, None])
+    y = y[:T].astype(x.dtype)
+    if "shared" in p:
+        y = y + swiglu(p["shared"], x2)
+    return y.reshape(B, S, d), aux

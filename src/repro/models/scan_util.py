@@ -1,0 +1,22 @@
+"""Scan wrapper with dry-run unrolling.
+
+`lax.scan` keeps the HLO small (one body per block kind) — right for real
+runs — but XLA's `cost_analysis` counts a while-loop body ONCE, which would
+understate flops/collective-bytes by the trip count in the roofline.  The
+dry-run therefore sets REPRO_SCAN_UNROLL=1 to fully unroll layer scans, so
+every layer's matmuls and collectives are counted exactly.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+
+def unrolling() -> bool:
+    return os.environ.get("REPRO_SCAN_UNROLL", "0") == "1"
+
+
+def scan(f, init, xs, length=None):
+    return jax.lax.scan(f, init, xs, length=length,
+                        unroll=True if unrolling() else 1)

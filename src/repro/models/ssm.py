@@ -1,0 +1,194 @@
+"""Mamba2 (SSD — state-space duality) block, chunked-scan training form +
+O(1)-state decode step.  [arXiv:2405.21060]
+
+Shapes: d_inner = expand·d_model; H = d_inner / head_dim(P); state size N;
+G groups (G=1 here) share B/C across heads.
+
+Chunked algorithm (SSD paper §6): split the sequence into chunks of length
+Q; compute the intra-chunk (quadratic attention-like) term and the
+inter-chunk term through a recurrence over per-chunk states — the recurrence
+is a `lax.associative_scan`, so prefill parallelizes over the sequence.
+The decode step is the plain SSM recurrence on a (B,H,P,N) state.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import init_linear, linear, init_rmsnorm, rmsnorm
+
+Params = Dict[str, Any]
+
+
+def _dims(cfg):
+    d_in = cfg.d_inner
+    H = cfg.n_ssm_heads
+    P = cfg.ssm_head_dim
+    N = cfg.ssm_state
+    G = cfg.ssm_groups
+    conv_dim = d_in + 2 * G * N
+    return d_in, H, P, N, G, conv_dim
+
+
+def init_mamba(key, cfg, dtype) -> Params:
+    d = cfg.d_model
+    d_in, H, P, N, G, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 5)
+    in_dim = 2 * d_in + 2 * G * N + H  # z, xBC, dt
+    return {
+        "in_proj": init_linear(ks[0], d, in_dim, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, conv_dim), jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),       # a = -exp(A_log) = -1
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),  # softplus(-2)≈0.13
+        "norm": init_rmsnorm(d_in, dtype),
+        "out_proj": init_linear(ks[4], d_in, d, dtype),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    d_in, H, P, N, G, conv_dim = _dims(cfg)
+    z = zxbcdt[..., :d_in]
+    xBC = zxbcdt[..., d_in : d_in + conv_dim]
+    dt = zxbcdt[..., d_in + conv_dim :]
+    return z, xBC, dt
+
+
+def _causal_conv(p: Params, cfg, xBC: jax.Array) -> jax.Array:
+    """Depthwise causal conv over (B, S, conv_dim)."""
+    W = cfg.conv_width
+    pad = jnp.pad(xBC, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xBC.shape[1], :] * p["conv_w"][i][None, None, :]
+        for i in range(W)
+    )
+    return jax.nn.silu(out + p["conv_b"][None, None, :])
+
+
+def mamba_chunked(
+    p: Params, cfg, x: jax.Array, chunk: int = 128,
+    initial_state: Optional[jax.Array] = None,
+    return_state: bool = False,
+):
+    """Training/prefill form.  x: (B, S, D) -> (B, S, D) [, final state]."""
+    B, S, D = x.shape
+    d_in, H, P, N, G, conv_dim = _dims(cfg)
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    z, xBC, dt = _split_proj(cfg, linear(p["in_proj"], x))
+    xBC = _causal_conv(p, cfg, xBC)
+    xs = xBC[..., :d_in].reshape(B, S, H, P)
+    Bm = xBC[..., d_in : d_in + G * N].reshape(B, S, G, N)
+    Cm = xBC[..., d_in + G * N :].reshape(B, S, G, N)
+    assert G == 1, "G=1 supported"
+    Bm, Cm = Bm[..., 0, :], Cm[..., 0, :]          # (B, S, N)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None])  # (B,S,H)
+    a = -jnp.exp(p["A_log"])                        # (H,)
+    dA = dt * a[None, None]                         # (B,S,H) negative
+
+    # chunked views
+    xs_c = xs.reshape(B, nc, Q, H, P).astype(jnp.float32)
+    B_c = Bm.reshape(B, nc, Q, N).astype(jnp.float32)
+    C_c = Cm.reshape(B, nc, Q, N).astype(jnp.float32)
+    dt_c = dt.reshape(B, nc, Q, H)
+    dA_c = dA.reshape(B, nc, Q, H)
+    cum = jnp.cumsum(dA_c, axis=2)                  # (B,nc,Q,H)
+
+    # ---- intra-chunk (quadratic within chunk) ----
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]      # (B,nc,Q,K,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    CB = jnp.einsum("bcqn,bckn->bcqk", C_c, B_c)             # (B,nc,Q,K)
+    att = CB[..., None] * L * dt_c[:, :, None, :, :]         # (B,nc,Q,K,H)
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", att, xs_c)
+
+    # ---- per-chunk states + inter-chunk recurrence ----
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)          # (B,nc,Q,H)
+    Sc = jnp.einsum("bcqn,bcqh,bcqhp->bchpn", B_c, dt_c * decay_to_end, xs_c)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                  # (B,nc,H)
+
+    if initial_state is not None:
+        s0 = initial_state.astype(jnp.float32)               # (B,H,P,N)
+    else:
+        s0 = jnp.zeros((B, H, P, N), jnp.float32)
+
+    def op(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, b1 * a2[..., None, None] + b2
+
+    decays, states = jax.lax.associative_scan(
+        op, (chunk_decay, Sc), axis=1
+    )  # states[c] = state at END of chunk c (s0=0 case)
+    # inject initial state: state_end[c] += s0 * prod(decay[0..c])
+    states = states + s0[:, None] * decays[..., None, None]
+    # state BEFORE each chunk
+    prev = jnp.concatenate([s0[:, None], states[:, :-1]], axis=1)  # (B,nc,H,P,N)
+
+    y_inter = jnp.einsum(
+        "bcqn,bchpn,bcqh->bcqhp", C_c, prev, jnp.exp(cum)
+    )
+
+    y = (y_intra + y_inter + p["D"][None, None, None, :, None] * xs_c)
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    out = linear(p["out_proj"], y)
+    if return_state:
+        return out, states[:, -1].astype(jnp.float32)
+    return out
+
+
+def init_mamba_cache(cfg, batch: int, dtype) -> Dict[str, jax.Array]:
+    d_in, H, P, N, G, conv_dim = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_dim), dtype),
+        "state": jnp.zeros((batch, H, P, N), jnp.float32),
+    }
+
+
+def mamba_step(
+    p: Params, cfg, x: jax.Array, cache: Dict[str, jax.Array]
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Decode: x (B, 1, D) -> (B, 1, D); O(1)-state recurrence."""
+    B = x.shape[0]
+    d_in, H, P, N, G, conv_dim = _dims(cfg)
+    z, xBC, dt = _split_proj(cfg, linear(p["in_proj"], x))  # (B,1,·)
+    window = jnp.concatenate([cache["conv"], xBC.astype(cache["conv"].dtype)], axis=1)
+    conv_out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    xBC1 = jax.nn.silu(conv_out)                            # (B, conv_dim)
+    new_conv = window[:, 1:]
+
+    xs = xBC1[:, :d_in].reshape(B, H, P)
+    Bm = xBC1[:, d_in : d_in + N]
+    Cm = xBC1[:, d_in + N :]
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"][None])  # (B,H)
+    a = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt1 * a[None])                             # (B,H)
+
+    state = cache["state"] * dA[..., None, None] + jnp.einsum(
+        "bn,bhp,bh->bhpn", Bm, xs.astype(jnp.float32), dt1
+    )
+    y = jnp.einsum("bn,bhpn->bhp", Cm, state) + p["D"][None, :, None] * xs
+    y = y.reshape(B, 1, d_in).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return linear(p["out_proj"], y), {"conv": new_conv, "state": state}
+
+
+def mamba_sequential_ref(p: Params, cfg, x: jax.Array) -> jax.Array:
+    """Step-by-step oracle (tests): must equal mamba_chunked."""
+    B, S, D = x.shape
+    cache = init_mamba_cache(cfg, B, x.dtype)
+
+    def body(cache, xt):
+        y, cache = mamba_step(p, cfg, xt[:, None, :], cache)
+        return cache, y[:, 0]
+
+    _, ys = jax.lax.scan(body, cache, jnp.swapaxes(x, 0, 1))
+    return jnp.swapaxes(ys, 0, 1)

@@ -1,0 +1,466 @@
+"""Decoder-only transformer assembly for all assigned LM architectures.
+
+Layers are grouped into homogeneous *blocks* that scan (`lax.scan`) over
+stacked parameters — one compiled layer body per block kind, which keeps the
+HLO small even for 88-layer models and preserves interleaved patterns:
+
+  dense_uniform  — attention (GQA or MLA) + dense SwiGLU      [codeqwen,
+                   granite, internlm2, paligemma, deepseek's first 3]
+  moe_uniform    — attention + MoE                            [deepseek tail,
+                   llama4-scout]
+  gemma_period   — (5 sliding-window + 1 global) per period   [gemma3]
+  mamba_uniform  — Mamba2 blocks                              [mamba2]
+  zamba_period   — (6 Mamba2 + 1 weight-SHARED attn/MLP)      [zamba2]
+
+Each block kind implements (init, apply_train, cache_init, apply_decode).
+The same code path serves training (no cache), prefill (cache build) and
+decode (single-token step) — selected by `mode`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import scan_util
+
+from .layers import (
+    Params, _dtype, init_linear, linear, init_rmsnorm, rmsnorm,
+    init_embedding, embed, swiglu_init, swiglu, rope_tables,
+    init_attention, attention, init_attention_cache,
+)
+from .attention import init_mla, mla_attention, init_mla_cache
+from .moe import init_moe, moe_dense, moe_capacity
+from .ssm import init_mamba, mamba_chunked, mamba_step, init_mamba_cache
+
+
+# ---------------------------------------------------------------------------
+# layer plan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Block:
+    kind: str
+    count: int          # scan length (layers, or periods for *_period)
+    window: int = 0     # sliding window for dense layers in this block
+    d_ff: int = 0       # dense ffn width override (deepseek first-3)
+    moe: bool = False
+
+
+def layer_plan(cfg) -> List[Block]:
+    if cfg.mixer == "mamba":
+        if cfg.shared_attn_period:
+            p = cfg.shared_attn_period
+            periods, tail = divmod(cfg.n_layers, p)
+            plan = [Block("zamba_period", periods)]
+            if tail:
+                plan.append(Block("mamba_uniform", tail))
+            return plan
+        return [Block("mamba_uniform", cfg.n_layers)]
+    if cfg.n_experts:
+        plan = []
+        if cfg.first_k_dense:
+            plan.append(Block("dense_uniform", cfg.first_k_dense,
+                              d_ff=cfg.dense_d_ff or cfg.d_ff))
+        plan.append(Block("moe_uniform", cfg.n_layers - cfg.first_k_dense, moe=True))
+        return plan
+    if cfg.local_global_period:
+        p = cfg.local_global_period
+        periods, tail = divmod(cfg.n_layers, p)
+        plan = [Block("gemma_period", periods, window=cfg.sliding_window)]
+        if tail:
+            plan.append(Block("dense_uniform", tail, window=cfg.sliding_window,
+                              d_ff=cfg.d_ff))
+        return plan
+    return [Block("dense_uniform", cfg.n_layers, window=cfg.sliding_window,
+                  d_ff=cfg.d_ff)]
+
+
+# ---------------------------------------------------------------------------
+# single-layer bodies
+# ---------------------------------------------------------------------------
+
+def _init_attn_layer(key, cfg, dtype, d_ff: int, moe: bool) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p: Params = {"ln1": init_rmsnorm(cfg.d_model, dtype),
+                 "ln2": init_rmsnorm(cfg.d_model, dtype)}
+    if cfg.attn_impl == "mla":
+        p["attn"] = init_mla(k1, cfg, dtype)
+    else:
+        p["attn"] = init_attention(k2, cfg, dtype)
+    if moe:
+        p["moe"] = init_moe(k3, cfg, dtype)
+    elif d_ff:
+        p["mlp"] = swiglu_init(k4, cfg.d_model, d_ff, dtype)
+    return p
+
+
+def _apply_attn_layer(
+    p, cfg, x, rope, *, window: int, moe: bool, moe_path: str,
+    prefix_len: int, cache=None, pos=None, mla_absorbed: bool = False,
+):
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if cfg.attn_impl == "mla":
+        attn_out, new_cache = mla_attention(
+            p["attn"], cfg, h, rope, cache=cache, pos=pos, absorbed=mla_absorbed
+        )
+    else:
+        attn_out, new_cache = attention(
+            p["attn"], cfg, h, rope, causal=True, window=window,
+            prefix_len=prefix_len, cache=cache, pos=pos,
+        )
+    x = x + attn_out
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    aux = jnp.float32(0.0)
+    if moe:
+        fn = moe_dense if moe_path == "dense" else moe_capacity
+        mlp_out, aux = fn(p["moe"], cfg, h)
+    elif "mlp" in p:
+        mlp_out = swiglu(p["mlp"], h)
+    else:
+        mlp_out = jnp.zeros_like(h)
+    return x + mlp_out, aux, new_cache
+
+
+def _init_mamba_layer(key, cfg, dtype) -> Params:
+    return {"ln": init_rmsnorm(cfg.d_model, dtype),
+            "mamba": init_mamba(key, cfg, dtype)}
+
+
+def _apply_mamba_layer(p, cfg, x, cache=None):
+    h = rmsnorm(p["ln"], x, cfg.norm_eps)
+    if cache is None:
+        return x + mamba_chunked(p["mamba"], cfg, h), None
+    out, new_cache = mamba_step(p["mamba"], cfg, h, cache)
+    return x + out, new_cache
+
+
+def _init_shared_block(key, cfg, dtype) -> Params:
+    """zamba2's weight-shared attention + MLP block."""
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": init_rmsnorm(cfg.d_model, dtype),
+        "attn": init_attention(k1, cfg, dtype),
+        "ln2": init_rmsnorm(cfg.d_model, dtype),
+        "mlp": swiglu_init(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _apply_shared_block(p, cfg, x, rope, cache=None, pos=None):
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    attn_out, new_cache = attention(p["attn"], cfg, h, rope, causal=True,
+                                    cache=cache, pos=pos)
+    x = x + attn_out
+    x = x + swiglu(p["mlp"], rmsnorm(p["ln2"], x, cfg.norm_eps))
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# block builders (init / train-apply / cache / decode-apply)
+# ---------------------------------------------------------------------------
+
+def _stack_init(init_fn, key, count: int):
+    keys = jax.random.split(key, count)
+    return jax.vmap(init_fn)(keys)
+
+
+def init_block(key, cfg, blk: Block, dtype) -> Params:
+    if blk.kind in ("dense_uniform", "moe_uniform"):
+        return _stack_init(
+            lambda k: _init_attn_layer(k, cfg, dtype, blk.d_ff or cfg.d_ff, blk.moe),
+            key, blk.count)
+    if blk.kind == "gemma_period":
+        k1, k2 = jax.random.split(key)
+        pl = cfg.local_global_period - 1
+        return {
+            "local": _stack_init(
+                lambda k: _stack_init(
+                    lambda kk: _init_attn_layer(kk, cfg, dtype, cfg.d_ff, False),
+                    k, pl),
+                k1, blk.count),
+            "global": _stack_init(
+                lambda k: _init_attn_layer(k, cfg, dtype, cfg.d_ff, False),
+                k2, blk.count),
+        }
+    if blk.kind == "mamba_uniform":
+        return _stack_init(lambda k: _init_mamba_layer(k, cfg, dtype), key, blk.count)
+    if blk.kind == "zamba_period":
+        k1, _ = jax.random.split(key)
+        p = cfg.shared_attn_period
+        return {
+            "mamba": _stack_init(
+                lambda k: _stack_init(
+                    lambda kk: _init_mamba_layer(kk, cfg, dtype), k, p),
+                k1, blk.count),
+        }
+    raise ValueError(blk.kind)
+
+
+def apply_block_train(
+    params, cfg, blk: Block, x, rope, *, moe_path: str, prefix_len: int,
+    shared_block: Optional[Params], remat: bool,
+):
+    """Training / loss forward (no caches).  Returns (x, aux_sum)."""
+
+    if blk.kind in ("dense_uniform", "moe_uniform"):
+        def body(carry, p):
+            h, aux = carry
+            h, a, _ = _apply_attn_layer(
+                p, cfg, h, rope, window=blk.window, moe=blk.moe,
+                moe_path=moe_path, prefix_len=prefix_len)
+            return (h, aux + a), None
+        body_fn = jax.checkpoint(body) if remat else body
+        (x, aux), _ = scan_util.scan(body_fn, (x, jnp.float32(0.0)), params)
+        return x, aux
+
+    if blk.kind == "gemma_period":
+        def period(carry, p):
+            h, aux = carry
+
+            def local_layer(c, lp):
+                hh, au = c
+                hh, a, _ = _apply_attn_layer(
+                    lp, cfg, hh, rope, window=blk.window, moe=False,
+                    moe_path=moe_path, prefix_len=prefix_len)
+                return (hh, au + a), None
+
+            (h, aux), _ = scan_util.scan(local_layer, (h, aux), p["local"])
+            h, a, _ = _apply_attn_layer(
+                p["global"], cfg, h, rope, window=0, moe=False,
+                moe_path=moe_path, prefix_len=prefix_len)
+            return (h, aux + a), None
+        body_fn = jax.checkpoint(period) if remat else period
+        (x, aux), _ = scan_util.scan(body_fn, (x, jnp.float32(0.0)), params)
+        return x, aux
+
+    if blk.kind == "mamba_uniform":
+        def body(carry, p):
+            h, _ = _apply_mamba_layer(p, cfg, carry)
+            return h, None
+        body_fn = jax.checkpoint(body) if remat else body
+        x, _ = scan_util.scan(body_fn, x, params)
+        return x, jnp.float32(0.0)
+
+    if blk.kind == "zamba_period":
+        def period(carry, p):
+            h = carry
+
+            def ml(c, lp):
+                c2, _ = _apply_mamba_layer(lp, cfg, c)
+                return c2, None
+
+            h, _ = scan_util.scan(ml, h, p["mamba"])
+            h, _ = _apply_shared_block(shared_block, cfg, h, rope)
+            return h, None
+        body_fn = jax.checkpoint(period) if remat else period
+        x, _ = scan_util.scan(body_fn, x, params)
+        return x, jnp.float32(0.0)
+
+    raise ValueError(blk.kind)
+
+
+def init_block_cache(cfg, blk: Block, batch: int, max_seq: int, dtype,
+                     ring: bool = False):
+    def _win_seq():
+        # ring caches: sliding-window layers only keep the last W slots
+        if ring and blk.window:
+            return min(max_seq, blk.window)
+        return max_seq
+
+    if blk.kind in ("dense_uniform", "moe_uniform"):
+        if cfg.attn_impl == "mla":
+            one = init_mla_cache(cfg, batch, max_seq, dtype)
+        else:
+            one = init_attention_cache(cfg, batch, _win_seq(), dtype)
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (blk.count,) + a.shape), one)
+    if blk.kind == "gemma_period":
+        local_one = init_attention_cache(cfg, batch, _win_seq(), dtype)
+        one = init_attention_cache(cfg, batch, max_seq, dtype)
+        pl = cfg.local_global_period - 1
+        return {
+            "local": jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (blk.count, pl) + a.shape),
+                local_one),
+            "global": jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (blk.count,) + a.shape), one),
+        }
+    if blk.kind == "mamba_uniform":
+        one = init_mamba_cache(cfg, batch, dtype)
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (blk.count,) + a.shape), one)
+    if blk.kind == "zamba_period":
+        m = init_mamba_cache(cfg, batch, dtype)
+        a = init_attention_cache(cfg, batch, max_seq, dtype)
+        p = cfg.shared_attn_period
+        return {
+            "mamba": jax.tree.map(
+                lambda t: jnp.broadcast_to(t, (blk.count, p) + t.shape), m),
+            "shared": jax.tree.map(
+                lambda t: jnp.broadcast_to(t, (blk.count,) + t.shape), a),
+        }
+    raise ValueError(blk.kind)
+
+
+def apply_block_decode(
+    params, cfg, blk: Block, x, rope, cache, pos, *,
+    shared_block: Optional[Params], mla_absorbed: bool = False,
+    prefix_len: int = 0, moe_path: str = "capacity",
+):
+    """Single-token decode through the block.  Returns (x, new_cache)."""
+
+    if blk.kind in ("dense_uniform", "moe_uniform"):
+        def body(h, xs):
+            p, c = xs
+            h, _, c2 = _apply_attn_layer(
+                p, cfg, h, rope, window=blk.window, moe=blk.moe,
+                moe_path=moe_path, prefix_len=prefix_len, cache=c, pos=pos,
+                mla_absorbed=mla_absorbed)
+            return h, c2
+        x, new_cache = scan_util.scan(body, x, (params, cache))
+        return x, new_cache
+
+    if blk.kind == "gemma_period":
+        def period(h, xs):
+            p, c = xs
+
+            def local_layer(hh, xs2):
+                lp, lc = xs2
+                hh, _, lc2 = _apply_attn_layer(
+                    lp, cfg, hh, rope, window=blk.window, moe=False,
+                    moe_path="capacity", prefix_len=prefix_len,
+                    cache=lc, pos=pos)
+                return hh, lc2
+
+            h, lc2 = scan_util.scan(local_layer, h, (p["local"], c["local"]))
+            h, _, gc2 = _apply_attn_layer(
+                p["global"], cfg, h, rope, window=0, moe=False,
+                moe_path="capacity", prefix_len=prefix_len,
+                cache=c["global"], pos=pos)
+            return h, {"local": lc2, "global": gc2}
+        x, new_cache = scan_util.scan(period, x, (params, cache))
+        return x, new_cache
+
+    if blk.kind == "mamba_uniform":
+        def body(h, xs):
+            p, c = xs
+            h, c2 = _apply_mamba_layer(p, cfg, h, cache=c)
+            return h, c2
+        x, new_cache = scan_util.scan(body, x, (params, cache))
+        return x, new_cache
+
+    if blk.kind == "zamba_period":
+        def period(h, xs):
+            p, c = xs
+
+            def ml(hh, xs2):
+                lp, lc = xs2
+                hh, lc2 = _apply_mamba_layer(lp, cfg, hh, cache=lc)
+                return hh, lc2
+
+            h, mc2 = scan_util.scan(ml, h, (p["mamba"], c["mamba"]))
+            h, sc2 = _apply_shared_block(shared_block, cfg, h, rope,
+                                         cache=c["shared"], pos=pos)
+            return h, {"mamba": mc2, "shared": sc2}
+        x, new_cache = scan_util.scan(period, x, (params, cache))
+        return x, new_cache
+
+    raise ValueError(blk.kind)
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+def init_lm(key, cfg) -> Params:
+    dtype = _dtype(cfg.dtype)
+    plan = layer_plan(cfg)
+    ks = jax.random.split(key, len(plan) + 4)
+    params: Params = {
+        "embed": init_embedding(ks[0], cfg.vocab, cfg.d_model, dtype),
+        "final_norm": init_rmsnorm(cfg.d_model, dtype),
+        "blocks": [init_block(ks[2 + i], cfg, blk, dtype)
+                   for i, blk in enumerate(plan)],
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_linear(ks[1], cfg.d_model, cfg.vocab, dtype)
+    if cfg.shared_attn_period:
+        params["shared_block"] = _init_shared_block(ks[-1], cfg, dtype)
+    if cfg.n_prefix_tokens:
+        params["prefix_proj"] = init_linear(ks[-2], cfg.prefix_dim, cfg.d_model, dtype)
+    return params
+
+
+def _embed_inputs(params, cfg, tokens, prefix_embeds):
+    x = embed(params["embed"], tokens)
+    if cfg.tie_embeddings:
+        x = x * math.sqrt(cfg.d_model)  # gemma-style
+    if prefix_embeds is not None:
+        pfx = linear(params["prefix_proj"], prefix_embeds.astype(x.dtype))
+        x = jnp.concatenate([pfx, x], axis=1)
+    return x
+
+
+def _logits(params, cfg, x):
+    h = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        return h @ params["embed"]["w"].T
+    return linear(params["lm_head"], h)
+
+
+def lm_forward(
+    params, cfg, tokens, prefix_embeds=None, *,
+    moe_path: str = "capacity", remat: bool = False, last_only: bool = False,
+):
+    """Full forward (training / evaluation).  Returns (logits, aux_loss).
+
+    last_only: serving-prefill optimization — compute lm_head logits for the
+    final position only (the KV/state build work is identical; the (B,S,V)
+    logits matmul + its vocab-axis gather disappear).  See EXPERIMENTS §Perf.
+    """
+    x = _embed_inputs(params, cfg, tokens, prefix_embeds)
+    S = x.shape[1]
+    rope = rope_tables(S, cfg.hd if cfg.attn_impl != "mla" else cfg.qk_rope_head_dim,
+                       cfg.rope_theta)
+    prefix_len = cfg.n_prefix_tokens
+    shared = params.get("shared_block")
+    aux = jnp.float32(0.0)
+    for blk, bp in zip(layer_plan(cfg), params["blocks"]):
+        x, a = apply_block_train(bp, cfg, blk, x, rope, moe_path=moe_path,
+                                 prefix_len=prefix_len, shared_block=shared,
+                                 remat=remat)
+        aux = aux + a
+    if last_only:
+        x = x[:, -1:]
+    return _logits(params, cfg, x), aux
+
+
+def init_lm_cache(cfg, batch: int, max_seq: int, ring: bool = False):
+    dtype = _dtype(cfg.dtype)
+    return [init_block_cache(cfg, blk, batch, max_seq, dtype, ring=ring)
+            for blk in layer_plan(cfg)]
+
+
+def lm_decode_step(params, cfg, token, caches, pos, *, mla_absorbed=False,
+                   moe_path: str = "capacity", prefix_embeds=None):
+    """One decode step (token: (B, 1)) or a block prefill-into-cache
+    (token: (B, S), pos = start offset; for attention archs only — mamba
+    block prefill goes through `mamba_chunked(return_state=True)`).
+
+    Returns (logits (B, S, V), new_caches).
+    """
+    x = _embed_inputs(params, cfg, token, prefix_embeds)
+    rope_dim = cfg.hd if cfg.attn_impl != "mla" else cfg.qk_rope_head_dim
+    rope = rope_tables(x.shape[1], rope_dim, cfg.rope_theta, offset=pos)
+    shared = params.get("shared_block")
+    new_caches = []
+    for blk, bp, c in zip(layer_plan(cfg), params["blocks"], caches):
+        x, c2 = apply_block_decode(bp, cfg, blk, x, rope, c, pos,
+                                   shared_block=shared,
+                                   mla_absorbed=mla_absorbed,
+                                   prefix_len=cfg.n_prefix_tokens,
+                                   moe_path=moe_path)
+        new_caches.append(c2)
+    return _logits(params, cfg, x), new_caches

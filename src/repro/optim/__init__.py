@@ -1,0 +1,11 @@
+"""Optimizer substrate: AdamW (+ schedule, clipping), gradient compression."""
+from .adamw import AdamWConfig, AdamWState, init, update, cosine_lr, global_norm
+from .compress import (
+    quantize_int8, dequantize_int8, init_error_feedback, compressed_psum_mean,
+)
+
+__all__ = [
+    "AdamWConfig", "AdamWState", "init", "update", "cosine_lr", "global_norm",
+    "quantize_int8", "dequantize_int8", "init_error_feedback",
+    "compressed_psum_mean",
+]

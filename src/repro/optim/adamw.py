@@ -1,0 +1,90 @@
+"""AdamW with fp32 master weights, global-norm clipping, cosine schedule.
+
+Pure-JAX (no optax in this environment).  The optimizer state holds the fp32
+master copy plus moments; model params stay in the compute dtype (bf16 on
+TPU).  State layout is one pytree mirroring the params, which makes ZeRO
+sharding a pure sharding-spec concern (see distributed/sharding.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array        # int32 scalar
+    master: Params         # fp32 master weights
+    m: Params              # fp32 first moment
+    v: Params              # fp32 second moment
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr_peak: float = 3e-4
+    lr_min: float = 3e-5
+    warmup_steps: int = 200
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moments_dtype: str = "float32"   # 'bfloat16' halves optimizer memory
+
+
+def cosine_lr(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    warm = cfg.lr_peak * jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup_steps))
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = cfg.lr_min + 0.5 * (cfg.lr_peak - cfg.lr_min) * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init(params: Params, cfg: AdamWConfig) -> AdamWState:
+    mdt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.moments_dtype]
+    f32 = lambda p: jax.tree.map(lambda x: x.astype(jnp.float32), p)
+    zeros = lambda p: jax.tree.map(lambda x: jnp.zeros(x.shape, mdt), p)
+    return AdamWState(jnp.int32(0), f32(params), zeros(params), zeros(params))
+
+
+def global_norm(tree: Params) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def update(
+    grads: Params, state: AdamWState, cfg: AdamWConfig, compute_dtype=jnp.bfloat16
+) -> Tuple[Params, AdamWState]:
+    """Returns (new compute-dtype params, new state)."""
+    step = state.step + 1
+    lr = cosine_lr(cfg, step)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+
+    def upd(g, master, m, v):
+        g = g.astype(jnp.float32) * scale
+        m2 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v2 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        mhat = m2 / (1 - cfg.b1 ** step)
+        vhat = v2 / (1 - cfg.b2 ** step)
+        new_master = master - lr * (
+            mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * master
+        )
+        return new_master, m2.astype(m.dtype), v2.astype(v.dtype)
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_ma = treedef.flatten_up_to(state.master)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(g, ma, m, v) for g, ma, m, v in zip(flat_g, flat_ma, flat_m, flat_v)]
+    new_master = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    new_params = jax.tree.map(lambda x: x.astype(compute_dtype), new_master)
+    return new_params, AdamWState(step, new_master, new_m, new_v)

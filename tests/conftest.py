@@ -1,0 +1,36 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests must see the
+real device count (1 CPU); only launch/dryrun.py forces 512 host devices.
+"""
+import numpy as np
+import pytest
+
+
+def nx_graph(edges, n):
+    import networkx as nx
+    G = nx.Graph()
+    G.add_nodes_from(range(n))
+    G.add_edges_from(map(tuple, np.asarray(edges)))
+    return G
+
+
+@pytest.fixture(scope="session")
+def ba_graph():
+    from repro.graphgen import barabasi_albert
+    edges = barabasi_albert(200, 4, seed=11)
+    return edges, int(edges.max()) + 1
+
+
+@pytest.fixture(scope="session")
+def er_graph():
+    from repro.graphgen import erdos_renyi
+    edges = erdos_renyi(150, 450, seed=5)
+    return edges, 150
+
+
+@pytest.fixture(scope="session")
+def blocks_ba(ba_graph):
+    from repro.core import build_blocks
+    from repro.core.partition import node_random_partition
+    edges, n = ba_graph
+    assign = node_random_partition(n, 4, seed=2)
+    return build_blocks(edges, n, assign, P=4, deg_slack=48)

@@ -1,0 +1,84 @@
+"""Maximal clique maintenance vs networkx (paper §4.3)."""
+import numpy as np
+import networkx as nx
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import MaximalCliques, bron_kerbosch
+from repro.graphgen import erdos_renyi
+
+from conftest import nx_graph
+
+
+def _ref_cliques(G):
+    return set(frozenset(c) for c in nx.find_cliques(G))
+
+
+def test_static_enumeration_matches_networkx():
+    edges = erdos_renyi(40, 160, seed=2)
+    G = nx_graph(edges, 40)
+    mc = MaximalCliques(40, map(tuple, edges))
+    assert mc.cliques == _ref_cliques(G)
+
+
+def test_insert_maintenance():
+    edges = erdos_renyi(30, 80, seed=3)
+    G = nx_graph(edges, 30)
+    mc = MaximalCliques(30, map(tuple, edges))
+    rng = np.random.default_rng(0)
+    added = 0
+    while added < 25:
+        a, b = rng.integers(0, 30, 2)
+        if a == b or G.has_edge(a, b):
+            continue
+        mc.insert_edge(int(a), int(b))
+        G.add_edge(int(a), int(b))
+        added += 1
+    assert mc.cliques == _ref_cliques(G)
+    assert mc.check()
+
+
+def test_delete_maintenance():
+    edges = erdos_renyi(30, 120, seed=4)
+    G = nx_graph(edges, 30)
+    mc = MaximalCliques(30, map(tuple, edges))
+    rng = np.random.default_rng(1)
+    eds = list(G.edges())
+    for i in rng.choice(len(eds), size=25, replace=False):
+        a, b = eds[i]
+        mc.delete_edge(int(a), int(b))
+        G.remove_edge(a, b)
+    assert mc.cliques == _ref_cliques(G)
+    assert mc.check()
+
+
+def test_prefix_tree_index_consistent():
+    edges = erdos_renyi(25, 70, seed=5)
+    mc = MaximalCliques(25, map(tuple, edges))
+    from_index = set()
+    for root, cl in mc.by_root.items():
+        for c in cl:
+            assert min(c) == root
+            from_index.add(c)
+    assert from_index == mc.cliques
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_property_random_dynamics(seed):
+    rng = np.random.default_rng(seed)
+    n = 18
+    edges = erdos_renyi(n, 30, seed=seed)
+    G = nx_graph(edges, n)
+    mc = MaximalCliques(n, map(tuple, edges))
+    for _ in range(20):
+        a, b = rng.integers(0, n, 2)
+        if a == b:
+            continue
+        if G.has_edge(a, b):
+            mc.delete_edge(int(a), int(b))
+            G.remove_edge(a, b)
+        else:
+            mc.insert_edge(int(a), int(b))
+            G.add_edge(int(a), int(b))
+    assert mc.cliques == _ref_cliques(G)

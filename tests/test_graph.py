@@ -1,0 +1,98 @@
+"""GraphBlocks representation: build/update round-trips + properties."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import build_blocks, insert_edge, delete_edge, to_networkx_edges
+from repro.core.graph import has_edge
+from repro.core.partition import node_hash_partition, node_random_partition
+from repro.core.updates import (
+    sample_insertions, sample_deletions, apply_updates_host, classify)
+from repro.graphgen import erdos_renyi
+
+
+def test_build_roundtrip(ba_graph):
+    edges, n = ba_graph
+    assign = node_hash_partition(n, 4)
+    g = build_blocks(edges, n, assign, P=4)
+    canon = np.unique(np.sort(np.asarray(edges), axis=1), axis=0)
+    assert set(map(tuple, to_networkx_edges(g))) == set(map(tuple, canon))
+    assert g.n_real == n
+    assert g.m_real == len(canon)
+    deg = np.zeros(n, int)
+    np.add.at(deg, canon[:, 0], 1)
+    np.add.at(deg, canon[:, 1], 1)
+    orig = np.asarray(g.orig_id)
+    gdeg = np.asarray(g.deg)
+    for i in range(g.N):
+        if orig[i] >= 0:
+            assert gdeg[i] == deg[orig[i]]
+
+
+def test_insert_then_delete_is_identity(blocks_ba):
+    g = blocks_ba
+    ins = sample_insertions(g, 5, "inter", seed=7)
+    before = np.asarray(g.nbr).copy(), np.asarray(g.deg).copy()
+    g2 = g
+    for u, v, _ in ins:
+        g2 = insert_edge(g2, jnp.int32(u), jnp.int32(v))
+    for u, v, _ in ins:
+        assert bool(has_edge(g2, u, v))
+        g2 = delete_edge(g2, jnp.int32(u), jnp.int32(v))
+    assert (np.asarray(g2.deg) == before[1]).all()
+    # neighbor sets equal (order may differ after swap-with-last)
+    a = np.sort(np.asarray(g2.nbr), axis=1)
+    b = np.sort(before[0], axis=1)
+    assert (a == b).all()
+
+
+def test_block_capacity_overflow_raises():
+    edges = np.array([[0, 1], [1, 2]])
+    with pytest.raises(ValueError, match="overflow"):
+        build_blocks(edges, 3, np.zeros(3, int), P=2, Cn=1)
+
+
+def test_degree_capacity_raises():
+    edges = np.array([[0, 1], [0, 2], [0, 3]])
+    with pytest.raises(ValueError, match="max degree"):
+        build_blocks(edges, 4, np.zeros(4, int), P=1, Cd=2)
+
+
+def test_updates_host_validation(blocks_ba):
+    g = blocks_ba
+    dels = sample_deletions(g, 3, "intra", seed=1)
+    g2 = apply_updates_host(g, dels)
+    with pytest.raises(ValueError, match="not present"):
+        apply_updates_host(g2, [dels[0]])
+    u, v, _ = dels[0]
+    g3 = apply_updates_host(g2, [(u, v, +1)])
+    with pytest.raises(ValueError, match="already present"):
+        apply_updates_host(g3, [(u, v, +1)])
+
+
+def test_scenario_classification(blocks_ba):
+    g = blocks_ba
+    for u, v, _ in sample_insertions(g, 10, "intra", seed=3):
+        assert classify(g, u, v) == "intra"
+    for u, v, _ in sample_insertions(g, 10, "inter", seed=4):
+        assert classify(g, u, v) == "inter"
+    for u, v, _ in sample_deletions(g, 10, "inter", seed=5):
+        assert classify(g, u, v) == "inter"
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_edge_cut_matches_numpy(seed):
+    edges = erdos_renyi(40, 80, seed=seed)
+    n = 40
+    assign = node_random_partition(n, 3, seed=seed)
+    g = build_blocks(edges, n, assign, P=3)
+    canon = np.unique(np.sort(edges, axis=1), axis=0)
+    expect = sum(assign[a] != assign[b] for a, b in canon)
+    assert int(g.edge_cut()) == expect
+    boundary = np.asarray(g.is_boundary())
+    orig = np.asarray(g.orig_id)
+    for i in range(g.N):
+        if orig[i] < 0:
+            assert not boundary[i]

@@ -1,0 +1,85 @@
+"""Static distributed k-core vs networkx + h-index properties."""
+import numpy as np
+import jax.numpy as jnp
+import networkx as nx
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import build_blocks, coreness, coreness_with_stats, hindex_rows
+from repro.core.partition import (
+    node_random_partition, node_hash_partition, node_bfs_partition)
+from repro.graphgen import erdos_renyi, barabasi_albert, nearest_neighbor_graph
+
+from conftest import nx_graph
+
+
+def _check_coreness(edges, n, P, partition_fn, seed=0):
+    if partition_fn is node_bfs_partition:
+        assign = partition_fn(edges, n, P, seed)
+    else:
+        assign = partition_fn(n, P, seed)
+    g = build_blocks(edges, n, assign, P=P)
+    core = np.asarray(coreness(g))
+    ref = nx.core_number(nx_graph(edges, n))
+    orig = np.asarray(g.orig_id)
+    for i in range(g.N):
+        if orig[i] >= 0:
+            assert core[i] == ref[orig[i]], (i, core[i], ref[orig[i]])
+        else:
+            assert core[i] == 0
+
+
+@pytest.mark.parametrize("gen,args", [
+    (erdos_renyi, (120, 360)),
+    (barabasi_albert, (150, 5)),
+    (nearest_neighbor_graph, (150, 0.85)),
+])
+@pytest.mark.parametrize("pfn", [node_random_partition, node_hash_partition,
+                                 node_bfs_partition])
+def test_coreness_matches_networkx(gen, args, pfn):
+    edges = gen(*args, seed=13)
+    n = int(edges.max()) + 1
+    _check_coreness(edges, n, 4, pfn)
+
+
+def test_coreness_partition_invariance(er_graph):
+    """Coreness must not depend on the partitioning (BLADYG invariant)."""
+    edges, n = er_graph
+    results = []
+    for P in (1, 2, 8):
+        assign = node_random_partition(n, P, seed=P)
+        g = build_blocks(edges, n, assign, P=P)
+        core = np.asarray(coreness(g))
+        orig = np.asarray(g.orig_id)
+        by_orig = {orig[i]: core[i] for i in range(g.N) if orig[i] >= 0}
+        results.append(by_orig)
+    assert results[0] == results[1] == results[2]
+
+
+def test_superstep_count_reported(blocks_ba):
+    core, steps = coreness_with_stats(blocks_ba)
+    assert steps >= 1
+    assert (np.asarray(core) == np.asarray(coreness(blocks_ba))).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(-1, 12), min_size=1, max_size=12))
+def test_hindex_rows_matches_bruteforce(vals):
+    arr = jnp.asarray([vals], jnp.int32)
+    h = int(hindex_rows(arr)[0])
+    brute = 0
+    for k in range(1, len(vals) + 1):
+        if sum(v >= k for v in vals) >= k:
+            brute = k
+    assert h == brute
+
+
+def test_empty_and_isolated_nodes():
+    edges = np.array([[0, 1]])
+    g = build_blocks(edges, 5, np.zeros(5, int), P=1)
+    core = np.asarray(coreness(g))
+    orig = np.asarray(g.orig_id)
+    ref = {0: 1, 1: 1, 2: 0, 3: 0, 4: 0}
+    for i in range(g.N):
+        if orig[i] >= 0:
+            assert core[i] == ref[orig[i]]

@@ -1,0 +1,157 @@
+"""Incremental k-core maintenance: exactness vs networkx on update streams.
+
+This is the paper's central claim — maintained coreness equals
+recompute-from-scratch after every insertion/deletion.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import networkx as nx
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    build_blocks, coreness, insert_edge_maintain, delete_edge_maintain,
+    k_reachable, maintain_batch_host)
+from repro.core.partition import node_random_partition
+from repro.core.updates import sample_insertions, sample_deletions
+from repro.graphgen import barabasi_albert, erdos_renyi
+
+from conftest import nx_graph
+
+
+def _assert_core_equal(g, core, G):
+    ref = nx.core_number(G)
+    c = np.asarray(core)
+    orig = np.asarray(g.orig_id)
+    for i in range(g.N):
+        if orig[i] >= 0:
+            assert c[i] == ref[orig[i]], (orig[i], c[i], ref[orig[i]])
+
+
+@pytest.mark.parametrize("scenario", ["inter", "intra"])
+def test_insert_maintenance_exact(scenario, ba_graph):
+    edges, n = ba_graph
+    assign = node_random_partition(n, 4, seed=3)
+    g = build_blocks(edges, n, assign, P=4, deg_slack=40)
+    core = coreness(g)
+    G = nx_graph(edges, n)
+    orig = np.asarray(g.orig_id)
+    for u, v, _ in sample_insertions(g, 15, scenario, seed=8):
+        g, core, stats = insert_edge_maintain(g, core, jnp.int32(u), jnp.int32(v))
+        G.add_edge(orig[u], orig[v])
+        assert int(stats.candidates) >= 1
+    _assert_core_equal(g, core, G)
+
+
+@pytest.mark.parametrize("scenario", ["inter", "intra"])
+def test_delete_maintenance_exact(scenario, ba_graph):
+    edges, n = ba_graph
+    assign = node_random_partition(n, 4, seed=3)
+    g = build_blocks(edges, n, assign, P=4, deg_slack=40)
+    core = coreness(g)
+    G = nx_graph(edges, n)
+    orig = np.asarray(g.orig_id)
+    for u, v, _ in sample_deletions(g, 15, scenario, seed=9):
+        g, core, stats = delete_edge_maintain(g, core, jnp.int32(u), jnp.int32(v))
+        G.remove_edge(orig[u], orig[v])
+    _assert_core_equal(g, core, G)
+
+
+def test_mixed_stream_exact(er_graph):
+    edges, n = er_graph
+    assign = node_random_partition(n, 4, seed=1)
+    g = build_blocks(edges, n, assign, P=4, deg_slack=40)
+    core = coreness(g)
+    G = nx_graph(edges, n)
+    orig = np.asarray(g.orig_id)
+    ups = (sample_insertions(g, 8, "inter", seed=2)
+           + sample_deletions(g, 8, "intra", seed=3))
+    g, core, stats = maintain_batch_host(g, core, ups)
+    for (u, v, op) in ups:
+        if op > 0:
+            G.add_edge(orig[u], orig[v])
+        else:
+            G.remove_edge(orig[u], orig[v])
+    _assert_core_equal(g, core, G)
+    assert len(stats) == len(ups)
+
+
+def test_candidate_set_is_local_for_intra_updates(ba_graph):
+    """The paper's efficiency claim: intra-partition updates usually touch
+    fewer blocks than inter-partition ones (Table 2 rationale)."""
+    edges, n = ba_graph
+    assign = node_random_partition(n, 8, seed=5)
+    g = build_blocks(edges, n, assign, P=8, deg_slack=40)
+    core = coreness(g)
+
+    def avg_blocks(scenario, seed):
+        # donating maintain fns consume their input: hand them a copy
+        gg = jax.tree.map(lambda x: x.copy(), g)
+        cc = core.copy()
+        tot = 0
+        ups = sample_insertions(g, 10, scenario, seed=seed)
+        for u, v, _ in ups:
+            gg, cc, st_ = insert_edge_maintain(gg, cc, jnp.int32(u), jnp.int32(v))
+            tot += int(st_.blocks_touched)
+        return tot / len(ups)
+
+    # candidates include both endpoints; inter updates span >= 2 blocks
+    assert avg_blocks("inter", 21) >= 2.0
+
+
+def test_k_reachable_matches_bfs(er_graph):
+    edges, n = er_graph
+    assign = node_random_partition(n, 4, seed=0)
+    g = build_blocks(edges, n, assign, P=4)
+    core = coreness(g)
+    c = np.asarray(core)
+    # pick a node, BFS through its own core level in numpy
+    src = int(np.argmax(np.asarray(g.node_mask)))
+    k = int(c[src])
+    roots = jnp.zeros(g.N, bool).at[src].set(True)
+    got = np.asarray(k_reachable(g, core, roots, jnp.int32(k))[0])
+    # reference BFS
+    nbr = np.asarray(g.nbr)
+    seen = {src} if c[src] == k else set()
+    frontier = list(seen)
+    while frontier:
+        nxt = []
+        for u in frontier:
+            for v in nbr[u]:
+                if v >= 0 and v not in seen and c[v] == k:
+                    seen.add(int(v))
+                    nxt.append(int(v))
+        frontier = nxt
+    assert set(np.flatnonzero(got)) == seen
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000))
+def test_property_random_stream(seed):
+    """Random small graph + random update stream -> maintained == oracle."""
+    rng = np.random.default_rng(seed)
+    edges = erdos_renyi(30, 60, seed=seed)
+    n = 30
+    assign = node_random_partition(n, 3, seed=seed)
+    g = build_blocks(edges, n, assign, P=3, deg_slack=30)
+    core = coreness(g)
+    G = nx_graph(edges, n)
+    orig = np.asarray(g.orig_id)
+    present = set(map(tuple, np.sort(edges, 1)))
+    o2n = {orig[i]: i for i in range(g.N) if orig[i] >= 0}
+    for _ in range(12):
+        a, b = rng.integers(0, n, 2)
+        if a == b:
+            continue
+        key = (min(a, b), max(a, b))
+        u, v = o2n[a], o2n[b]
+        if key in present:
+            g, core, _ = delete_edge_maintain(g, core, jnp.int32(u), jnp.int32(v))
+            G.remove_edge(a, b)
+            present.discard(key)
+        else:
+            g, core, _ = insert_edge_maintain(g, core, jnp.int32(u), jnp.int32(v))
+            G.add_edge(a, b)
+            present.add(key)
+    _assert_core_equal(g, core, G)

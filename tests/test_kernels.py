@@ -1,0 +1,130 @@
+"""Pallas kernel sweeps: shapes x dtypes vs the pure-jnp oracles (ref.py).
+
+All kernels run in interpret mode on CPU (TPU is the compile target).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.kcore_hindex import hindex_counts as hindex_pallas
+from repro.kernels.frontier import frontier_step as frontier_pallas
+from repro.graphgen import erdos_renyi, barabasi_albert
+
+
+def _dense_adj(edges, n, dtype=np.float32):
+    a = np.zeros((n, n), dtype)
+    a[edges[:, 0], edges[:, 1]] = 1
+    a[edges[:, 1], edges[:, 0]] = 1
+    return jnp.asarray(a)
+
+
+# ---------------------------------------------------------------- hindex ----
+
+@pytest.mark.parametrize("n,m", [(64, 200), (128, 500), (200, 800), (384, 1500)])
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+def test_hindex_kernel_sweep(n, m, dtype):
+    edges = erdos_renyi(n, m, seed=n + m)
+    adj = _dense_adj(edges, n).astype(dtype)
+    deg = jnp.sum(adj > 0, axis=1).astype(jnp.int32)
+    K = int(deg.max()) + 1
+    got = ops.hindex(adj, deg, K=K)
+    want = ref.hindex_counts_ref(adj.astype(jnp.float32), deg, K)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("T", [128, 256])
+def test_hindex_tile_sizes(T):
+    n = 512
+    edges = barabasi_albert(n, 6, seed=1)
+    adj = _dense_adj(edges, n, np.float32)
+    est = jnp.asarray(np.random.default_rng(0).integers(0, 20, n), jnp.int32)
+    got = hindex_pallas(adj.astype(jnp.bfloat16), est, K=128, T=T, interpret=True)
+    want = ref.hindex_counts_ref(adj, est, 128)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_coreness_dense_kernel_path():
+    edges = barabasi_albert(300, 5, seed=9)
+    n = int(edges.max()) + 1
+    adj = _dense_adj(edges, n)
+    got = ops.coreness_dense(adj)
+    want = ref.coreness_dense_ref(adj)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # cross-check vs the ELL/system path
+    import networkx as nx
+    G = nx.Graph()
+    G.add_nodes_from(range(n))
+    G.add_edges_from(map(tuple, edges))
+    ref_core = nx.core_number(G)
+    for i in range(n):
+        assert int(got[i]) == ref_core[i]
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 60), st.integers(0, 10_000))
+def test_hindex_property_random(n, seed):
+    rng = np.random.default_rng(seed)
+    a = (rng.random((n, n)) < 0.2).astype(np.float32)
+    a = np.triu(a, 1)
+    a = a + a.T
+    est = jnp.asarray(rng.integers(0, n, n), jnp.int32)
+    adj = jnp.asarray(a)
+    got = ops.hindex(adj, est)
+    want = ref.hindex_counts_ref(adj, est, int(est.max()) + 1)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# --------------------------------------------------------------- frontier ----
+
+@pytest.mark.parametrize("n,R", [(64, 1), (130, 4), (256, 8), (300, 16)])
+def test_frontier_kernel_sweep(n, R):
+    rng = np.random.default_rng(n * R)
+    edges = erdos_renyi(n, 3 * n, seed=n)
+    adj = _dense_adj(edges, n)
+    f = jnp.asarray((rng.random((n, R)) < 0.05).astype(np.float32))
+    elig = jnp.asarray(rng.random(n) < 0.6)
+    vis = jnp.asarray(rng.random((n, R)) < 0.1)
+    got = ops.frontier_step(adj, f, elig, vis)
+    want = ref.frontier_step_ref(adj, f, elig, vis)
+    np.testing.assert_array_equal(np.asarray(got).astype(bool), np.asarray(want))
+
+
+def test_frontier_full_bfs_equals_ell_bfs():
+    """Kernelized BFS (A@f) reaches the same k-level set as the ELL path."""
+    from repro.core import build_blocks, coreness, k_reachable
+    from repro.core.partition import node_random_partition
+    edges = barabasi_albert(200, 4, seed=7)
+    n = int(edges.max()) + 1
+    g = build_blocks(edges, n, node_random_partition(n, 4, 0), P=4)
+    core = coreness(g)
+    src = int(np.argmax(np.asarray(g.node_mask)))
+    k = int(np.asarray(core)[src])
+    roots = jnp.zeros(g.N, bool).at[src].set(True)
+    want = np.asarray(k_reachable(g, core, roots, jnp.int32(k))[0])
+
+    adj = np.zeros((g.N, g.N), np.float32)
+    nbr = np.asarray(g.nbr)
+    for u in range(g.N):
+        for v in nbr[u]:
+            if v >= 0:
+                adj[u, v] = 1
+    eligible = jnp.asarray(np.asarray(core) == k) & g.node_mask
+    f = np.zeros((g.N, 1), np.float32)
+    vis = np.zeros((g.N, 1), np.int8)
+    if bool(eligible[src]):
+        f[src, 0] = 1
+        vis[src, 0] = 1
+    f = jnp.asarray(f)
+    vis = jnp.asarray(vis)
+    adjj = jnp.asarray(adj)
+    for _ in range(g.N):
+        nxt = ops.frontier_step(adjj, f, eligible, vis)
+        if not bool(jnp.any(nxt > 0)):
+            break
+        vis = jnp.maximum(vis, nxt)
+        f = nxt.astype(jnp.float32)
+    got = np.asarray(vis[:, 0]).astype(bool)
+    np.testing.assert_array_equal(got, want)

@@ -1,0 +1,226 @@
+"""Numerical consistency across execution paths (the serving-correctness
+tests): decode == forward, chunked == sequential, absorbed == naive,
+capacity == dense when capacity is ample.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models import build
+from repro.models import transformer as T
+from repro.models import encdec as ED
+from repro.models.ssm import init_mamba, mamba_chunked, mamba_sequential_ref
+from repro.models.moe import init_moe, moe_dense, moe_capacity
+
+DEC_ARCHS = ["gemma3-1b", "mamba2-370m", "zamba2-7b", "deepseek-v3-671b",
+             "internlm2-1.8b", "granite-34b", "codeqwen1.5-7b",
+             "llama4-scout-17b-a16e"]
+
+
+@pytest.mark.parametrize("name", DEC_ARCHS)
+def test_decode_matches_forward(name):
+    cfg = ARCHS[name].reduced()
+    b = build(cfg)
+    key = jax.random.PRNGKey(3)
+    params = b.init(key)
+    B, S = 2, 12
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    logits_fwd, _ = T.lm_forward(params, cfg, toks, moe_path="dense",
+                                 remat=False)
+    caches = b.cache_init(B, S)
+    dec = jax.jit(lambda p, t, c, pos: b.decode_fn(p, t, c, pos,
+                                                   moe_path="dense"))
+    outs = []
+    for t in range(S):
+        lg, caches = dec(params, toks[:, t:t + 1], caches, jnp.int32(t))
+        outs.append(lg[:, 0])
+    err = float(jnp.max(jnp.abs(logits_fwd - jnp.stack(outs, 1))))
+    scale = float(jnp.max(jnp.abs(logits_fwd))) + 1e-9
+    assert err / scale < 5e-5, (name, err, scale)
+
+
+def test_prefix_lm_prefill_then_decode():
+    cfg = ARCHS["paligemma-3b"].reduced()
+    b = build(cfg)
+    key = jax.random.PRNGKey(4)
+    params = b.init(key)
+    B, S, P = 2, 10, cfg.n_prefix_tokens
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    pfx = jax.random.normal(key, (B, P, cfg.prefix_dim)) * 0.1
+    want, _ = T.lm_forward(params, cfg, toks, prefix_embeds=pfx,
+                           moe_path="dense", remat=False)
+    want = want[:, P:]
+    caches = b.cache_init(B, P + S)
+    half = S // 2
+    lg, caches = b.decode_fn(params, toks[:, :half], caches, jnp.int32(0),
+                             prefix_embeds=pfx)
+    outs = [lg[:, P + t] for t in range(half)]
+    for t in range(half, S):
+        lg, caches = b.decode_fn(params, toks[:, t:t + 1], caches,
+                                 jnp.int32(P + t))
+        outs.append(lg[:, 0])
+    err = float(jnp.max(jnp.abs(want - jnp.stack(outs, 1))))
+    assert err < 1e-4
+
+
+def test_encdec_decode_matches_forward():
+    cfg = ARCHS["seamless-m4t-large-v2"].reduced()
+    b = build(cfg)
+    key = jax.random.PRNGKey(5)
+    params = b.init(key)
+    B, S, Sm = 2, 10, 6
+    src = jax.random.normal(key, (B, Sm, cfg.d_model)) * 0.3
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    want, _ = ED.encdec_forward(params, cfg, src, toks)
+    memory = ED.encode(params, cfg, src)
+    caches = ED.init_encdec_cache(cfg, B, S, Sm)
+    caches = ED.encdec_prime_cross(params, cfg, memory, caches)
+    outs = []
+    for t in range(S):
+        lg, caches = ED.encdec_decode_step(params, cfg, toks[:, t:t + 1],
+                                           caches, jnp.int32(t))
+        outs.append(lg[:, 0])
+    err = float(jnp.max(jnp.abs(want - jnp.stack(outs, 1))))
+    assert err < 1e-4
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16])
+def test_mamba_chunked_matches_sequential(chunk):
+    cfg = ARCHS["mamba2-370m"].reduced()
+    key = jax.random.PRNGKey(6)
+    p = init_mamba(key, cfg, jnp.float32)
+    x = jax.random.normal(key, (2, 32, cfg.d_model)) * 0.5
+    yc = mamba_chunked(p, cfg, x, chunk=chunk)
+    ys = mamba_sequential_ref(p, cfg, x)
+    np.testing.assert_allclose(np.asarray(yc), np.asarray(ys),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_mamba_prefill_state_handoff():
+    """chunked(return_state) -> decode continues exactly."""
+    cfg = ARCHS["mamba2-370m"].reduced()
+    key = jax.random.PRNGKey(7)
+    p = init_mamba(key, cfg, jnp.float32)
+    x = jax.random.normal(key, (1, 24, cfg.d_model)) * 0.5
+    full = mamba_sequential_ref(p, cfg, x)
+    pre, state = mamba_chunked(p, cfg, x[:, :16], chunk=8, return_state=True)
+    from repro.models.ssm import init_mamba_cache, mamba_step
+    cache = init_mamba_cache(cfg, 1, jnp.float32)
+    cache = {"conv": cache["conv"], "state": state}
+    # conv state needs the last (W-1) conv inputs; rebuild by stepping the
+    # last W-1 prefix tokens through a fresh cache is incorrect — instead we
+    # verify the SSM state by re-running steps 16.. with conv warmed from
+    # scratch over the full stream:
+    cache_seq = init_mamba_cache(cfg, 1, jnp.float32)
+    for t in range(16):
+        _, cache_seq = mamba_step(p, cfg, x[:, t:t + 1], cache_seq)
+    np.testing.assert_allclose(np.asarray(cache_seq["state"]),
+                               np.asarray(state), atol=3e-5, rtol=3e-5)
+    outs = []
+    for t in range(16, 24):
+        y, cache_seq = mamba_step(p, cfg, x[:, t:t + 1], cache_seq)
+        outs.append(y[:, 0])
+    np.testing.assert_allclose(np.asarray(jnp.stack(outs, 1)),
+                               np.asarray(full[:, 16:]), atol=3e-5, rtol=3e-5)
+
+
+def test_mla_absorbed_equals_naive():
+    cfg = ARCHS["deepseek-v3-671b"].reduced()
+    b = build(cfg)
+    key = jax.random.PRNGKey(8)
+    params = b.init(key)
+    B, S = 2, 10
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    res = {}
+    for absorbed in (False, True):
+        caches = b.cache_init(B, S)
+        outs = []
+        for t in range(S):
+            lg, caches = b.decode_fn(params, toks[:, t:t + 1], caches,
+                                     jnp.int32(t), moe_path="dense",
+                                     mla_absorbed=absorbed)
+            outs.append(lg[:, 0])
+        res[absorbed] = jnp.stack(outs, 1)
+    np.testing.assert_allclose(np.asarray(res[True]), np.asarray(res[False]),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_moe_capacity_equals_dense_when_ample():
+    cfg = ARCHS["llama4-scout-17b-a16e"].reduced()
+    key = jax.random.PRNGKey(9)
+    p = init_moe(key, cfg, jnp.float32)
+    x = jax.random.normal(key, (2, 16, cfg.d_model)) * 0.5
+    yd, aux_d = moe_dense(p, cfg, x)
+    yc, aux_c = moe_capacity(p, cfg, x, capacity=2 * 16 * cfg.top_k)
+    np.testing.assert_allclose(np.asarray(yd), np.asarray(yc),
+                               atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(float(aux_d), float(aux_c), rtol=1e-5)
+
+
+def test_moe_capacity_drops_overflow_deterministically():
+    cfg = ARCHS["llama4-scout-17b-a16e"].reduced()
+    key = jax.random.PRNGKey(10)
+    p = init_moe(key, cfg, jnp.float32)
+    x = jax.random.normal(key, (1, 8, cfg.d_model))
+    y1, _ = moe_capacity(p, cfg, x, capacity=1)
+    y2, _ = moe_capacity(p, cfg, x, capacity=1)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+
+def test_ring_cache_decode_matches_forward_beyond_window():
+    """Sliding-window ring caches (the gemma3 §Perf optimization) are exact
+    past the window boundary and strictly smaller."""
+    cfg = ARCHS["gemma3-1b"].reduced()
+    b = build(cfg)
+    key = jax.random.PRNGKey(11)
+    params = b.init(key)
+    B, S = 2, 48  # window is 32 in the reduced config
+    assert S > cfg.sliding_window
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    want, _ = T.lm_forward(params, cfg, toks, moe_path="dense", remat=False)
+    sizes = {}
+    for ring in (False, True):
+        caches = b.cache_init(B, S, ring=ring)
+        sizes[ring] = sum(x.size for x in jax.tree_util.tree_leaves(caches))
+        dec = jax.jit(b.decode_fn)
+        outs = []
+        for t in range(S):
+            lg, caches = dec(params, toks[:, t:t + 1], caches, jnp.int32(t))
+            outs.append(lg[:, 0])
+        got = jnp.stack(outs, 1)
+        err = float(jnp.max(jnp.abs(want - got)))
+        assert err < 1e-4, (ring, err)
+    assert sizes[True] < sizes[False]
+
+
+def test_banded_sliding_window_equals_masked_full():
+    """Banded local attention (the §Perf prefill optimization) is exact."""
+    from repro.models.layers import sdpa, sdpa_banded
+    key = jax.random.PRNGKey(12)
+    for (B, S, H, Hkv, D, W) in [(2, 64, 4, 1, 16, 16), (1, 128, 4, 2, 32, 32)]:
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (B, S, H, D))
+        k = jax.random.normal(ks[1], (B, S, Hkv, D))
+        v = jax.random.normal(ks[2], (B, S, Hkv, D))
+        full = sdpa(q, k, v, causal=True, window=W)
+        band = sdpa_banded(q, k, v, W)
+        np.testing.assert_allclose(np.asarray(full), np.asarray(band),
+                                   atol=2e-5, rtol=2e-5)
+
+
+def test_gemma3_forward_same_with_and_without_banded(monkeypatch):
+    """End-to-end: the banded path changes nothing numerically."""
+    import os
+    cfg = ARCHS["gemma3-1b"].reduced()
+    b = build(cfg)
+    key = jax.random.PRNGKey(13)
+    params = b.init(key)
+    toks = jax.random.randint(key, (2, 64), 0, cfg.vocab)  # 64 = 2x window
+    monkeypatch.setenv("REPRO_NO_BANDED", "1")
+    base, _ = T.lm_forward(params, cfg, toks, remat=False)
+    monkeypatch.delenv("REPRO_NO_BANDED")
+    opt, _ = T.lm_forward(params, cfg, toks, remat=False)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(opt),
+                               atol=2e-5, rtol=2e-5)

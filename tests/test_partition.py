@@ -1,0 +1,127 @@
+"""Partitioners + dynamic partitioning maintenance (paper §4.2, Tables 3-5)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import partition as P_
+from repro.core.partition_dynamic import (
+    initial_partition, incremental_part, naive_part, delete_edges)
+from repro.graphgen import erdos_renyi, barabasi_albert
+
+
+@pytest.fixture(scope="module")
+def graph():
+    e = barabasi_albert(300, 4, seed=3)
+    return e, int(e.max()) + 1
+
+
+def test_node_partitions_cover_and_balance(graph):
+    edges, n = graph
+    for fn in (P_.node_hash_partition, P_.node_random_partition):
+        a = fn(n, 8, seed=1)
+        assert a.shape == (n,) and a.min() >= 0 and a.max() < 8
+        sizes = np.bincount(a, minlength=8)
+        assert sizes.max() <= 2.0 * sizes.mean() + 2
+    a = P_.node_bfs_partition(edges, n, 8, seed=1)
+    assert a.min() >= 0 and a.max() < 8
+    assert np.bincount(a, minlength=8).max() <= np.ceil(n / 8) + 1
+
+
+def test_bfs_partition_cuts_fewer_edges_than_random(graph):
+    edges, n = graph
+    rnd = P_.node_random_partition(n, 8, seed=0)
+    bfs = P_.node_bfs_partition(edges, n, 8, seed=0)
+
+    def cut(a):
+        return int(sum(a[u] != a[v] for u, v in edges))
+
+    assert cut(bfs) < cut(rnd)
+
+
+@pytest.mark.parametrize("method", ["hash", "random", "dfep", "vertex_cut"])
+def test_edge_partition_covers_all_edges(graph, method):
+    edges, n = graph
+    st_, pt = initial_partition(edges, n, 8, method)
+    assert len(st_.owner) == len(edges)
+    assert st_.owner.min() >= 0 and st_.owner.max() < 8
+    assert pt >= 0.0
+    assert P_.edge_balance(st_.owner, 8) < 4.0
+
+
+def test_vertex_cut_replication_reasonable(graph):
+    """Greedy vertex-cut should replicate vertices less than random."""
+    edges, n = graph
+
+    def replication(owner):
+        parts = [set() for _ in range(n)]
+        for (u, v), p in zip(edges, owner):
+            parts[u].add(p)
+            parts[v].add(p)
+        return np.mean([len(s) for s in parts if s])
+
+    vc = P_.vertex_cut_greedy(edges, n, 8)
+    rnd = P_.edge_random_partition(edges, 8, seed=0)
+    assert replication(vc) < replication(rnd)
+
+
+def test_dfep_grows_connected_regions(graph):
+    edges, n = graph
+    owner = P_.dfep(edges, n, 4, seed=0)
+    assert (owner >= 0).all()
+    # funding growth should beat random on edge locality: endpoints of an
+    # edge tend to have other edges in the same partition
+    sizes = np.bincount(owner, minlength=4)
+    assert sizes.max() / sizes.mean() < 3.0
+
+
+@pytest.mark.parametrize("method", ["hash", "random", "dfep"])
+def test_incremental_vs_naive_consistency(graph, method):
+    """IncrementalPart keeps old assignments; NaivePart recomputes all —
+    both must remain complete/valid partitionings (paper §5.2.2 setup)."""
+    edges, n = graph
+    cut = int(0.9 * len(edges))
+    st0, _ = initial_partition(edges[:cut], n, 8, method, seed=4)
+    inc, ut_inc = incremental_part(st0, edges[cut:])
+    assert (inc.owner[:cut] == st0.owner).all(), "incremental must not move old edges"
+    assert len(inc.owner) == len(edges)
+    nv, ut_nv = naive_part(st0, edges[cut:])
+    assert len(nv.owner) == len(edges)
+
+
+def test_deletion_threshold_protocol(graph):
+    edges, n = graph
+    st0, _ = initial_partition(edges, n, 8, "random", seed=2)
+    # delete a few random edges: balanced partition stays put
+    st1, repart, _ = delete_edges(st0, np.arange(10), threshold=1.5)
+    assert not repart
+    # delete most edges of all but one partition: forces repartition
+    idx = np.flatnonzero(st1.owner != 0)
+    st2, repart2, _ = delete_edges(st1, idx[: len(idx) - 5], threshold=1.5)
+    assert repart2
+    assert P_.edge_balance(st2.owner, 8) <= P_.edge_balance(
+        np.concatenate([np.zeros(len(st2.owner) - 5, int), st1.owner[idx[-5:]]]), 8)
+
+
+def test_ub_update_prefers_neighbor_partitions(graph):
+    edges, n = graph
+    st0, _ = initial_partition(edges, n, 4, "dfep", seed=0)
+    # new edge whose endpoints' edges are mostly in one partition
+    u, v = edges[0]
+    p_u = st0.owner[(edges[:, 0] == u) | (edges[:, 1] == u)]
+    new = np.array([[u, v]])
+    got = P_.ub_update(st0.edges, st0.owner, new, n, 4)[0]
+    counts = np.bincount(p_u, minlength=4)
+    assert got in np.flatnonzero(counts >= counts.max() - 2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 99999))
+def test_property_hash_partition_deterministic(seed):
+    e = erdos_renyi(25, 40, seed=seed)
+    a1 = P_.edge_hash_partition(e, 5, seed=seed)
+    a2 = P_.edge_hash_partition(e, 5, seed=seed)
+    assert (a1 == a2).all()
+    # permutation-invariance of per-edge hash
+    perm = np.random.default_rng(seed).permutation(len(e))
+    a3 = P_.edge_hash_partition(e[perm], 5, seed=seed)
+    assert (a3 == a1[perm]).all()

@@ -1,0 +1,90 @@
+"""End-to-end system tests: the full BLADYG workflow (partition -> compute ->
+dynamic maintenance -> verify) and the training launcher with fault drills.
+"""
+import subprocess
+import sys
+from pathlib import Path
+
+import jax.numpy as jnp
+import networkx as nx
+import numpy as np
+import pytest
+
+from repro.core import (
+    build_blocks, coreness, maintain_batch_host, to_networkx_edges)
+from repro.core.partition import node_bfs_partition
+from repro.core.updates import sample_insertions, sample_deletions
+from repro.graphgen import snap_like, nearest_neighbor_graph
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def test_end_to_end_dynamic_kcore_workflow():
+    """The paper's full pipeline on a DS1-shaped synthetic graph."""
+    edges = nearest_neighbor_graph(400, u=0.85, seed=42)
+    n = int(edges.max()) + 1
+    assign = node_bfs_partition(edges, n, 8, seed=1)
+    g = build_blocks(edges, n, assign, P=8, deg_slack=40)
+    core = coreness(g)
+
+    ups = (sample_insertions(g, 10, "inter", seed=1)
+           + sample_insertions(g, 10, "intra", seed=2)
+           + sample_deletions(g, 10, "inter", seed=3)
+           + sample_deletions(g, 10, "intra", seed=4))
+    g, core, stats = maintain_batch_host(g, core, ups)
+
+    G = nx.Graph()
+    G.add_nodes_from(range(n))
+    G.add_edges_from(map(tuple, to_networkx_edges(g)))
+    ref = nx.core_number(G)
+    orig = np.asarray(g.orig_id)
+    c = np.asarray(core)
+    for i in range(g.N):
+        if orig[i] >= 0:
+            assert c[i] == ref[orig[i]]
+    # maintenance did bounded work: candidates << n on average
+    avg_cand = np.mean([int(s.candidates) for s in stats])
+    assert avg_cand < n
+
+
+def test_snap_like_generators_have_paper_shape():
+    e = snap_like("ego-Facebook", scale=0.25, seed=0)
+    n = int(e.max()) + 1
+    avg_deg = 2 * len(e) / n
+    assert 900 <= n <= 1100
+    assert avg_deg > 10  # dense social graph
+    e2 = snap_like("roadNet-CA", scale=0.002, seed=0)
+    n2 = int(e2.max()) + 1
+    assert 2 * len(e2) / n2 < 6  # sparse road network
+
+
+@pytest.mark.slow
+def test_train_launcher_with_failure_and_resume(tmp_path):
+    """Full fault drill through the CLI: train, inject failure (exit 42),
+    restart with --resume auto, finish."""
+    ck = tmp_path / "ck"
+    base = [sys.executable, "-m", "repro.launch.train",
+            "--arch", "internlm2-1.8b", "--reduced", "--batch", "2",
+            "--seq", "32", "--ckpt-dir", str(ck), "--ckpt-every", "3"]
+    env = {"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin",
+           "HOME": "/root", "JAX_PLATFORMS": "cpu"}
+    r1 = subprocess.run(base + ["--steps", "9", "--simulate-failure", "6"],
+                        capture_output=True, text=True, env=env, timeout=600)
+    assert r1.returncode == 42, r1.stderr[-2000:]
+    r2 = subprocess.run(base + ["--steps", "9", "--resume", "auto"],
+                        capture_output=True, text=True, env=env, timeout=600)
+    assert r2.returncode == 0, r2.stderr[-2000:]
+    assert "[resume] restored step 6" in r2.stdout
+
+
+@pytest.mark.slow
+def test_grad_compression_trains(tmp_path):
+    env = {"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin",
+           "HOME": "/root", "JAX_PLATFORMS": "cpu"}
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch",
+         "internlm2-1.8b", "--reduced", "--steps", "4", "--batch", "2",
+         "--seq", "32", "--grad-compression"],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "done:" in r.stdout
