@@ -1,0 +1,86 @@
+"""Kernel backend comparison: jnp vs dense-tile vs ELL block-sparse.
+
+Times full coreness through each registry backend at increasing N and emits
+the table EXPERIMENTS.md §Backends is built from.  The headline row is the
+large-N one: the dense path's (N, N) bf16 adjacency would exceed 4 GiB, so
+it is reported as INFEASIBLE while the O(N*Cd) ELL path (and the jnp
+fallback) still run.
+
+Off-TPU the Pallas backends execute in interpret mode — their absolute
+times are NOT hardware numbers (see EXPERIMENTS.md); the point of this
+table on CPU is memory feasibility + exact parity, which is asserted here
+for every size where two backends both run.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+import jax
+
+from repro.core import build_blocks, build_ell_random, coreness
+from repro.core.partition import node_random_partition
+from repro.graphgen import erdos_renyi
+from repro.kernels import ops
+
+from .common import row
+
+#: large-N where the padded dense bf16 adjacency crosses 4 GiB
+BIG_N = 46848
+
+
+def _time_coreness(g, backend: str) -> Tuple[float, jax.Array]:
+    core = coreness(g, backend=backend)  # warmup/compile
+    jax.block_until_ready(core)
+    t0 = time.perf_counter()
+    core = coreness(g, backend=backend)
+    jax.block_until_ready(core)
+    return time.perf_counter() - t0, core
+
+
+def run(seed: int = 0, smoke: bool = False) -> List[Tuple[str, float, str]]:
+    """No `full` knob: this table measures the feasibility boundary (fixed
+    sizes incl. BIG_N), not dataset scale — paper-scale runs live in the
+    dataset benches."""
+    rows = []
+    sizes = [512] if smoke else [512, 2048]
+    for n in sizes:
+        edges = erdos_renyi(n, 3 * n, seed=seed)
+        nn = int(edges.max()) + 1
+        g = build_blocks(edges, nn, node_random_partition(nn, 8, seed=seed),
+                         P=8, deg_slack=24)
+        ref_core = None
+        for b in ("jnp", "dense", "ell"):
+            dt, core = _time_coreness(g, b)
+            if ref_core is None:
+                ref_core = np.asarray(core)
+            else:
+                np.testing.assert_array_equal(ref_core, np.asarray(core))
+            rows.append(row(f"backends/N{g.N}/{b}", dt * 1e6,
+                            f"s={dt:.3f};parity=ok;dense_gib="
+                            f"{ops.dense_bytes(g.N)/2**30:.3f}"))
+    if smoke:
+        return rows
+
+    # headline: N where the dense adjacency alone would exceed 4 GiB
+    g = build_ell_random(BIG_N, seed=seed)
+    gib = ops.dense_bytes(g.N) / 2**30
+    assert gib > 4.0, gib
+    ref_core = None
+    for b in ("jnp", "ell"):
+        dt, core = _time_coreness(g, b)
+        if ref_core is None:
+            ref_core = np.asarray(core)
+        else:
+            np.testing.assert_array_equal(ref_core, np.asarray(core))
+        rows.append(row(f"backends/N{g.N}/{b}", dt * 1e6,
+                        f"s={dt:.3f};parity=ok;dense_gib={gib:.2f}"))
+    rows.append(row(f"backends/N{g.N}/dense", float("nan"),
+                    f"INFEASIBLE;dense_gib={gib:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import print_rows
+    print_rows(run())

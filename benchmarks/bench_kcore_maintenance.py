@@ -5,17 +5,24 @@ The measured quantity is the full BLADYG maintenance latency per update:
 candidate search (Theorem 1 frontier) + restricted coreness recompute +
 graph mutation, end to end, after JIT warmup — the same protocol as the
 paper (averaged over the update batch).
+
+`batch_sizes` additionally sweeps `maintain_batch`: R updates share one
+batched k-reachability search on the frontier kernels' R axis (conflicting
+candidate sets fall back to sequential, so the amortization seen here is
+data-dependent — see EXPERIMENTS.md §Batched maintenance).
 """
 from __future__ import annotations
 
 import time
-from typing import List, Tuple
+from typing import List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import coreness, insert_edge_maintain, delete_edge_maintain
+from repro.core import (
+    coreness, insert_edge_maintain, delete_edge_maintain, maintain_batch,
+)
 from repro.core.updates import sample_insertions, sample_deletions
 
 from .common import build, CI_SCALES, row
@@ -35,8 +42,8 @@ def _run_updates(g, core, ups, fn):
     return g, core, float(np.mean(times)) * 1e3  # ms
 
 
-def run(updates: int = 30, full: bool = False, seed: int = 0
-        ) -> List[Tuple[str, float, str]]:
+def run(updates: int = 30, full: bool = False, seed: int = 0,
+        batch_sizes: Sequence[int] = ()) -> List[Tuple[str, float, str]]:
     rows = []
     for ds in CI_SCALES:
         g0, edges, n = build(ds, P=8, full=full, seed=seed)
@@ -55,6 +62,27 @@ def run(updates: int = 30, full: bool = False, seed: int = 0
             g, core, adt = _run_updates(g, core, dels, delete_edge_maintain)
             rows.append(row(f"table2/{ds}/ADT/{scenario}", adt * 1e3,
                             f"ms={adt:.2f};n={n}"))
+        # batched maintenance: same insertion stream, amortized supersteps
+        for R in batch_sizes:
+            g = jax.tree.map(lambda x: x.copy(), g0)
+            core = core0.copy()
+            # warm the *batched* path (a >=2-update chunk compiles
+            # _batch_candidates/_apply_and_recompute; a 1-update chunk
+            # would only warm the sequential shortcut); sample warm extra
+            # updates so the timed stream always has `updates` entries
+            warm = max(2, R)
+            ins = sample_insertions(g, updates + warm, "inter", seed=seed + 3)
+            g, core, _ = maintain_batch(g, core, ins[:warm], R=R)
+            t0 = time.perf_counter()
+            g, core, bst = maintain_batch(g, core, ins[warm:], R=R)
+            jax.block_until_ready(core)
+            dt = time.perf_counter() - t0
+            per_ms = dt / (len(ins) - warm) * 1e3
+            rows.append(row(
+                f"table2/{ds}/batched/R{R}", per_ms * 1e3,
+                f"ms={per_ms:.2f};bfs_steps={bst.bfs_steps};"
+                f"rec_steps={bst.recompute_steps};"
+                f"batched={bst.batched_updates}/{bst.updates};n={n}"))
     return rows
 
 

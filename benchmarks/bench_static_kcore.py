@@ -1,11 +1,15 @@
 """Static distributed k-core decomposition (paper §4.1 step 1): time and
-superstep count per dataset — the workerCompute/min-H convergence path that
-the Pallas dense-tile kernel accelerates on TPU.
+superstep count per dataset — the workerCompute/min-H convergence path.
+
+The h-index primitive is obtained through the kernel backend registry;
+`backends` sweeps any subset of ("jnp", "dense", "ell").  Off-TPU the Pallas
+backends run in interpret mode (parity, not speed — see EXPERIMENTS.md
+§Backends); the jnp backend is the CPU performance row.
 """
 from __future__ import annotations
 
 import time
-from typing import List, Tuple
+from typing import List, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -15,20 +19,22 @@ from repro.core import coreness, coreness_with_stats
 from .common import build, CI_SCALES, row
 
 
-def run(full: bool = False, seed: int = 0) -> List[Tuple[str, float, str]]:
+def run(full: bool = False, seed: int = 0,
+        backends: Sequence[str] = ("jnp",)) -> List[Tuple[str, float, str]]:
     rows = []
     for ds in CI_SCALES:
         g, edges, n = build(ds, P=8, full=full, seed=seed)
-        core = coreness(g)  # compile warmup
-        jax.block_until_ready(core)
-        t0 = time.perf_counter()
-        core = coreness(g)
-        jax.block_until_ready(core)
-        dt = time.perf_counter() - t0
         _, steps = coreness_with_stats(g)
-        maxk = int(np.asarray(core).max())
-        rows.append(row(f"kcore_static/{ds}", dt * 1e6,
-                        f"s={dt:.3f};supersteps={steps};max_k={maxk};n={n}"))
+        for b in backends:
+            core = coreness(g, backend=b)  # compile warmup
+            jax.block_until_ready(core)
+            t0 = time.perf_counter()
+            core = coreness(g, backend=b)
+            jax.block_until_ready(core)
+            dt = time.perf_counter() - t0
+            maxk = int(np.asarray(core).max())
+            rows.append(row(f"kcore_static/{ds}/{b}", dt * 1e6,
+                            f"s={dt:.3f};supersteps={steps};max_k={maxk};n={n}"))
     return rows
 
 

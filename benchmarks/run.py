@@ -3,12 +3,19 @@
 Prints ``name,us_per_call,derived`` CSV rows.
 
   table2  — AIT/ADT inter- vs intra-partition k-core maintenance (Table 2)
+            plus batched-maintenance rows when --batch-sizes is given
   fig7    — incremental maintenance vs naive full recompute    (Figure 7)
   table3/4/5 — dynamic partitioning PT/UT hash/random/DFEP     (Tables 3-5)
   kcore_static — static decomposition time + supersteps        (§4.1 step 1)
+  backends — jnp vs dense vs ELL registry sweep incl. the >4 GiB dense-
+             infeasible N (EXPERIMENTS.md §Backends)
   roofline — three-term roofline per (arch × shape) from the dry-run JSONs
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--full] [--updates N]
+       [--backends jnp,dense,ell] [--batch-sizes 1,4,8] [--smoke]
+
+--smoke is the CI gate: tiny graphs, every backend, a few updates — fails
+fast on kernel parity regressions without the full table runtime.
 """
 from __future__ import annotations
 
@@ -23,25 +30,61 @@ def main() -> None:
                     help="paper-scale datasets (slow; CI default is scaled)")
     ap.add_argument("--updates", type=int, default=20)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backends", default="jnp",
+                    help="comma list for the static sweep: jnp,dense,ell")
+    ap.add_argument("--batch-sizes", default="",
+                    help="comma list of maintain_batch R values for table2")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI pass: backend parity + a few updates")
     ap.add_argument("--only", default=None,
-                    help="comma list: table2,fig7,partitioning,static,roofline")
+                    help="comma list: table2,fig7,partitioning,static,"
+                         "backends,roofline")
     args = ap.parse_args()
 
-    from . import (bench_kcore_maintenance, bench_vs_naive_kcore,
-                   bench_partitioning, bench_static_kcore, roofline)
+    from . import (bench_backends, bench_kcore_maintenance,
+                   bench_vs_naive_kcore, bench_partitioning,
+                   bench_static_kcore, roofline)
+
+    backends = tuple(b for b in args.backends.split(",") if b)
+    batch_sizes = tuple(int(r) for r in args.batch_sizes.split(",") if r)
+
+    if args.smoke:
+        # shrink the Table-1 stand-ins to a fast sanity scale and force the
+        # full backend sweep + a batched-maintenance pass
+        from . import common
+        small = {"DS1": 0.02, "ego-Facebook": 0.10}
+        common.CI_SCALES.clear()
+        common.CI_SCALES.update(small)
+        args.updates = min(args.updates, 6)
+        backends = ("jnp", "dense", "ell")
+        batch_sizes = batch_sizes or (4,)
 
     benches = {
         "table2": lambda: bench_kcore_maintenance.run(
-            updates=args.updates, full=args.full, seed=args.seed),
+            updates=args.updates, full=args.full, seed=args.seed,
+            batch_sizes=batch_sizes),
         "fig7": lambda: bench_vs_naive_kcore.run(
             updates=max(5, args.updates // 4), full=args.full, seed=args.seed),
         "partitioning": lambda: bench_partitioning.run(
             full=args.full, seed=args.seed),
-        "static": lambda: bench_static_kcore.run(full=args.full,
-                                                 seed=args.seed),
+        "static": lambda: bench_static_kcore.run(
+            full=args.full, seed=args.seed, backends=backends),
+        "backends": lambda: bench_backends.run(
+            seed=args.seed, smoke=args.smoke),
         "roofline": lambda: roofline.run(full=args.full, seed=args.seed),
     }
+    if args.smoke:
+        for excluded in ("roofline", "partitioning", "fig7"):
+            benches.pop(excluded)  # roofline needs dry-run JSONs; the rest
+            # add minutes without touching the kernel/backend surface
     only = set(args.only.split(",")) if args.only else set(benches)
+    unknown = only - set(benches)
+    if unknown:
+        raise SystemExit(
+            f"--only {','.join(sorted(unknown))}: not available"
+            + (" under --smoke" if args.smoke else "")
+            + f"; choose from {','.join(sorted(benches))}"
+        )
 
     print("name,us_per_call,derived")
     failed = 0

@@ -1,24 +1,35 @@
 """BLADYG core: block-centric processing of large dynamic graphs in JAX."""
-from .graph import GraphBlocks, build_blocks, insert_edge, delete_edge, to_networkx_edges
+from .graph import (
+    GraphBlocks, build_blocks, build_ell_random, insert_edge, delete_edge,
+    to_networkx_edges, halo_slot_counts,
+)
 from .engine import BladygEngine, BladygProgram, Mode, MessageStats
-from .kcore import coreness, coreness_with_stats, hindex_rows
+from .kcore import (
+    coreness, coreness_with_stats, coreness_via_engine, hindex_rows,
+    CorenessProgram,
+)
 from .kcore_dynamic import (
     insert_edge_maintain,
     delete_edge_maintain,
+    maintain_batch,
     maintain_batch_host,
     k_reachable,
+    k_reachable_batch,
     MaintenanceStats,
+    BatchMaintenanceStats,
 )
 from .degree import compute_degrees, maintain_degrees_insert, maintain_degrees_delete
 from .cliques import MaximalCliques, bron_kerbosch
 from . import partition, partition_dynamic, updates
 
 __all__ = [
-    "GraphBlocks", "build_blocks", "insert_edge", "delete_edge",
-    "to_networkx_edges", "BladygEngine", "BladygProgram", "Mode",
-    "MessageStats", "coreness", "coreness_with_stats", "hindex_rows",
-    "insert_edge_maintain", "delete_edge_maintain", "maintain_batch_host",
-    "k_reachable", "MaintenanceStats", "compute_degrees",
+    "GraphBlocks", "build_blocks", "build_ell_random", "insert_edge", "delete_edge",
+    "to_networkx_edges", "halo_slot_counts", "BladygEngine", "BladygProgram",
+    "Mode", "MessageStats", "coreness", "coreness_with_stats",
+    "coreness_via_engine", "hindex_rows", "CorenessProgram",
+    "insert_edge_maintain", "delete_edge_maintain", "maintain_batch",
+    "maintain_batch_host", "k_reachable", "k_reachable_batch",
+    "MaintenanceStats", "BatchMaintenanceStats", "compute_degrees",
     "maintain_degrees_insert", "maintain_degrees_delete",
     "MaximalCliques", "bron_kerbosch", "partition", "partition_dynamic",
     "updates",

@@ -67,6 +67,16 @@ class BladygProgram:
     #: modes this program is allowed to activate (checked by the engine)
     modes: Mode = Mode.LOCAL | Mode.M2W | Mode.W2M | Mode.W2W
 
+    def w2w_payload(self, g: GraphBlocks) -> Tuple[int, int]:
+        """(intra, inter) W2W halo element counts moved per superstep.
+
+        The engine cannot see inside `worker_compute` (under jit the halo
+        gather is a fused XLA collective), so programs *declare* their halo
+        payload — e.g. via `graph.halo_slot_counts` for a one-value-per-
+        neighbor-slot exchange.  Default: no W2W traffic.
+        """
+        return (0, 0)
+
     def worker_compute(
         self, g: GraphBlocks, wstate: Any, directive: Any
     ) -> Tuple[Any, Any]:
@@ -106,11 +116,14 @@ class BladygEngine:
         master = program.master_compute
         step = 0
         g = self.g
+        w2w = program.w2w_payload(g)
         while step < max_supersteps:
             wstate, summary = worker(g, wstate, directive)          # Local/W2W
             mstate, directive, halt = master(mstate, summary)        # W2M+M2W
             self.traces.append(
-                SuperstepTrace(step, program.modes, self._meter(summary, directive))
+                SuperstepTrace(
+                    step, program.modes, self._meter(summary, directive, w2w)
+                )
             )
             step += 1
             if bool(halt):
@@ -138,20 +151,39 @@ class BladygEngine:
             mstate, directive, halt = program.master_compute(mstate, summary)
             return wstate, mstate, directive, halt, it + 1
 
+        # Per-superstep message sizes are static (jit-shaped pytrees), so the
+        # trace can be reconstructed after the fused loop: abstract-eval the
+        # worker for the summary shape, use the declared W2W payload, and
+        # multiply by the executed superstep count.
+        _, summary_shape = jax.eval_shape(
+            program.worker_compute, g, wstate, directive
+        )
+        w2w = program.w2w_payload(g)
+
         wstate, mstate, _, _, n = jax.lax.while_loop(
             cond, body, (wstate, mstate, directive, jnp.bool_(False), jnp.int32(0))
         )
+        stats = self._meter(summary_shape, directive, w2w)
+        for step in range(int(jax.device_get(n))):
+            self.traces.append(SuperstepTrace(step, program.modes, stats))
         return wstate, mstate
 
     @staticmethod
-    def _meter(summary: Any, directive: Any) -> MessageStats:
+    def _meter(
+        summary: Any, directive: Any, w2w: Tuple[int, int] = (0, 0)
+    ) -> MessageStats:
         def count(tree):
             tot = 0
             for leaf in jax.tree_util.tree_leaves(tree):
                 tot += int(getattr(leaf, "size", 1))
             return tot
 
-        return MessageStats(m2w=count(directive), w2m=count(summary))
+        return MessageStats(
+            m2w=count(directive),
+            w2m=count(summary),
+            w2w_intra=int(w2w[0]),
+            w2w_inter=int(w2w[1]),
+        )
 
     def message_totals(self) -> MessageStats:
         tot = MessageStats()

@@ -182,6 +182,56 @@ def build_blocks(
     )
 
 
+def build_ell_random(
+    N: int, Cd: int = 8, seed: int = 0, m_factor: float = 2.2
+) -> GraphBlocks:
+    """ER-style random graph built straight into ELL form (single block).
+
+    Skips the edge-list + relabel path of `build_blocks` (too slow beyond
+    ~10^5 nodes) by sampling ~m_factor*N node pairs and filling neighbor
+    rows directly, dropping self-loops, duplicates, and pairs that would
+    overflow Cd.  Used by the large-N benchmarks/tests where the dense
+    (N, N) adjacency is infeasible; random structure also keeps the min-H
+    iteration's superstep count low (near-ring graphs cascade instead).
+    """
+    rng = np.random.default_rng(seed)
+    uv = rng.integers(0, N, (int(m_factor * N), 2))
+    nbr = np.full((N, Cd), PAD, np.int32)
+    deg = np.zeros(N, np.int32)
+    seen = set()
+    for u, v in uv:
+        if u == v or deg[u] >= Cd or deg[v] >= Cd:
+            continue
+        key = (min(u, v), max(u, v))
+        if key in seen:
+            continue
+        seen.add(key)
+        nbr[u, deg[u]] = v
+        deg[u] += 1
+        nbr[v, deg[v]] = u
+        deg[v] += 1
+    return GraphBlocks(
+        nbr=jnp.asarray(nbr), deg=jnp.asarray(deg),
+        node_mask=jnp.ones(N, bool),
+        orig_id=jnp.arange(N, dtype=jnp.int32), P=1, Cn=N, Cd=Cd,
+    )
+
+
+def halo_slot_counts(g: GraphBlocks) -> Tuple[int, int]:
+    """(intra, inter) valid neighbor-slot counts — the W2W halo payload.
+
+    A superstep that gathers one value per neighbor slot (e.g. the min-H
+    estimate exchange) moves exactly `intra` values inside blocks and
+    `inter` values across block boundaries.  Host-side ints, cheap enough
+    to recompute per engine run.
+    """
+    nbr = np.asarray(g.nbr)
+    valid = nbr >= 0
+    own = (np.arange(g.N) // g.Cn)[:, None]
+    inter = int(np.sum(valid & (nbr // g.Cn != own)))
+    return int(np.sum(valid)) - inter, inter
+
+
 def to_networkx_edges(g: GraphBlocks) -> np.ndarray:
     """Extract the (m, 2) edge list in *original* ids (test oracle helper)."""
     nbr = np.asarray(g.nbr)
@@ -205,11 +255,13 @@ def to_networkx_edges(g: GraphBlocks) -> np.ndarray:
 def insert_edge(g: GraphBlocks, u: jax.Array, v: jax.Array) -> GraphBlocks:
     """Insert undirected edge (u, v); ids are global padded ids.
 
-    Assumes capacity available and the edge absent (host checks in
-    `updates.apply_updates_host`; duplicates would corrupt degree counts).
+    Assumes u != v, capacity available, and the edge absent — all validated
+    at the host boundary (`updates.apply_updates_host`, which rejects
+    self-loops per the module invariant; duplicates would corrupt degree
+    counts).  The TPU path itself never branches on those conditions.
     """
     nbr = g.nbr.at[u, g.deg[u]].set(v.astype(g.nbr.dtype))
-    nbr = nbr.at[v, g.deg[v] + jnp.where(u == v, 1, 0)].set(u.astype(g.nbr.dtype))
+    nbr = nbr.at[v, g.deg[v]].set(u.astype(g.nbr.dtype))
     deg = g.deg.at[u].add(1).at[v].add(1)
     return dataclasses.replace(g, nbr=nbr, deg=deg)
 

@@ -20,11 +20,19 @@ coreness and iterating only on the rest still converges to the true
 coreness of the rest — that is what makes the incremental maintenance in
 `kcore_dynamic.py` exact.
 
+Execution: the H(est) primitive is obtained *only* through the kernel
+backend registry (`repro.kernels.ops`) — `backend="jnp"|"dense"|"ell"`
+selects pure-jnp, dense-tile Pallas, or ELL block-sparse Pallas, all exact;
+"auto" resolves by platform and graph size.  See EXPERIMENTS.md §Backends.
+
 Communication pattern (BLADYG modes): the gather of neighbor estimates is
 the W2W halo exchange; the convergence test is a W2M reduction; the loop
 continuation is the master's M2W broadcast.  Under `jit` with sharded
 arrays, XLA emits exactly those collectives (all-gather for the halo,
-all-reduce for the flag) — see EXPERIMENTS.md §Dry-run.
+all-reduce for the flag) — see EXPERIMENTS.md §Dry-run.  `CorenessProgram`
+runs the same superstep through `BladygEngine` with the halo payload
+declared, so the engine's per-mode message metering reproduces the paper's
+inter- vs intra-partition accounting.
 """
 from __future__ import annotations
 
@@ -34,60 +42,47 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from .graph import GraphBlocks
-
-
-def hindex_rows(vals: jax.Array) -> jax.Array:
-    """Row-wise h-index of a padded value matrix (PAD/-1 entries ignored).
-
-    h = max{k : at least k entries >= k}.  Computed by descending sort +
-    position compare — the pure-jnp oracle; the Pallas dense-tile kernel in
-    `repro.kernels.kcore_hindex` computes the same thing MXU-style.
-    """
-    Cd = vals.shape[-1]
-    s = -jnp.sort(-vals, axis=-1)  # descending
-    ranks = jnp.arange(1, Cd + 1, dtype=vals.dtype)
-    return jnp.sum(s >= ranks, axis=-1).astype(vals.dtype)
+from ..kernels import ops
+from ..kernels.ref import ell_gather, hindex_rows  # noqa: F401 (re-export)
+from .engine import BladygProgram, Mode
+from .graph import GraphBlocks, halo_slot_counts
 
 
 def neighbor_estimates(g: GraphBlocks, est: jax.Array) -> jax.Array:
     """Gather est over the ELL adjacency; PAD slots -> -1 (ignored by hindex)."""
-    vals = est[jnp.clip(g.nbr, 0, None)]
-    return jnp.where(g.nbr >= 0, vals, -1)
+    return ell_gather(g.nbr, est)
 
 
-def coreness_step(g: GraphBlocks, est: jax.Array, active: jax.Array) -> Tuple[jax.Array, jax.Array]:
+def coreness_step(
+    g: GraphBlocks, est: jax.Array, active: jax.Array, backend: str = "jnp"
+) -> Tuple[jax.Array, jax.Array]:
     """One BLADYG superstep on an `active` node mask; returns (est', changed)."""
-    h = hindex_rows(neighbor_estimates(g, est))
+    h = ops.hindex_blocks(g, est, backend=backend)
     new = jnp.where(active & g.node_mask, jnp.minimum(est, h), est)
     return new, jnp.any(new != est)
 
 
-@partial(jax.jit, static_argnames=("max_steps",))
-def coreness(g: GraphBlocks, max_steps: int = 10_000) -> jax.Array:
-    """Coreness of every node (0 on padding rows)."""
-    est0 = jnp.where(g.node_mask, g.deg, 0).astype(jnp.int32)
-    active = g.node_mask
+def coreness(
+    g: GraphBlocks, max_steps: int = 10_000, backend: str = "auto"
+) -> jax.Array:
+    """Coreness of every node (0 on padding rows), via the chosen backend.
 
-    def cond(c):
-        est, changed, it = c
-        return changed & (it < max_steps)
-
-    def body(c):
-        est, _, it = c
-        est2, changed = coreness_step(g, est, active)
-        return est2, changed, it + 1
-
-    est, _, _ = jax.lax.while_loop(cond, body, (est0, jnp.bool_(True), 0))
-    return est
+    The jnp path is a single fused `lax.while_loop`; the Pallas paths
+    (dense/ell) iterate the kernelized h-index host-side (one kernel launch
+    per superstep).  All backends return identical integers.
+    """
+    return ops.coreness_blocks(g, backend=backend, max_steps=max_steps)
 
 
-def coreness_with_stats(g: GraphBlocks, max_steps: int = 10_000):
+def coreness_with_stats(
+    g: GraphBlocks, max_steps: int = 10_000, backend: str = "jnp"
+):
     """Python-loop variant that reports superstep count (for benchmarks)."""
     est = jnp.where(g.node_mask, g.deg, 0).astype(jnp.int32)
+    step_fn = jax.jit(coreness_step, static_argnames=("backend",))
     steps = 0
     while steps < max_steps:
-        est2, changed = jax.jit(coreness_step)(g, est, g.node_mask)
+        est2, changed = step_fn(g, est, g.node_mask, backend=backend)
         steps += 1
         if not bool(changed):
             break
@@ -97,3 +92,43 @@ def coreness_with_stats(g: GraphBlocks, max_steps: int = 10_000):
 
 def max_coreness(g: GraphBlocks) -> int:
     return int(jax.device_get(jnp.max(coreness(g))))
+
+
+class CorenessProgram(BladygProgram):
+    """min-H coreness as an engine program (paper §4.1 step 1).
+
+    Worker state is the estimate vector; each superstep gathers the neighbor
+    halo (W2W — the payload is one estimate per valid neighbor slot, intra or
+    inter depending on the slot's block), applies min-H, and reports the
+    changed flag (W2M).  The master broadcasts continue/halt (M2W).
+    """
+
+    modes = Mode.LOCAL | Mode.M2W | Mode.W2M | Mode.W2W
+
+    def __init__(self, backend: str = "jnp"):
+        self.backend = backend
+
+    def worker_compute(self, g: GraphBlocks, est, directive):
+        new, changed = coreness_step(g, est, g.node_mask, backend=self.backend)
+        return new, changed
+
+    def master_compute(self, mstate, summary):
+        return mstate, None, jnp.logical_not(summary)
+
+    def w2w_payload(self, g: GraphBlocks) -> Tuple[int, int]:
+        # one estimate flows across every valid neighbor slot per superstep
+        return halo_slot_counts(g)
+
+
+def coreness_via_engine(g: GraphBlocks, backend: str = "jnp"):
+    """Run CorenessProgram through BladygEngine; returns (core, engine).
+
+    The engine's traces carry the metered message counts per superstep —
+    the benchmark hook for the paper's message accounting.
+    """
+    from .engine import BladygEngine
+
+    est0 = jnp.where(g.node_mask, g.deg, 0).astype(jnp.int32)
+    eng = BladygEngine(g)
+    est, _ = eng.run(CorenessProgram(backend=backend), est0, None)
+    return jnp.where(g.node_mask, est, 0), eng

@@ -26,18 +26,49 @@ cost work, never correctness).  The search runs in the *pre-update* graph
 for insertions (the theorem's "original graph G") and in the pre-update
 graph for deletions as well, then the edge is applied and the restricted
 iteration runs on the post-update graph.
+
+Both primitives (frontier hop, clamped h-index) are obtained only through
+the kernel backend registry (`repro.kernels.ops`) — the frontier kernels
+carry an R axis, which `maintain_batch` uses to run up to R updates'
+candidate searches in ONE sequence of supersteps:
+
+Batched maintenance (`maintain_batch`): R updates whose candidate sets are
+pairwise disjoint are *independent* — each update's search and restricted
+recompute never reads state the others write (the BFS only expands through
+its own k-level set, and the recompute clamps everything outside its
+candidates).  So the searches stack on the frontier R axis (supersteps =
+max instead of sum), the accepted edges apply together, and ONE joint
+clamped recompute finishes the chunk.  Conflicting updates (overlapping
+candidate sets, detected after the batched search) fall back to the exact
+sequential path.  The result is bit-identical to sequential maintenance;
+only the superstep count drops.  See EXPERIMENTS.md §Batched maintenance.
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import NamedTuple, Tuple
+from typing import List, NamedTuple, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from ..kernels import ops
 from .graph import GraphBlocks, insert_edge, delete_edge
-from .kcore import hindex_rows, neighbor_estimates
+
+
+def _validate_updates_host(g: GraphBlocks, updates) -> None:
+    """Host-boundary validation for a maintenance stream.
+
+    Replays the whole stream through `updates.apply_updates_host` (which
+    raises on self-loops, duplicate inserts, missing deletes, and degree-
+    capacity overflow) and discards the result — the jitted maintenance
+    path assumes validated input and would silently corrupt the ELL rows
+    otherwise.
+    """
+    from .updates import apply_updates_host  # deferred: sibling module
+
+    apply_updates_host(g, list(updates))
 
 
 class MaintenanceStats(NamedTuple):
@@ -48,20 +79,47 @@ class MaintenanceStats(NamedTuple):
     inter_partition: jax.Array # bool  — update crossed a block boundary
 
 
+class BatchMaintenanceStats(NamedTuple):
+    """Aggregate accounting for one `maintain_batch` stream."""
+
+    updates: int           # total updates processed
+    batches: int           # number of batched chunks executed
+    batched_updates: int   # updates that rode a batched chunk
+    sequential_updates: int  # updates deferred to the sequential path
+    bfs_steps: int         # total frontier supersteps (batched + sequential)
+    recompute_steps: int   # total clamped min-H supersteps
+    candidates: int        # total candidate-set size across updates
+
+
 def k_reachable(
     g: GraphBlocks, core: jax.Array, roots: jax.Array, k: jax.Array,
-    max_steps: int = 10_000,
+    max_steps: int = 10_000, backend: str = "jnp",
 ) -> Tuple[jax.Array, jax.Array]:
     """Mask of nodes k-reachable from `roots` (incl. roots with core==k).
 
-    Frontier expansion over the ELL adjacency: one hop per superstep; each
-    hop is a scatter-or over neighbor slots (the dense-tile Pallas kernel
-    `repro.kernels.frontier` implements the same hop as A @ f on the MXU).
-    Returns (visited mask, number of supersteps).
+    Frontier expansion over the ELL adjacency, one hop per superstep, each
+    hop dispatched through the kernel registry (`ops.frontier_blocks`).
+    Returns (visited mask (N,), number of supersteps).
     """
-    eligible = (core == k) & g.node_mask
+    visited, steps = k_reachable_batch(
+        g, core, roots[:, None], k[None], max_steps=max_steps, backend=backend
+    )
+    return visited[:, 0], steps
+
+
+def k_reachable_batch(
+    g: GraphBlocks, core: jax.Array, roots: jax.Array, ks: jax.Array,
+    max_steps: int = 10_000, backend: str = "jnp",
+) -> Tuple[jax.Array, jax.Array]:
+    """R stacked k-reachability searches sharing one superstep sequence.
+
+    roots: (N, R) bool — per-search root sets; ks: (R,) int32 — per-search
+    k level.  Column r expands only through nodes with core == ks[r].
+    Returns (visited (N, R) bool, supersteps int32 = max over searches).
+    """
+    eligible = (core[:, None] == ks[None, :]) & g.node_mask[:, None]
     visited0 = roots & eligible
-    N = g.N
+    adj = ops.dense_adj(g, backend)  # densify once, not per hop
 
     def cond(c):
         visited, frontier, it = c
@@ -69,11 +127,9 @@ def k_reachable(
 
     def body(c):
         visited, frontier, it = c
-        # scatter-or: every neighbor slot of a frontier node gets hit
-        idx = jnp.where(g.nbr >= 0, g.nbr, N).reshape(-1)
-        src = jnp.repeat(frontier, g.Cd)
-        hit = jnp.zeros(N + 1, bool).at[idx].max(src)[:N]
-        nxt = hit & eligible & ~visited
+        nxt = ops.frontier_blocks(
+            g, frontier, eligible, visited, backend=backend, adj=adj
+        )
         return visited | nxt, nxt, it + 1
 
     visited, _, steps = jax.lax.while_loop(
@@ -83,9 +139,11 @@ def k_reachable(
 
 
 def _restricted_recompute(
-    g: GraphBlocks, est0: jax.Array, cand: jax.Array, max_steps: int = 10_000
+    g: GraphBlocks, est0: jax.Array, cand: jax.Array,
+    max_steps: int = 10_000, backend: str = "jnp",
 ) -> Tuple[jax.Array, jax.Array]:
     """Clamped min-H iteration: only `cand` nodes move; returns (core', steps)."""
+    adj = ops.dense_adj(g, backend)  # densify once, not per superstep
 
     def cond(c):
         est, changed, it = c
@@ -93,7 +151,7 @@ def _restricted_recompute(
 
     def body(c):
         est, _, it = c
-        h = hindex_rows(neighbor_estimates(g, est))
+        h = ops.hindex_blocks(g, est, backend=backend, adj=adj)
         new = jnp.where(cand & g.node_mask, jnp.minimum(est, h), est)
         return new, jnp.any(new != est), it + 1
 
@@ -112,50 +170,261 @@ def _stats(g: GraphBlocks, cand, bfs_steps, rec_steps, u, v) -> MaintenanceStats
     )
 
 
-@partial(jax.jit, donate_argnums=(0,))
+@partial(jax.jit, donate_argnums=(0,), static_argnames=("backend",))
 def insert_edge_maintain(
-    g: GraphBlocks, core: jax.Array, u: jax.Array, v: jax.Array
+    g: GraphBlocks, core: jax.Array, u: jax.Array, v: jax.Array,
+    backend: str = "jnp",
 ) -> Tuple[GraphBlocks, jax.Array, MaintenanceStats]:
     """Insert (u, v) and maintain coreness.  u, v are global padded ids."""
     k = jnp.minimum(core[u], core[v])
     roots = jnp.zeros(g.N, bool).at[u].set(True).at[v].set(True)
-    cand, bfs_steps = k_reachable(g, core, roots, k)
+    cand, bfs_steps = k_reachable(g, core, roots, k, backend=backend)
     # the endpoints themselves are always candidates (their degree changed)
     cand = cand | roots
 
     g2 = insert_edge(g, u, v)
     ub = jnp.where(cand, jnp.minimum(core + 1, g2.deg), core)
-    new_core, rec_steps = _restricted_recompute(g2, ub, cand)
+    new_core, rec_steps = _restricted_recompute(g2, ub, cand, backend=backend)
     return g2, new_core, _stats(g2, cand, bfs_steps, rec_steps, u, v)
 
 
-@partial(jax.jit, donate_argnums=(0,))
+@partial(jax.jit, donate_argnums=(0,), static_argnames=("backend",))
 def delete_edge_maintain(
-    g: GraphBlocks, core: jax.Array, u: jax.Array, v: jax.Array
+    g: GraphBlocks, core: jax.Array, u: jax.Array, v: jax.Array,
+    backend: str = "jnp",
 ) -> Tuple[GraphBlocks, jax.Array, MaintenanceStats]:
     """Delete (u, v) and maintain coreness."""
     k = jnp.minimum(core[u], core[v])
     roots = jnp.zeros(g.N, bool).at[u].set(True).at[v].set(True)
-    cand, bfs_steps = k_reachable(g, core, roots, k)
+    cand, bfs_steps = k_reachable(g, core, roots, k, backend=backend)
     cand = cand | roots
 
     g2 = delete_edge(g, u, v)
     # deletion can only lower candidates, by at most 1; old core is a UB,
     # but degree may now be below it.
     ub = jnp.where(cand, jnp.minimum(core, g2.deg), core)
-    new_core, rec_steps = _restricted_recompute(g2, ub, cand)
+    new_core, rec_steps = _restricted_recompute(g2, ub, cand, backend=backend)
     return g2, new_core, _stats(g2, cand, bfs_steps, rec_steps, u, v)
 
 
 def maintain_batch_host(g, core, updates):
     """Host loop applying a sequence of (u, v, op) updates (op: +1 ins, -1 del).
 
-    Returns (g, core, list_of_stats).  This mirrors the paper's experiment:
-    per-edge maintenance latency, not batched amortization.
+    Returns (g, core, list_of_stats).  This mirrors the paper's experiment —
+    per-edge maintenance latency, not batched amortization; `maintain_batch`
+    is the amortized path.
+
+    The stream is validated here (self-loops, duplicates, missing deletes,
+    capacity) — this is a host boundary; the jitted maintain functions
+    assume validated input and would corrupt the ELL rows otherwise.
+
+    NOTE: consumes `g` via jit buffer donation (a no-op on CPU, enforced
+    on TPU/GPU) — do not reuse the argument afterwards.
     """
+    _validate_updates_host(g, updates)
     stats = []
     for u, v, op in updates:
         fn = insert_edge_maintain if op > 0 else delete_edge_maintain
         g, core, s = fn(g, jnp.asarray(core), jnp.int32(u), jnp.int32(v))
         stats.append(jax.device_get(s))
     return g, core, stats
+
+
+# ---------------------------------------------------------------------------
+# Batched maintenance: amortize supersteps over independent updates.
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("backend",))
+def _batch_candidates(
+    g: GraphBlocks, core: jax.Array, us: jax.Array, vs: jax.Array,
+    valid: jax.Array, backend: str = "jnp",
+):
+    """Candidate sets for up to R updates via one batched frontier search.
+
+    us, vs: (R,) int32 endpoint ids (arbitrary on invalid columns);
+    valid: (R,) bool.  The per-update k levels are derived on device
+    (-1 on invalid columns keeps them empty).
+    Returns (cand (N, R) bool, supersteps).
+    """
+    R = us.shape[0]
+    cols = jnp.arange(R)
+    ks = jnp.where(valid, jnp.minimum(core[us], core[vs]), -1)
+    roots = (
+        jnp.zeros((g.N, R), bool)
+        .at[us, cols].max(valid)
+        .at[vs, cols].max(valid)
+    )
+    visited, steps = k_reachable_batch(g, core, roots, ks, backend=backend)
+    # endpoints are always candidates (their degree changes)
+    return (visited | roots) & valid[None, :], steps
+
+
+def _independent_prefix(cand: np.ndarray, valid: int) -> Tuple[List[int], List[int]]:
+    """Greedily split update columns into (accepted, deferred).
+
+    A column is accepted iff its candidate set is disjoint from every
+    earlier column that was accepted — AND every earlier column that was
+    deferred.  Disjointness covers shared endpoints too (endpoints are
+    always in their own candidate set).
+
+    The deferred check is what keeps the reordering sound: deferred
+    updates are applied *after* the accepted batch, so accepting a column
+    that conflicts with an earlier deferred one would swap the order of
+    two dependent updates (e.g. an insert into a full row hoisted above
+    the delete that frees the slot).  Conflict-free pairs commute — their
+    candidate sets (which contain the endpoints) are disjoint, so they
+    touch disjoint adjacency rows.
+    """
+    overlap = cand.T.astype(np.int64) @ cand.astype(np.int64)  # (R, R)
+    accepted: List[int] = []
+    deferred: List[int] = []
+    for r in range(valid):
+        # accepted + deferred == all earlier columns, so the rule reduces
+        # to "disjoint from every earlier column"
+        if not overlap[r, :r].any():
+            accepted.append(r)
+        else:
+            deferred.append(r)
+    return accepted, deferred
+
+
+@partial(jax.jit, donate_argnums=(0,), static_argnames=("backend",))
+def _apply_and_recompute(
+    g: GraphBlocks, core: jax.Array, us: jax.Array, vs: jax.Array,
+    ops_: jax.Array, cand_ins: jax.Array, cand_del: jax.Array,
+    backend: str = "jnp",
+):
+    """Apply accepted edges and run ONE joint clamped recompute.
+
+    us, vs, ops_: (R,) fixed-width accepted updates, op = +1 insert /
+    -1 delete / 0 padding no-op — fixed R keeps the jit cache to one entry
+    regardless of how many updates each chunk accepts.
+    cand_ins / cand_del: (N,) union masks of the accepted insert / delete
+    candidate sets (disjoint by construction).
+    """
+
+    def apply_one(i, gg):
+        u, v, op = us[i], vs[i], ops_[i]
+        return jax.lax.switch(
+            jnp.clip(op + 1, 0, 2),
+            [
+                lambda q: delete_edge(q, u, v),  # op == -1
+                lambda q: q,                     # op ==  0 (padding)
+                lambda q: insert_edge(q, u, v),  # op == +1
+            ],
+            gg,
+        )
+
+    g2 = jax.lax.fori_loop(0, us.shape[0], apply_one, g)
+    # per-update upper bounds (valid because the candidate sets are disjoint:
+    # no node gets both an insert and a delete bound)
+    ub = jnp.where(cand_ins, jnp.minimum(core + 1, g2.deg), core)
+    ub = jnp.where(cand_del, jnp.minimum(core, g2.deg), ub)
+    union = cand_ins | cand_del
+    new_core, rec_steps = _restricted_recompute(g2, ub, union, backend=backend)
+    return g2, new_core, rec_steps
+
+
+def maintain_batch(
+    g: GraphBlocks,
+    core: jax.Array,
+    updates: Sequence[Tuple[int, int, int]],
+    R: int = 8,
+    backend: str = "jnp",
+) -> Tuple[GraphBlocks, jax.Array, BatchMaintenanceStats]:
+    """Maintain coreness over a stream of updates, R at a time.
+
+    Chunks of up to R (u, v, op) updates share one batched k-reachability
+    search on the frontier kernels' R axis.  Updates whose candidate sets
+    are pairwise disjoint are applied together with a single joint clamped
+    recompute; the rest fall back to exact sequential maintenance within
+    the chunk.  Final coreness is identical to sequential processing; the
+    frontier superstep count is the batch maximum instead of the sum.
+
+    The stream is validated here (self-loops, duplicates, missing deletes,
+    capacity) — this is a host boundary (the jitted update path never
+    re-validates).
+
+    NOTE: like the single-edge maintain functions, this CONSUMES `g` via
+    jit buffer donation (a no-op on CPU, enforced on TPU/GPU) — do not
+    reuse the argument afterwards; use the returned graph.
+    """
+    if R < 1:
+        raise ValueError(f"R must be >= 1, got {R}")
+    _validate_updates_host(g, updates)
+
+    core = jnp.asarray(core)
+    tot = dict(bfs=0, rec=0, cand=0, batched=0, seq=0, batches=0)
+    for start in range(0, len(updates), R):
+        chunk = list(updates[start:start + R])
+        if len(chunk) == 1:
+            g, core = _maintain_one(g, core, chunk[0], tot, backend)
+            continue
+        n = len(chunk)
+        us = np.zeros(R, np.int32)
+        vs = np.zeros(R, np.int32)
+        ops_ = np.zeros(R, np.int32)
+        us[:n] = [u for u, _, _ in chunk]
+        vs[:n] = [v for _, v, _ in chunk]
+        ops_[:n] = [op for _, _, op in chunk]
+        valid = np.zeros(R, bool)
+        valid[:n] = True
+
+        cand, steps = _batch_candidates(
+            g, core, jnp.asarray(us), jnp.asarray(vs),
+            jnp.asarray(valid), backend=backend,
+        )
+        tot["bfs"] += int(steps)
+        tot["batches"] += 1
+        cand_np = np.asarray(jax.device_get(cand))
+        accepted, deferred = _independent_prefix(cand_np, n)
+
+        if accepted:
+            acc = np.asarray(accepted)
+            ins_cols = acc[ops_[acc] > 0]
+            del_cols = acc[ops_[acc] < 0]
+            cand_ins = jnp.asarray(cand_np[:, ins_cols].any(axis=1))
+            cand_del = jnp.asarray(cand_np[:, del_cols].any(axis=1))
+            # pad accepted updates to fixed width R (op=0 no-ops) so
+            # _apply_and_recompute compiles once per R, not per |accepted|
+            us_a = np.zeros(R, np.int32)
+            vs_a = np.zeros(R, np.int32)
+            ops_a = np.zeros(R, np.int32)
+            us_a[:len(acc)] = us[acc]
+            vs_a[:len(acc)] = vs[acc]
+            ops_a[:len(acc)] = ops_[acc]
+            g, core, rec_steps = _apply_and_recompute(
+                g, core,
+                jnp.asarray(us_a), jnp.asarray(vs_a), jnp.asarray(ops_a),
+                cand_ins, cand_del, backend=backend,
+            )
+            tot["rec"] += int(rec_steps)
+            tot["cand"] += int(cand_np[:, acc].sum())
+            tot["batched"] += len(accepted)
+
+        for r in deferred:
+            g, core = _maintain_one(g, core, chunk[r], tot, backend)
+
+    stats = BatchMaintenanceStats(
+        updates=len(updates),
+        batches=tot["batches"],
+        batched_updates=tot["batched"],
+        sequential_updates=tot["seq"],
+        bfs_steps=tot["bfs"],
+        recompute_steps=tot["rec"],
+        candidates=tot["cand"],
+    )
+    return g, core, stats
+
+
+def _maintain_one(g, core, update, tot, backend):
+    """Sequential fallback for one update; accumulates into `tot`."""
+    u, v, op = update
+    fn = insert_edge_maintain if op > 0 else delete_edge_maintain
+    g, core, s = fn(g, core, jnp.int32(u), jnp.int32(v), backend=backend)
+    tot["bfs"] += int(s.bfs_steps)
+    tot["rec"] += int(s.recompute_steps)
+    tot["cand"] += int(s.candidates)
+    tot["seq"] += 1
+    return g, core

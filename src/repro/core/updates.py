@@ -98,6 +98,13 @@ def apply_updates_host(g: GraphBlocks, updates: List[Update]) -> GraphBlocks:
     deg = np.asarray(g.deg).copy()
     nbr = np.asarray(g.nbr).copy()
     for u, v, op in updates:
+        if not (0 <= u < g.N and 0 <= v < g.N):
+            # negative ids would silently wrap under numpy/jax indexing
+            raise ValueError(f"update ({u},{v}) out of range [0, {g.N})")
+        if u == v:
+            # the jitted insert_edge/delete_edge assume no self-loops (module
+            # invariant of graph.py); reject here, at the host boundary
+            raise ValueError(f"self-loop update ({u},{v}) rejected")
         if op > 0:
             if (nbr[u] == v).any():
                 raise ValueError(f"edge ({u},{v}) already present")

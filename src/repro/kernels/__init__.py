@@ -1,10 +1,20 @@
-"""Pallas TPU kernels for the BLADYG hot loops (dense-tile GraphBLAS style).
+"""Pallas TPU kernels for the BLADYG hot loops, behind a backend registry.
 
-Validated in interpret mode against the pure-jnp oracles in `ref.py`;
-TPU is the compile target (explicit BlockSpec VMEM tiling, MXU-aligned).
+Two kernel families — dense-tile (O(N^2) adjacency, MXU matmuls) and ELL
+block-sparse (O(N*Cd), consumes `GraphBlocks.nbr` tiles directly) — plus the
+pure-jnp oracles in `ref.py`.  Core code selects between them only through
+`ops` (`backend="auto"|"jnp"|"dense"|"ell"`).
+
+Validated in interpret mode against the oracles; TPU is the compile target
+(explicit BlockSpec VMEM tiling, MXU-aligned).
 """
 from . import ops, ref
 from .kcore_hindex import hindex_counts
 from .frontier import frontier_step
+from .ell_hindex import hindex_ell
+from .ell_frontier import frontier_step_ell
 
-__all__ = ["ops", "ref", "hindex_counts", "frontier_step"]
+__all__ = [
+    "ops", "ref", "hindex_counts", "frontier_step",
+    "hindex_ell", "frontier_step_ell",
+]

@@ -1,0 +1,8 @@
+"""jax version compatibility for the Pallas kernel modules.
+
+jax renamed TPUCompilerParams -> CompilerParams across releases; resolve
+the name once here so every kernel file imports the same symbol.
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

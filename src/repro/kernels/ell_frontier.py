@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: ELL block-sparse frontier expansion (batched BFS hop).
+
+Sibling of `frontier.py` (dense A @ F formulation) that consumes the
+`GraphBlocks` ELL neighbor lists directly — O(N*Cd) memory, no densification.
+One masked hop for R stacked frontiers (R concurrent updates, the batched
+maintenance axis of `core.kcore_dynamic.maintain_batch`):
+
+    next[u, r] = (exists j: f[nbr[u, j], r]) & eligible[u, r] & ~visited[u, r]
+
+For undirected ELL storage (every edge stored in both endpoint rows) the
+gather formulation above equals the scatter-or over outgoing slots, so one
+row tile of `nbr` plus the full frontier matrix in VMEM suffices.  Unlike the
+dense kernel, `eligible` here carries a per-frontier column axis — batched
+maintenance stacks updates with *different* k values, so each column has its
+own k-level eligibility mask.
+
+Grid: row tiles i; per tile a `fori_loop` over the Cd neighbor slots gathers
+frontier rows (`jnp.take`, see the lowering note in ell_hindex.py) and ORs
+them into a (T, R) register accumulator; the eligibility/visited epilogue is
+fused (no HBM round-trip).  Validated in interpret mode against
+`ref.ell_frontier_hop_ref`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from ._compat import CompilerParams as _CompilerParams
+
+
+def _ell_frontier_kernel(nbr_ref, f_ref, elig_ref, vis_ref, out_ref, *, Cd: int, T: int):
+    nbr = nbr_ref[...]  # (T, Cd) int32, -1 padded
+    f_full = f_ref[...]  # (N, R) int8
+
+    def body(j, acc):
+        idx = jax.lax.dynamic_slice(nbr, (0, j), (T, 1))  # (T, 1)
+        rows = jnp.take(f_full, jnp.clip(idx[:, 0], 0), axis=0)  # (T, R)
+        return acc | ((rows > 0) & (idx >= 0))  # (T,1) mask broadcasts over R
+
+    R = f_full.shape[1]
+    hit = jax.lax.fori_loop(0, Cd, body, jnp.zeros((T, R), jnp.bool_))
+    out_ref[...] = (
+        hit & (elig_ref[...] > 0) & ~(vis_ref[...] > 0)
+    ).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("T", "interpret"))
+def frontier_step_ell(
+    nbr: jax.Array,
+    f: jax.Array,
+    eligible: jax.Array,
+    visited: jax.Array,
+    T: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    """One masked BFS hop for R stacked frontiers over the ELL adjacency.
+
+    nbr: (N, Cd) int32 (-1 padded); f: (N, R) 0/1; eligible: (N, R) 0/1 int8
+    (per-column k-level masks); visited: (N, R) 0/1 int8.  Returns the next
+    frontier (N, R) int8.  N % T == 0, Cd % 128 == 0, R % 128 == 0 (pad via
+    the ops.py wrapper).
+    """
+    N, Cd = nbr.shape
+    R = f.shape[1]
+    assert f.shape == (N, R) and visited.shape == (N, R), (f.shape, visited.shape)
+    assert eligible.shape == (N, R), eligible.shape
+    assert N % T == 0 and Cd % 128 == 0 and R % 128 == 0, (N, T, Cd, R)
+    ni = N // T
+
+    kernel = functools.partial(_ell_frontier_kernel, Cd=Cd, T=T)
+    out = pl.pallas_call(
+        kernel,
+        grid=(ni,),
+        in_specs=[
+            pl.BlockSpec((T, Cd), lambda i: (i, 0)),  # neighbor-list row tile
+            pl.BlockSpec((N, R), lambda i: (0, 0)),   # full frontier matrix
+            pl.BlockSpec((T, R), lambda i: (i, 0)),   # eligibility tile
+            pl.BlockSpec((T, R), lambda i: (i, 0)),   # visited tile
+        ],
+        out_specs=pl.BlockSpec((T, R), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, R), jnp.int8),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",)
+        ),
+        interpret=interpret,
+    )(nbr, f.astype(jnp.int8), eligible.astype(jnp.int8), visited.astype(jnp.int8))
+    return out

@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: ELL block-sparse h-index sweep (k-core hot loop).
+
+The dense-tile kernel in `kcore_hindex.py` materializes an O(N^2) adjacency —
+fine for small blocks, fatal at BLADYG scale (the paper's blocks exist
+precisely because no worker can hold a dense view).  This kernel consumes the
+`GraphBlocks` ELL representation directly:
+
+    nbr[N, Cd] int32   padded neighbor ids (-1 = empty slot)
+    est[N]     int32   current coreness estimates
+
+Per row tile of T nodes (grid axis i):
+
+    1. gather   vals[t, j] = est[nbr[t, j]]        (PAD slots -> -1)
+    2. count    cnt[t, k]  = #{j : vals[t, j] >= k},  k = 1..K
+    3. h-index  h[t] = sum_k (cnt[t, k] >= k)       (prefix-monotone)
+
+Step 2 runs as a `fori_loop` over the Cd neighbor slots with a (T, K)
+VPU-shaped compare+accumulate per slot — the "in-register h-index sweep":
+the counts never leave the tile.  Because h(u) <= deg(u) <= Cd, thresholds
+K = Cd (padded to a lane multiple) are always sufficient, so K is static and
+the kernel is jit-safe with no data-dependent bound.
+
+Memory: O(N*Cd) for the neighbor lists + O(N) for estimates, vs O(N^2) for
+the dense path.  The full `est` vector rides along in VMEM ((1, N) int32 —
+4 bytes/node, ~200 KB at N=50k); at multi-million-N it would be chunked via
+HBM DMA, which is the planned multi-device halo-exchange extension.
+
+Validated in interpret mode against `ref.ell_hindex_ref` (the gather inside
+the kernel uses `jnp.take`, which Mosaic lowers only on recent TPU gens —
+interpret mode is the portable contract, matching `tests/test_kernels.py`).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from ._compat import CompilerParams as _CompilerParams
+
+
+def _ell_hindex_kernel(nbr_ref, est_ref, out_ref, *, K: int, Cd: int, T: int):
+    nbr = nbr_ref[...]  # (T, Cd) int32, -1 padded
+    est_row = est_ref[...]  # (1, N) int32
+    # 1. gather neighbor estimates; empty slots contribute -1 (< every k)
+    vals = jnp.where(nbr >= 0, jnp.take(est_row[0], jnp.clip(nbr, 0), axis=0), -1)
+    ks = jax.lax.broadcasted_iota(jnp.int32, (T, K), 1) + 1
+
+    # 2. threshold counts, one neighbor slot per iteration (stays in registers)
+    def body(j, cnt):
+        col = jax.lax.dynamic_slice(vals, (0, j), (T, 1))  # (T, 1)
+        return cnt + (col >= ks).astype(jnp.int32)
+
+    cnt = jax.lax.fori_loop(0, Cd, body, jnp.zeros((T, K), jnp.int32))
+
+    # 3. cnt[:, k] is non-increasing in k -> the indicator is prefix-monotone
+    #    and its sum equals the h-index.
+    out_ref[...] = jnp.sum((cnt >= ks).astype(jnp.int32), axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("K", "T", "interpret"))
+def hindex_ell(
+    nbr: jax.Array,
+    est: jax.Array,
+    K: int,
+    T: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    """h-index of every node from the ELL adjacency.
+
+    nbr: (N, Cd) int32 (-1 padded), est: (N,) int32, K: threshold bound —
+    exact iff K >= Cd (h <= deg <= Cd always).  N must be a multiple of T and
+    Cd a multiple of 128 (pad via the ops.py wrapper).
+    """
+    N, Cd = nbr.shape
+    assert est.shape == (N,), (est.shape, N)
+    assert N % T == 0, (N, T)
+    assert Cd % 128 == 0 and K % 128 == 0, (Cd, K)
+    ni = N // T
+
+    kernel = functools.partial(_ell_hindex_kernel, K=K, Cd=Cd, T=T)
+    out = pl.pallas_call(
+        kernel,
+        grid=(ni,),
+        in_specs=[
+            pl.BlockSpec((T, Cd), lambda i: (i, 0)),  # neighbor-list row tile
+            pl.BlockSpec((1, N), lambda i: (0, 0)),   # full estimate vector
+        ],
+        out_specs=pl.BlockSpec((T, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, 1), jnp.int32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",)
+        ),
+        interpret=interpret,
+    )(nbr, est[None, :])
+    return out[:, 0]

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams as _CompilerParams
+
 
 def _frontier_kernel(adj_ref, f_ref, elig_ref, vis_ref, out_ref, acc_ref, *, nj: int):
     j = pl.program_id(1)
@@ -73,7 +75,7 @@ def frontier_step(
         out_specs=pl.BlockSpec((T, R), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((N, R), jnp.int8),
         scratch_shapes=[pltpu.VMEM((T, R), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")
         ),
         interpret=interpret,

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams as _CompilerParams
+
 
 def _hindex_kernel(est_ref, adj_ref, out_ref, acc_ref, *, K: int, nj: int, T: int):
     j = pl.program_id(1)
@@ -86,7 +88,7 @@ def hindex_counts(
         out_specs=pl.BlockSpec((T, 1), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((N, 1), jnp.int32),
         scratch_shapes=[pltpu.VMEM((T, K), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")
         ),
         interpret=interpret,

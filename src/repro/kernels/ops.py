@@ -1,8 +1,30 @@
-"""Public jit'd wrappers around the Pallas kernels.
+"""Kernel backend registry: one dispatch layer for every BLADYG hot loop.
 
-Handle padding to hardware-aligned shapes, dtype conversion, platform
-dispatch (interpret=True off-TPU), and expose a dense-path coreness solver
-used by benchmarks and the optional kernel execution path in `core.kcore`.
+Three interchangeable executions of the two core graph primitives (h-index
+of neighbor estimates; masked frontier hop), all exact and bit-identical:
+
+  "jnp"    pure-jnp ELL gather/scatter (`ref.py`) — XLA everywhere, the
+           oracle, and the fastest CPU path.
+  "dense"  dense-tile Pallas kernels (`kcore_hindex.py`, `frontier.py`) —
+           materializes an O(N^2) bf16 adjacency; MXU matmuls; only viable
+           for small blocks.
+  "ell"    ELL block-sparse Pallas kernels (`ell_hindex.py`,
+           `ell_frontier.py`) — consumes `GraphBlocks.nbr` tiles directly,
+           O(N*Cd) memory; the scaling path.
+
+`backend="auto"` resolves per call: jnp off-TPU (Pallas would run in the
+interpreter), dense for blocks small enough to densify profitably
+(N <= DENSE_AUTO_MAX), ell beyond.  `core.kcore`, `core.kcore_dynamic`, and
+the benchmarks call the primitives *only* through this layer — adding a
+backend (e.g. a shard_map multi-device path) is a registry entry, not a
+core-algorithm change.
+
+The GraphBlocks-level entry points (`hindex_blocks`, `frontier_blocks`,
+`coreness_blocks`) duck-type on `.nbr`/`.deg`/`.node_mask`/`.N`/`.Cd` so this
+module never imports `repro.core` (no import cycle).
+
+The raw dense wrappers (`hindex`, `frontier_step`, `coreness_dense`) keep
+their historical adjacency-matrix signatures for the kernel sweep tests.
 """
 from __future__ import annotations
 
@@ -16,6 +38,14 @@ import numpy as np
 from . import ref
 from .kcore_hindex import hindex_counts as _hindex_pallas
 from .frontier import frontier_step as _frontier_pallas
+from .ell_hindex import hindex_ell as _hindex_ell_pallas
+from .ell_frontier import frontier_step_ell as _frontier_ell_pallas
+
+BACKENDS = ("jnp", "dense", "ell")
+
+#: auto picks the dense MXU path up to this many (padded) nodes; beyond it
+#: the O(N^2) adjacency dominates memory and ELL wins (see EXPERIMENTS.md).
+DENSE_AUTO_MAX = 4096
 
 
 def _on_tpu() -> bool:
@@ -24,6 +54,40 @@ def _on_tpu() -> bool:
 
 def _pad_to(x: int, mult: int) -> int:
     return -(-x // mult) * mult
+
+
+def _tile_dims(N: int, T: int) -> tuple:
+    """(Tp, Np): clamp the tile to the 128-lane-padded N, pad N to tiles.
+
+    Single source of truth for the node-axis padding of every kernel
+    wrapper — `dense_bytes` relies on it, so the >4 GiB infeasibility
+    estimate always matches what the dense wrapper would allocate.
+    """
+    Tp = min(T, max(128, _pad_to(N, 128)))
+    return Tp, _pad_to(N, Tp)
+
+
+def resolve_backend(backend: Optional[str], N: int) -> str:
+    """Resolve "auto" (or None) to a concrete backend name for a graph size."""
+    if backend in (None, "auto"):
+        if not _on_tpu():
+            return "jnp"  # Pallas would run interpreted — jnp is the fast path
+        return "dense" if N <= DENSE_AUTO_MAX else "ell"
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; expected one of "
+                         f"{BACKENDS + ('auto',)}")
+    return backend
+
+
+def dense_bytes(N: int, T: int = 256) -> int:
+    """HBM the dense backend would need for its padded bf16 adjacency."""
+    _, Np = _tile_dims(N, T)
+    return Np * Np * 2
+
+
+# ---------------------------------------------------------------------------
+# Dense-path wrappers (historical adjacency-matrix API, kept for the sweeps).
+# ---------------------------------------------------------------------------
 
 
 def hindex(
@@ -38,8 +102,7 @@ def hindex(
     if K is None:
         K = int(jax.device_get(jnp.max(est))) + 1
     Kp = max(128, _pad_to(K, 128))
-    Tp = min(T, max(128, _pad_to(N, 128)))
-    Np = _pad_to(N, Tp)
+    Tp, Np = _tile_dims(N, T)
     if interpret is None:
         interpret = not _on_tpu()
     adj_p = jnp.zeros((Np, Np), jnp.bfloat16).at[:N, :N].set(adj.astype(jnp.bfloat16))
@@ -59,8 +122,7 @@ def frontier_step(
     """Masked BFS hop; pads N to tile and R to 128 lanes."""
     N, R = f.shape
     Rp = max(128, _pad_to(R, 128))
-    Tp = min(T, max(128, _pad_to(N, 128)))
-    Np = _pad_to(N, Tp)
+    Tp, Np = _tile_dims(N, T)
     if interpret is None:
         interpret = not _on_tpu()
     adj_p = jnp.zeros((Np, Np), jnp.bfloat16).at[:N, :N].set(adj.astype(jnp.bfloat16))
@@ -88,6 +150,169 @@ def coreness_dense(
     for _ in range(max_steps):
         h = hindex(adj, est, K=K, T=T, interpret=interpret)
         new = jnp.minimum(est, h)
+        if bool(jax.device_get(jnp.all(new == est))):
+            break
+        est = new
+    return est
+
+
+# ---------------------------------------------------------------------------
+# ELL-path wrappers (pad N to tile, Cd and R to 128 lanes).
+# ---------------------------------------------------------------------------
+
+
+def hindex_ell(
+    nbr: jax.Array,
+    est: jax.Array,
+    T: int = 256,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """h-index per node via the ELL block-sparse kernel — O(N*Cd) memory."""
+    N, Cd = nbr.shape
+    Cdp = max(128, _pad_to(Cd, 128))
+    Tp, Np = _tile_dims(N, T)
+    if interpret is None:
+        interpret = not _on_tpu()
+    nbr_p = jnp.full((Np, Cdp), -1, jnp.int32).at[:N, :Cd].set(nbr.astype(jnp.int32))
+    est_p = jnp.full((Np,), -1, jnp.int32).at[:N].set(est.astype(jnp.int32))
+    h = _hindex_ell_pallas(nbr_p, est_p, K=Cdp, T=Tp, interpret=interpret)
+    return h[:N]
+
+
+def frontier_step_ell(
+    nbr: jax.Array,
+    f: jax.Array,
+    eligible: jax.Array,
+    visited: jax.Array,
+    T: int = 256,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Masked BFS hop over the ELL adjacency; eligible is (N, R) per-column."""
+    N, Cd = nbr.shape
+    R = f.shape[1]
+    Cdp = max(128, _pad_to(Cd, 128))
+    Rp = max(128, _pad_to(R, 128))
+    Tp, Np = _tile_dims(N, T)
+    if interpret is None:
+        interpret = not _on_tpu()
+    nbr_p = jnp.full((Np, Cdp), -1, jnp.int32).at[:N, :Cd].set(nbr.astype(jnp.int32))
+    f_p = jnp.zeros((Np, Rp), jnp.int8).at[:N, :R].set(f.astype(jnp.int8))
+    e_p = jnp.zeros((Np, Rp), jnp.int8).at[:N, :R].set(eligible.astype(jnp.int8))
+    v_p = jnp.zeros((Np, Rp), jnp.int8).at[:N, :R].set(visited.astype(jnp.int8))
+    nxt = _frontier_ell_pallas(nbr_p, f_p, e_p, v_p, T=Tp, interpret=interpret)
+    return nxt[:N, :R]
+
+
+# ---------------------------------------------------------------------------
+# GraphBlocks-level dispatch — the only entry points core code may use.
+# ---------------------------------------------------------------------------
+
+
+def hindex_blocks(
+    g,  # GraphBlocks (duck-typed: .nbr, .N, .Cd)
+    est: jax.Array,
+    backend: str = "auto",
+    interpret: Optional[bool] = None,
+    adj: Optional[jax.Array] = None,
+) -> jax.Array:
+    """h-index of neighbor estimates for every node, via the chosen backend.
+
+    All backends are exact and identical (h <= deg <= Cd, so the static
+    threshold bound K = Cd keeps the kernel paths jit-safe).  Loops that
+    call the dense backend repeatedly should densify once and pass `adj`
+    (see `dense_adj`) instead of paying the O(N^2) scatter per call.
+    """
+    b = resolve_backend(backend, g.N)
+    if b == "jnp":
+        return ref.ell_hindex_ref(g.nbr, est).astype(jnp.int32)
+    if b == "ell":
+        return hindex_ell(g.nbr, est, interpret=interpret)
+    if adj is None:
+        adj = ref.ell_to_dense(g.nbr, g.N)
+    return hindex(adj, est, K=g.Cd + 1, interpret=interpret)
+
+
+def _eligible_cols(eligible: jax.Array, R: int) -> jax.Array:
+    """Broadcast a shared (N,) eligibility mask to the (N, R) column form."""
+    if eligible.ndim == 1:
+        return jnp.broadcast_to(eligible[:, None], (eligible.shape[0], R))
+    return eligible
+
+
+def dense_adj(g, backend: str) -> Optional[jax.Array]:
+    """Densify once for a loop over dense-backend calls; None otherwise."""
+    if resolve_backend(backend, g.N) == "dense":
+        return ref.ell_to_dense(g.nbr, g.N)
+    return None
+
+
+def frontier_blocks(
+    g,  # GraphBlocks (duck-typed)
+    f: jax.Array,
+    eligible: jax.Array,
+    visited: jax.Array,
+    backend: str = "auto",
+    interpret: Optional[bool] = None,
+    adj: Optional[jax.Array] = None,
+) -> jax.Array:
+    """One masked BFS hop for R stacked frontiers, via the chosen backend.
+
+    f, visited: (N, R) bool; eligible: (N,) shared or (N, R) per-column.
+    Returns the next frontier as (N, R) bool.  As with `hindex_blocks`,
+    pass a precomputed `adj` when looping over dense-backend hops.
+    """
+    R = f.shape[1]
+    elig = _eligible_cols(eligible, R)
+    b = resolve_backend(backend, g.N)
+    if b == "jnp":
+        return ref.ell_frontier_hop_ref(g.nbr, f, elig, visited)
+    if b == "ell":
+        return frontier_step_ell(g.nbr, f, elig, visited, interpret=interpret) > 0
+    # dense kernel takes a shared (N,) eligibility; fold the per-column mask
+    # into `visited` (a node ineligible for column r can never enter it).
+    if adj is None:
+        adj = ref.ell_to_dense(g.nbr, g.N)
+    vis_aug = visited.astype(bool) | ~elig.astype(bool)
+    ones = jnp.ones((g.N,), jnp.int8)
+    return frontier_step(adj, f, ones, vis_aug, interpret=interpret) > 0
+
+
+@functools.partial(jax.jit, static_argnames=("max_steps",))
+def _coreness_blocks_jnp(g, max_steps: int = 10_000) -> jax.Array:
+    est0 = jnp.where(g.node_mask, g.deg, 0).astype(jnp.int32)
+
+    def cond(c):
+        est, changed, it = c
+        return changed & (it < max_steps)
+
+    def body(c):
+        est, _, it = c
+        h = ref.ell_hindex_ref(g.nbr, est)
+        new = jnp.where(g.node_mask, jnp.minimum(est, h), est)
+        return new, jnp.any(new != est), it + 1
+
+    est, _, _ = jax.lax.while_loop(cond, body, (est0, jnp.bool_(True), 0))
+    return est
+
+
+def coreness_blocks(
+    g,  # GraphBlocks (duck-typed)
+    backend: str = "auto",
+    max_steps: int = 10_000,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Full min-H coreness of every node (0 on padding rows), any backend."""
+    b = resolve_backend(backend, g.N)
+    if b == "jnp":
+        return _coreness_blocks_jnp(g, max_steps)
+    est = jnp.where(g.node_mask, g.deg, 0).astype(jnp.int32)
+    adj = ref.ell_to_dense(g.nbr, g.N) if b == "dense" else None
+    for _ in range(max_steps):
+        if b == "dense":
+            h = hindex(adj, est, K=g.Cd + 1, interpret=interpret)
+        else:
+            h = hindex_ell(g.nbr, est, interpret=interpret)
+        new = jnp.where(g.node_mask, jnp.minimum(est, h), est)
         if bool(jax.device_get(jnp.all(new == est))):
             break
         est = new

@@ -1,8 +1,10 @@
 """Pure-jnp oracles for the Pallas kernels.
 
 These are the semantic ground truth: kernels must `assert_allclose` against
-them for every shape/dtype in the sweep tests.  They are also the fallback
-execution path on platforms without Pallas support.
+them for every shape/dtype in the sweep tests.  They are also the "jnp"
+backend of the `ops.py` registry — the fallback execution path on platforms
+without Pallas support.  Nothing here imports from `repro.core`; the ELL
+oracles take the raw `nbr` array so they stay dependency-free.
 """
 from __future__ import annotations
 
@@ -54,6 +56,53 @@ def coreness_dense_ref(adj: jax.Array, max_steps: int = 10_000) -> jax.Array:
 
     est, _, _ = jax.lax.while_loop(cond, body, (deg, jnp.bool_(True), 0))
     return est
+
+
+# ---------------------------------------------------------------------------
+# ELL (block-sparse) oracles — the jnp backend of the ops.py registry.
+# ---------------------------------------------------------------------------
+
+
+def hindex_rows(vals: jax.Array) -> jax.Array:
+    """Row-wise h-index of a padded value matrix (PAD/-1 entries ignored).
+
+    h = max{k : at least k entries >= k}.  Computed by descending sort +
+    position compare; the Pallas kernels (`kcore_hindex`, `ell_hindex`)
+    compute the same thing via threshold counting.
+    """
+    Cd = vals.shape[-1]
+    s = -jnp.sort(-vals, axis=-1)  # descending
+    ranks = jnp.arange(1, Cd + 1, dtype=vals.dtype)
+    return jnp.sum(s >= ranks, axis=-1).astype(vals.dtype)
+
+
+def ell_gather(nbr: jax.Array, est: jax.Array) -> jax.Array:
+    """Gather est over the ELL adjacency; PAD slots -> -1 (ignored by hindex)."""
+    vals = est[jnp.clip(nbr, 0, None)]
+    return jnp.where(nbr >= 0, vals, -1)
+
+
+def ell_hindex_ref(nbr: jax.Array, est: jax.Array) -> jax.Array:
+    """h-index of every node over the ELL adjacency (gather + row h-index)."""
+    return hindex_rows(ell_gather(nbr, est))
+
+
+def ell_frontier_hop_ref(
+    nbr: jax.Array, f: jax.Array, eligible: jax.Array, visited: jax.Array
+) -> jax.Array:
+    """One masked BFS hop for R stacked frontiers over the ELL adjacency.
+
+    nbr: (N, Cd) int32 (-1 padded); f, visited: (N, R) bool;
+    eligible: (N, R) bool (per-frontier k-level masks).
+    next[u, r] = (exists j: f[nbr[u, j], r]) & eligible[u, r] & ~visited[u, r]
+    — the gather formulation; equal to the scatter-or for undirected ELL
+    storage (each edge stored in both endpoint rows).
+    """
+    N = nbr.shape[0]
+    f_pad = jnp.concatenate([f.astype(bool), jnp.zeros((1, f.shape[1]), bool)])
+    idx = jnp.where(nbr >= 0, nbr, N)  # PAD -> the all-False sentinel row
+    hit = jnp.any(f_pad[idx], axis=1)  # (N, Cd, R) -> (N, R)
+    return hit & eligible.astype(bool) & ~visited.astype(bool)
 
 
 def ell_to_dense(nbr: jax.Array, N: int) -> jax.Array:

@@ -1,0 +1,66 @@
+"""Hypothesis compatibility shim.
+
+Uses the real ``hypothesis`` when installed (``pip install -e .[dev]``).
+Otherwise provides a deterministic mini-driver so the property tests still
+run (with a bounded number of seeded examples) instead of failing at
+collection — the container image does not ship hypothesis.
+"""
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import numpy as _np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """A sampler: rng -> example value."""
+
+        def __init__(self, sample):
+            self.sample = sample
+
+    class st:  # noqa: N801 - mimics `hypothesis.strategies` namespace
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1))
+            )
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def sample(rng):
+                size = int(rng.integers(min_size, max_size + 1))
+                return [elements.sample(rng) for _ in range(size)]
+
+            return _Strategy(sample)
+
+    def settings(max_examples=20, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    _FALLBACK_CAP = 10  # keep the no-hypothesis path fast in CI
+
+    def given(*strategies):
+        def deco(fn):
+            # NOTE: no functools.wraps — copying fn's signature would make
+            # pytest resolve the strategy-bound parameters as fixtures.
+            def wrapper():
+                # @settings may wrap *this* function afterwards; read at
+                # call time so the decorator order in tests keeps working.
+                n = getattr(wrapper, "_max_examples", None) or getattr(
+                    fn, "_max_examples", _FALLBACK_CAP
+                )
+                rng = _np.random.default_rng(0)
+                for _ in range(min(n, _FALLBACK_CAP)):
+                    vals = [s.sample(rng) for s in strategies]
+                    fn(*vals)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+
+        return deco

@@ -1,0 +1,280 @@
+"""Cross-backend parity + batched maintenance (the dispatch-layer contract).
+
+Every backend of the kernel registry (jnp / dense Pallas / ELL Pallas, all
+interpret mode on CPU) must produce bit-identical h-index, frontier, and
+coreness results; the ELL path must run at sizes where the dense O(N^2)
+adjacency is infeasible; `maintain_batch` must match sequential maintenance
+exactly while spending fewer frontier supersteps on independent updates.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    build_blocks, build_ell_random, coreness, delete_edge_maintain,
+    insert_edge_maintain, maintain_batch,
+)
+from repro.core.partition import node_random_partition
+from repro.core.updates import sample_insertions, sample_deletions
+from repro.graphgen import erdos_renyi, barabasi_albert
+from repro.kernels import ops
+
+ALL_BACKENDS = ("jnp", "dense", "ell")
+
+
+def _blocks(seed, n=120, m=360, P=4):
+    edges = erdos_renyi(n, m, seed=seed)
+    n = int(edges.max()) + 1
+    return build_blocks(edges, n, node_random_partition(n, P, seed=seed), P=P,
+                        deg_slack=24)
+
+
+# ------------------------------------------------------------- dispatch ----
+
+def test_resolve_backend():
+    assert ops.resolve_backend("ell", N=10) == "ell"
+    assert ops.resolve_backend("auto", N=10) in ops.BACKENDS
+    with pytest.raises(ValueError):
+        ops.resolve_backend("cuda", N=10)
+
+
+def test_auto_is_jnp_off_tpu():
+    # CI runs on CPU: Pallas would execute interpreted, so auto -> jnp
+    if jax.devices()[0].platform != "tpu":
+        assert ops.resolve_backend("auto", N=10_000_000) == "jnp"
+
+
+# --------------------------------------------------------------- parity ----
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_coreness_parity_across_backends(seed):
+    """ELL-backend coreness matches the jnp oracle exactly (3 random graphs)."""
+    g = _blocks(seed)
+    cores = {
+        b: np.asarray(coreness(g, backend=b)) for b in ALL_BACKENDS
+    }
+    np.testing.assert_array_equal(cores["jnp"], cores["dense"])
+    np.testing.assert_array_equal(cores["jnp"], cores["ell"])
+
+
+@pytest.mark.parametrize("seed", [3, 4])
+def test_hindex_parity_across_backends(seed):
+    g = _blocks(seed)
+    rng = np.random.default_rng(seed)
+    est = jnp.asarray(rng.integers(0, 15, g.N), jnp.int32)
+    h = {b: np.asarray(ops.hindex_blocks(g, est, backend=b, interpret=True))
+         for b in ALL_BACKENDS}
+    np.testing.assert_array_equal(h["jnp"], h["dense"])
+    np.testing.assert_array_equal(h["jnp"], h["ell"])
+
+
+@pytest.mark.parametrize("R", [1, 5])
+def test_frontier_parity_across_backends(R):
+    g = _blocks(7, n=150, m=500)
+    rng = np.random.default_rng(R)
+    f = jnp.asarray(rng.random((g.N, R)) < 0.05)
+    elig = jnp.asarray(rng.random((g.N, R)) < 0.6)  # per-column masks
+    vis = jnp.asarray(rng.random((g.N, R)) < 0.1)
+    nxt = {b: np.asarray(ops.frontier_blocks(g, f, elig, vis, backend=b,
+                                             interpret=True))
+           for b in ALL_BACKENDS}
+    np.testing.assert_array_equal(nxt["jnp"], nxt["dense"])
+    np.testing.assert_array_equal(nxt["jnp"], nxt["ell"])
+
+
+def test_frontier_shared_eligibility_broadcasts():
+    g = _blocks(9)
+    rng = np.random.default_rng(9)
+    f = jnp.asarray(rng.random((g.N, 3)) < 0.05)
+    elig1 = jnp.asarray(rng.random(g.N) < 0.5)          # shared (N,)
+    vis = jnp.zeros((g.N, 3), bool)
+    a = ops.frontier_blocks(g, f, elig1, vis, backend="jnp")
+    b = ops.frontier_blocks(g, f, jnp.broadcast_to(elig1[:, None], (g.N, 3)),
+                            vis, backend="jnp")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ----------------------------------------------- ELL beyond dense scale ----
+
+@pytest.mark.slow
+def test_ell_runs_where_dense_is_infeasible():
+    """The tentpole claim: O(N*Cd) kernels at an N whose dense (N, N)
+    adjacency would exceed 4 GiB (same graph the backends benchmark times)."""
+    g = build_ell_random(46848, Cd=8, seed=0)
+    assert ops.dense_bytes(g.N) > 4 * 2**30  # dense bf16 adjacency > 4 GiB
+    core_jnp = coreness(g, backend="jnp")
+    core_ell = coreness(g, backend="ell")  # interpret mode on CPU
+    np.testing.assert_array_equal(np.asarray(core_jnp), np.asarray(core_ell))
+
+
+# ----------------------------------------------------- batched updates ----
+
+def _community_graph(n_comm=8, sz=40, seed=0):
+    """Disjoint communities -> naturally independent candidate sets."""
+    edges = np.concatenate(
+        [erdos_renyi(sz, 100, seed=seed + b) + b * sz for b in range(n_comm)]
+    )
+    n = n_comm * sz
+    g = build_blocks(edges, n, np.arange(n) // sz, P=n_comm, deg_slack=32)
+    return g
+
+
+def _one_insert_per_community(g, seed=0):
+    rng = np.random.default_rng(seed)
+    nbr = np.asarray(g.nbr)
+    mask = np.asarray(g.node_mask)
+    ups = []
+    for b in range(g.P):
+        ids = np.flatnonzero(mask & (np.arange(g.N) // g.Cn == b))
+        while True:
+            u, v = rng.choice(ids, 2, replace=False)
+            if not (nbr[u] == v).any():
+                ups.append((int(u), int(v), +1))
+                break
+    return ups
+
+
+def test_maintain_batch_matches_sequential_with_fewer_supersteps():
+    """Acceptance: R=8 batch == 8 sequential inserts, fewer frontier steps."""
+    g0 = _community_graph()
+    core0 = coreness(g0)
+    ups = _one_insert_per_community(g0, seed=1)
+    assert len(ups) == 8
+
+    gs = jax.tree.map(lambda x: x.copy(), g0)
+    cs = core0.copy()
+    seq_bfs = 0
+    for u, v, _ in ups:
+        gs, cs, st = insert_edge_maintain(gs, cs, jnp.int32(u), jnp.int32(v))
+        seq_bfs += int(st.bfs_steps)
+
+    gb, cb, bst = maintain_batch(
+        jax.tree.map(lambda x: x.copy(), g0), core0.copy(), ups, R=8
+    )
+    np.testing.assert_array_equal(np.asarray(cs), np.asarray(cb))
+    assert bst.batched_updates == 8 and bst.sequential_updates == 0
+    assert bst.bfs_steps < seq_bfs, (bst.bfs_steps, seq_bfs)
+    # graphs end identical too
+    np.testing.assert_array_equal(np.asarray(gs.deg), np.asarray(gb.deg))
+
+
+def test_maintain_batch_conflicting_updates_fall_back_exactly():
+    """On a hub graph candidate sets overlap: the batch must serialize those
+    updates and still produce the exact sequential result."""
+    import networkx as nx
+    edges = barabasi_albert(150, 4, seed=3)
+    n = int(edges.max()) + 1
+    g0 = build_blocks(edges, n, node_random_partition(n, 4, seed=0), P=4,
+                      deg_slack=40)
+    core0 = coreness(g0)
+    ups = sample_insertions(g0, 8, "inter", seed=5)
+
+    gb, cb, bst = maintain_batch(
+        jax.tree.map(lambda x: x.copy(), g0), core0.copy(), ups, R=8
+    )
+    assert bst.updates == 8
+    assert bst.batched_updates + bst.sequential_updates == 8
+
+    G = nx.Graph()
+    orig = np.asarray(g0.orig_id)
+    G.add_nodes_from(int(o) for o in orig if o >= 0)
+    G.add_edges_from(map(tuple, edges))
+    for u, v, _ in ups:
+        G.add_edge(int(orig[u]), int(orig[v]))
+    ref_core = nx.core_number(G)
+    c = np.asarray(cb)
+    for i in range(g0.N):
+        if orig[i] >= 0:
+            assert c[i] == ref_core[orig[i]]
+
+
+def test_maintain_batch_mixed_ops_and_odd_chunks():
+    """Insertions + deletions, chunk size not dividing the stream."""
+    import networkx as nx
+    g0 = _community_graph(n_comm=4, sz=30, seed=2)
+    core0 = coreness(g0)
+    ups = (_one_insert_per_community(g0, seed=3)
+           + sample_deletions(g0, 5, "intra", seed=4))
+    gb, cb, _ = maintain_batch(
+        jax.tree.map(lambda x: x.copy(), g0), core0.copy(), ups, R=3
+    )
+    G = nx.Graph()
+    orig = np.asarray(g0.orig_id)
+    G.add_nodes_from(int(o) for o in orig if o >= 0)
+    for u in range(g0.N):
+        for v in np.asarray(g0.nbr)[u]:
+            if v >= 0:
+                G.add_edge(int(orig[u]), int(orig[v]))
+    for u, v, op in ups:
+        if op > 0:
+            G.add_edge(int(orig[u]), int(orig[v]))
+        else:
+            G.remove_edge(int(orig[u]), int(orig[v]))
+    ref_core = nx.core_number(G)
+    c = np.asarray(cb)
+    for i in range(g0.N):
+        if orig[i] >= 0:
+            assert c[i] == ref_core[orig[i]]
+
+
+def test_independent_prefix_defers_conflicts_with_deferred_too():
+    """A column overlapping an earlier *deferred* column must defer as well:
+    accepting it would apply it before that earlier update, reordering two
+    dependent updates."""
+    from repro.core.kcore_dynamic import _independent_prefix
+    cand = np.zeros((6, 3), bool)
+    cand[[0, 1], 0] = True   # col0: accepted
+    cand[[1, 2], 1] = True   # col1: overlaps col0 -> deferred
+    cand[[2, 3], 2] = True   # col2: disjoint from col0, overlaps col1
+    accepted, deferred = _independent_prefix(cand, 3)
+    assert accepted == [0]
+    assert deferred == [1, 2]
+
+
+def test_maintain_batch_preserves_order_of_dependent_updates():
+    """Regression: an insert into a full row must not be hoisted above the
+    deferred delete that frees the slot (row-capacity dependence)."""
+    from repro.core import to_networkx_edges
+    # cycle 0-1-2-9, K4 on {3,10,11,12}, edge 3-9 (row 3 full at Cd=4),
+    # isolated node 4; P=1 keeps padded ids == original ids
+    edges = np.array(
+        [[0, 1], [1, 2], [2, 9], [9, 0],
+         [3, 10], [3, 11], [3, 12], [10, 11], [10, 12], [11, 12],
+         [3, 9]]
+    )
+    g0 = build_blocks(edges, 13, np.zeros(13, int), P=1, Cd=4)
+    core0 = coreness(g0)
+    ups = [(0, 2, +1), (3, 9, -1), (3, 4, +1)]
+
+    gs = jax.tree.map(lambda x: x.copy(), g0)
+    cs = core0.copy()
+    for u, v, op in ups:
+        fn = insert_edge_maintain if op > 0 else delete_edge_maintain
+        gs, cs, _ = fn(gs, cs, jnp.int32(u), jnp.int32(v))
+
+    gb, cb, _ = maintain_batch(
+        jax.tree.map(lambda x: x.copy(), g0), core0.copy(), ups, R=3
+    )
+    np.testing.assert_array_equal(np.asarray(cs), np.asarray(cb))
+    np.testing.assert_array_equal(np.asarray(gs.deg), np.asarray(gb.deg))
+    np.testing.assert_array_equal(to_networkx_edges(gs), to_networkx_edges(gb))
+
+
+def test_maintain_batch_rejects_self_loops():
+    g0 = _community_graph(n_comm=2, sz=20, seed=5)
+    core0 = coreness(g0)
+    with pytest.raises(ValueError, match="self-loop"):
+        maintain_batch(g0, core0, [(3, 3, +1)], R=4)
+
+
+def test_maintain_batch_rejects_duplicate_insert():
+    """Host-boundary validation covers the whole stream, not just loops:
+    inserting the same edge twice would corrupt the ELL row bookkeeping."""
+    g0 = _community_graph(n_comm=2, sz=20, seed=6)
+    core0 = coreness(g0)
+    (u, v, _), = _one_insert_per_community(g0, seed=7)[:1]
+    with pytest.raises(ValueError, match="already present"):
+        maintain_batch(g0, core0, [(u, v, +1), (u, v, +1)], R=2)
+    with pytest.raises(ValueError, match="not present"):
+        maintain_batch(g0, core0, [(u, v, -1)], R=2)

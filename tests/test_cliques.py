@@ -2,7 +2,7 @@
 import numpy as np
 import networkx as nx
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import MaximalCliques, bron_kerbosch
 from repro.graphgen import erdos_renyi

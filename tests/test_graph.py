@@ -2,7 +2,7 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import build_blocks, insert_edge, delete_edge, to_networkx_edges
 from repro.core.graph import has_edge

@@ -3,7 +3,7 @@ import numpy as np
 import jax.numpy as jnp
 import networkx as nx
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import build_blocks, coreness, coreness_with_stats, hindex_rows
 from repro.core.partition import (

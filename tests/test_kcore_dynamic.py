@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import networkx as nx
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import (
     build_blocks, coreness, insert_edge_maintain, delete_edge_maintain,

@@ -6,7 +6,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.kernels import ops, ref
 from repro.kernels.kcore_hindex import hindex_counts as hindex_pallas

@@ -1,7 +1,7 @@
 """Partitioners + dynamic partitioning maintenance (paper §4.2, Tables 3-5)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import partition as P_
 from repro.core.partition_dynamic import (

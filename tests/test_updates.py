@@ -1,0 +1,116 @@
+"""Scenario sampling + host-boundary validation in core/updates.py.
+
+The paper's §5.2.1 experiments depend on the sampler's invariants: inter
+updates cross blocks, intra updates stay inside one, insertions are
+non-adjacent pairs, deletions are existing edges, and everything is
+deterministic under a fixed seed.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import build_blocks, coreness
+from repro.core.partition import node_random_partition
+from repro.core.updates import (
+    apply_updates_host, classify, sample_deletions, sample_insertions,
+)
+from repro.graphgen import erdos_renyi
+
+
+@pytest.fixture(scope="module")
+def g():
+    edges = erdos_renyi(120, 400, seed=6)
+    n = int(edges.max()) + 1
+    return build_blocks(edges, n, node_random_partition(n, 4, seed=1), P=4,
+                        deg_slack=24)
+
+
+# ------------------------------------------------------------- sampling ----
+
+@pytest.mark.parametrize("scenario", ["inter", "intra"])
+def test_insertions_respect_scenario_and_are_nonadjacent(g, scenario):
+    ups = sample_insertions(g, 20, scenario, seed=3)
+    assert len(ups) == 20
+    nbr = np.asarray(g.nbr)
+    mask = np.asarray(g.node_mask)
+    seen = set()
+    for u, v, op in ups:
+        assert op == +1 and u != v
+        assert classify(g, u, v) == scenario
+        assert mask[u] and mask[v]
+        assert not (nbr[u] == v).any(), "insertion must be a non-edge"
+        key = (min(u, v), max(u, v))
+        assert key not in seen, "sampler must not repeat pairs"
+        seen.add(key)
+
+
+@pytest.mark.parametrize("scenario", ["inter", "intra"])
+def test_deletions_are_existing_edges_of_scenario(g, scenario):
+    ups = sample_deletions(g, 15, scenario, seed=4)
+    assert len(ups) == 15
+    nbr = np.asarray(g.nbr)
+    for u, v, op in ups:
+        assert op == -1
+        assert classify(g, u, v) == scenario
+        assert (nbr[u] == v).any() and (nbr[v] == u).any()
+
+
+def test_sampling_is_deterministic_per_seed(g):
+    a = sample_insertions(g, 10, "inter", seed=7)
+    b = sample_insertions(g, 10, "inter", seed=7)
+    c = sample_insertions(g, 10, "inter", seed=8)
+    assert a == b
+    assert a != c
+    d1 = sample_deletions(g, 10, "intra", seed=7)
+    d2 = sample_deletions(g, 10, "intra", seed=7)
+    assert d1 == d2
+
+
+# ------------------------------------------------------ host validation ----
+
+def test_apply_updates_host_roundtrip(g):
+    ins = sample_insertions(g, 5, "inter", seed=2)
+    g2 = apply_updates_host(g, ins)
+    assert int(np.asarray(g2.deg).sum()) == int(np.asarray(g.deg).sum()) + 10
+    g3 = apply_updates_host(g2, [(u, v, -1) for u, v, _ in ins])
+    np.testing.assert_array_equal(np.asarray(g3.deg), np.asarray(g.deg))
+    # coreness insensitive to slot permutation introduced by delete-swap
+    np.testing.assert_array_equal(
+        np.asarray(coreness(g3)), np.asarray(coreness(g))
+    )
+
+
+def test_apply_updates_host_rejects_out_of_range(g):
+    with pytest.raises(ValueError, match="out of range"):
+        apply_updates_host(g, [(0, g.N + 10, +1)])
+    with pytest.raises(ValueError, match="out of range"):
+        apply_updates_host(g, [(-3, 0, +1)])  # would wrap silently in numpy
+
+
+def test_apply_updates_host_rejects_self_loop(g):
+    u = int(np.flatnonzero(np.asarray(g.node_mask))[0])
+    with pytest.raises(ValueError, match="self-loop"):
+        apply_updates_host(g, [(u, u, +1)])
+
+
+def test_apply_updates_host_rejects_duplicate_insert(g):
+    nbr = np.asarray(g.nbr)
+    u = int(np.flatnonzero((nbr >= 0).any(axis=1))[0])
+    v = int(nbr[u][nbr[u] >= 0][0])
+    with pytest.raises(ValueError, match="already present"):
+        apply_updates_host(g, [(u, v, +1)])
+
+
+def test_apply_updates_host_rejects_missing_delete(g):
+    ups = sample_insertions(g, 1, "inter", seed=9)  # a known non-edge
+    (u, v, _), = ups
+    with pytest.raises(ValueError, match="not present"):
+        apply_updates_host(g, [(u, v, -1)])
+
+
+def test_apply_updates_host_rejects_capacity_overflow():
+    # star center at degree capacity; P=1 keeps padded ids == original ids
+    edges = np.array([[0, i] for i in range(1, 5)])
+    g = build_blocks(edges, 6, np.zeros(6, int), P=1, Cd=4)
+    with pytest.raises(ValueError, match="capacity"):
+        apply_updates_host(g, [(0, 5, +1)])
