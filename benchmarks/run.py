@@ -9,6 +9,8 @@ Prints ``name,us_per_call,derived`` CSV rows.
   kcore_static — static decomposition time + supersteps        (§4.1 step 1)
   backends — jnp vs dense vs ELL registry sweep incl. the >4 GiB dense-
              infeasible N (EXPERIMENTS.md §Backends)
+  runtime  — mesh (ell_spmd) coreness parity/time + metered vs executed
+             W2W accounting (EXPERIMENTS.md §Runtime)
   roofline — three-term roofline per (arch × shape) from the dry-run JSONs
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--full] [--updates N]
@@ -38,12 +40,12 @@ def main() -> None:
                     help="tiny CI pass: backend parity + a few updates")
     ap.add_argument("--only", default=None,
                     help="comma list: table2,fig7,partitioning,static,"
-                         "backends,roofline")
+                         "backends,runtime,roofline")
     args = ap.parse_args()
 
     from . import (bench_backends, bench_kcore_maintenance,
                    bench_vs_naive_kcore, bench_partitioning,
-                   bench_static_kcore, roofline)
+                   bench_runtime, bench_static_kcore, roofline)
 
     backends = tuple(b for b in args.backends.split(",") if b)
     batch_sizes = tuple(int(r) for r in args.batch_sizes.split(",") if r)
@@ -71,12 +73,16 @@ def main() -> None:
             full=args.full, seed=args.seed, backends=backends),
         "backends": lambda: bench_backends.run(
             seed=args.seed, smoke=args.smoke),
+        "runtime": lambda: bench_runtime.run(
+            seed=args.seed, smoke=args.smoke),
         "roofline": lambda: roofline.run(full=args.full, seed=args.seed),
     }
     if args.smoke:
-        for excluded in ("roofline", "partitioning", "fig7"):
-            benches.pop(excluded)  # roofline needs dry-run JSONs; the rest
-            # add minutes without touching the kernel/backend surface
+        for excluded in ("roofline", "fig7"):
+            benches.pop(excluded)  # roofline needs dry-run JSONs; fig7
+            # adds minutes without touching the kernel/backend surface
+            # (partitioning stays: it is pure numpy and fast at CI scale,
+            # and gates the §4.2 IncrementalPart/NaivePart protocol)
     only = set(args.only.split(",")) if args.only else set(benches)
     unknown = only - set(benches)
     if unknown:

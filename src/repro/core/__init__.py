@@ -1,12 +1,12 @@
 """BLADYG core: block-centric processing of large dynamic graphs in JAX."""
 from .graph import (
     GraphBlocks, build_blocks, build_ell_random, insert_edge, delete_edge,
-    to_networkx_edges, halo_slot_counts,
+    to_networkx_edges, halo_slot_counts, halo_pair_counts,
 )
 from .engine import BladygEngine, BladygProgram, Mode, MessageStats
 from .kcore import (
-    coreness, coreness_with_stats, coreness_via_engine, hindex_rows,
-    CorenessProgram,
+    coreness, coreness_with_stats, coreness_via_engine, coreness_via_spmd,
+    hindex_rows, CorenessProgram,
 )
 from .kcore_dynamic import (
     insert_edge_maintain,
@@ -24,9 +24,11 @@ from . import partition, partition_dynamic, updates
 
 __all__ = [
     "GraphBlocks", "build_blocks", "build_ell_random", "insert_edge", "delete_edge",
-    "to_networkx_edges", "halo_slot_counts", "BladygEngine", "BladygProgram",
+    "to_networkx_edges", "halo_slot_counts", "halo_pair_counts",
+    "BladygEngine", "BladygProgram",
     "Mode", "MessageStats", "coreness", "coreness_with_stats",
-    "coreness_via_engine", "hindex_rows", "CorenessProgram",
+    "coreness_via_engine", "coreness_via_spmd", "hindex_rows",
+    "CorenessProgram",
     "insert_edge_maintain", "delete_edge_maintain", "maintain_batch",
     "maintain_batch_host", "k_reachable", "k_reachable_batch",
     "MaintenanceStats", "BatchMaintenanceStats", "compute_degrees",

@@ -19,7 +19,13 @@ executes that sequence; `run_jit` fuses it into a single `lax.while_loop`
 when both operations are jittable.
 
 The engine also meters messages per mode — this is how the benchmarks
-reproduce the paper's inter- vs intra-partition accounting.
+reproduce the paper's inter- vs intra-partition accounting.  The W2W
+numbers here are *declared* (shape-reconstructed) because the halo gather
+fuses inside jit; the distributed runtime (`repro.runtime.SpmdEngine`)
+executes the same supersteps over the `workers` device mesh and records
+the counts of its executed `HaloPlan` instead — `w2w_override` lets a
+caller stamp those executed counts into this engine's traces when
+cross-checking the two (EXPERIMENTS.md §Runtime).
 """
 from __future__ import annotations
 
@@ -110,13 +116,14 @@ class BladygEngine:
         directive: Any = None,
         max_supersteps: int = 10_000,
         jit_steps: bool = True,
+        w2w_override: Optional[Tuple[int, int]] = None,
     ) -> Tuple[Any, Any]:
         worker = jax.jit(program.worker_compute, static_argnums=()) if jit_steps \
             else program.worker_compute
         master = program.master_compute
         step = 0
         g = self.g
-        w2w = program.w2w_payload(g)
+        w2w = w2w_override if w2w_override is not None else program.w2w_payload(g)
         while step < max_supersteps:
             wstate, summary = worker(g, wstate, directive)          # Local/W2W
             mstate, directive, halt = master(mstate, summary)        # W2M+M2W
@@ -138,6 +145,7 @@ class BladygEngine:
         mstate: Any,
         directive: Any,
         max_supersteps: int = 10_000,
+        w2w_override: Optional[Tuple[int, int]] = None,
     ) -> Tuple[Any, Any]:
         g = self.g
 
@@ -158,7 +166,7 @@ class BladygEngine:
         _, summary_shape = jax.eval_shape(
             program.worker_compute, g, wstate, directive
         )
-        w2w = program.w2w_payload(g)
+        w2w = w2w_override if w2w_override is not None else program.w2w_payload(g)
 
         wstate, mstate, _, _, n = jax.lax.while_loop(
             cond, body, (wstate, mstate, directive, jnp.bool_(False), jnp.int32(0))

@@ -232,6 +232,24 @@ def halo_slot_counts(g: GraphBlocks) -> Tuple[int, int]:
     return int(np.sum(valid)) - inter, inter
 
 
+def halo_pair_counts(g: GraphBlocks) -> np.ndarray:
+    """(P, P) matrix: valid neighbor slots in block-row b reading block b'.
+
+    Row b column b' counts the per-superstep W2W values block b pulls
+    from block b' under a one-value-per-neighbor-slot exchange; the
+    diagonal is the intra-block traffic.  `halo_slot_counts` is the
+    (trace of this matrix, off-diagonal sum) pair; the runtime's
+    `HaloPlan` serves exactly the off-diagonal entries (deduplicated per
+    boundary vertex at device granularity).
+    """
+    nbr = np.asarray(g.nbr)
+    valid = nbr >= 0
+    own = np.repeat(np.arange(g.N) // g.Cn, g.Cd).reshape(g.N, g.Cd)
+    pairs = np.zeros((g.P, g.P), np.int64)
+    np.add.at(pairs, (own[valid], nbr[valid] // g.Cn), 1)
+    return pairs
+
+
 def to_networkx_edges(g: GraphBlocks) -> np.ndarray:
     """Extract the (m, 2) edge list in *original* ids (test oracle helper)."""
     nbr = np.asarray(g.nbr)

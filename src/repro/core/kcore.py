@@ -23,7 +23,10 @@ coreness of the rest — that is what makes the incremental maintenance in
 Execution: the H(est) primitive is obtained *only* through the kernel
 backend registry (`repro.kernels.ops`) — `backend="jnp"|"dense"|"ell"`
 selects pure-jnp, dense-tile Pallas, or ELL block-sparse Pallas, all exact;
-"auto" resolves by platform and graph size.  See EXPERIMENTS.md §Backends.
+"auto" resolves by platform and graph size; the explicit `"ell_spmd"`
+backend runs the same supersteps sharded over the `workers` device mesh
+with a real halo exchange (`repro.runtime`).  See EXPERIMENTS.md
+§Backends and §Runtime.
 
 Communication pattern (BLADYG modes): the gather of neighbor estimates is
 the W2W halo exchange; the convergence test is a W2M reduction; the loop
@@ -131,4 +134,22 @@ def coreness_via_engine(g: GraphBlocks, backend: str = "jnp"):
     est0 = jnp.where(g.node_mask, g.deg, 0).astype(jnp.int32)
     eng = BladygEngine(g)
     est, _ = eng.run(CorenessProgram(backend=backend), est0, None)
+    return jnp.where(g.node_mask, est, 0), eng
+
+
+def coreness_via_spmd(g: GraphBlocks, W=None):
+    """CorenessProgram routed through the distributed runtime.
+
+    Runs the same min-H supersteps under `runtime.SpmdEngine.run_spmd`:
+    the neighbor gather is an executed halo exchange on the `workers`
+    mesh and the returned engine's traces carry the *executed* W2W
+    counts (`HaloPlan.slot_counts`) instead of the declared payload.
+    Returns (core, SpmdEngine); core is bit-identical to
+    `coreness_via_engine`'s.
+    """
+    from ..runtime.spmd import SpmdCorenessProgram, SpmdEngine
+
+    est0 = jnp.where(g.node_mask, g.deg, 0).astype(jnp.int32)
+    eng = SpmdEngine(g, W=W)
+    est, _ = eng.run_spmd(SpmdCorenessProgram(), est0, None)
     return jnp.where(g.node_mask, est, 0), eng

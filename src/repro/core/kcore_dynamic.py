@@ -56,6 +56,21 @@ import numpy as np
 from ..kernels import ops
 from .graph import GraphBlocks, insert_edge, delete_edge
 
+#: backend name that routes maintenance supersteps through `repro.runtime`
+#: (supported by `maintain_batch` / `runtime.run_stream`; the per-edge
+#: jitted entry points reject it — the halo plan needs concrete arrays)
+SPMD_BACKEND = "ell_spmd"
+
+
+def _reject_spmd(backend: str, fn_name: str) -> None:
+    if backend == SPMD_BACKEND:
+        raise ValueError(
+            f"{fn_name} does not support backend={SPMD_BACKEND!r}: it runs "
+            "under jit, where the runtime's halo plan cannot be built from "
+            "traced arrays. Use maintain_batch(..., backend='ell_spmd') or "
+            "runtime.run_stream for mesh-executed maintenance."
+        )
+
 
 def _validate_updates_host(g: GraphBlocks, updates) -> None:
     """Host-boundary validation for a maintenance stream.
@@ -176,6 +191,7 @@ def insert_edge_maintain(
     backend: str = "jnp",
 ) -> Tuple[GraphBlocks, jax.Array, MaintenanceStats]:
     """Insert (u, v) and maintain coreness.  u, v are global padded ids."""
+    _reject_spmd(backend, "insert_edge_maintain")
     k = jnp.minimum(core[u], core[v])
     roots = jnp.zeros(g.N, bool).at[u].set(True).at[v].set(True)
     cand, bfs_steps = k_reachable(g, core, roots, k, backend=backend)
@@ -194,6 +210,7 @@ def delete_edge_maintain(
     backend: str = "jnp",
 ) -> Tuple[GraphBlocks, jax.Array, MaintenanceStats]:
     """Delete (u, v) and maintain coreness."""
+    _reject_spmd(backend, "delete_edge_maintain")
     k = jnp.minimum(core[u], core[v])
     roots = jnp.zeros(g.N, bool).at[u].set(True).at[v].set(True)
     cand, bfs_steps = k_reachable(g, core, roots, k, backend=backend)
@@ -289,6 +306,26 @@ def _independent_prefix(cand: np.ndarray, valid: int) -> Tuple[List[int], List[i
     return accepted, deferred
 
 
+def _apply_edges(
+    g: GraphBlocks, us: jax.Array, vs: jax.Array, ops_: jax.Array
+) -> GraphBlocks:
+    """Apply (R,) fixed-width updates: op = +1 insert / -1 delete / 0 no-op."""
+
+    def apply_one(i, gg):
+        u, v, op = us[i], vs[i], ops_[i]
+        return jax.lax.switch(
+            jnp.clip(op + 1, 0, 2),
+            [
+                lambda q: delete_edge(q, u, v),  # op == -1
+                lambda q: q,                     # op ==  0 (padding)
+                lambda q: insert_edge(q, u, v),  # op == +1
+            ],
+            gg,
+        )
+
+    return jax.lax.fori_loop(0, us.shape[0], apply_one, g)
+
+
 @partial(jax.jit, donate_argnums=(0,), static_argnames=("backend",))
 def _apply_and_recompute(
     g: GraphBlocks, core: jax.Array, us: jax.Array, vs: jax.Array,
@@ -303,20 +340,7 @@ def _apply_and_recompute(
     cand_ins / cand_del: (N,) union masks of the accepted insert / delete
     candidate sets (disjoint by construction).
     """
-
-    def apply_one(i, gg):
-        u, v, op = us[i], vs[i], ops_[i]
-        return jax.lax.switch(
-            jnp.clip(op + 1, 0, 2),
-            [
-                lambda q: delete_edge(q, u, v),  # op == -1
-                lambda q: q,                     # op ==  0 (padding)
-                lambda q: insert_edge(q, u, v),  # op == +1
-            ],
-            gg,
-        )
-
-    g2 = jax.lax.fori_loop(0, us.shape[0], apply_one, g)
+    g2 = _apply_edges(g, us, vs, ops_)
     # per-update upper bounds (valid because the candidate sets are disjoint:
     # no node gets both an insert and a delete bound)
     ub = jnp.where(cand_ins, jnp.minimum(core + 1, g2.deg), core)
@@ -326,12 +350,84 @@ def _apply_and_recompute(
     return g2, new_core, rec_steps
 
 
+# ---------------------------------------------------------------------------
+# ell_spmd routing: the identical maintenance protocol with every superstep
+# (k-reachability hops, clamped min-H recompute) executed on the worker mesh
+# through the runtime subsystem's halo exchange.
+# ---------------------------------------------------------------------------
+
+
+def _spmd_executor(g: GraphBlocks, W=None):
+    """Host-boundary construction of the mesh executor (deferred import —
+    `runtime` lazily dispatches back into `kernels.ops`)."""
+    from ..runtime.spmd import SpmdExecutor
+
+    return SpmdExecutor(g, W=W)
+
+
+def _batch_candidates_spmd(ex, g: GraphBlocks, core, us, vs, valid):
+    """`_batch_candidates` with the frontier supersteps run on the mesh."""
+    R = len(us)
+    cols = jnp.arange(R)
+    usj, vsj = jnp.asarray(us), jnp.asarray(vs)
+    validj = jnp.asarray(valid)
+    ks = jnp.where(validj, jnp.minimum(core[usj], core[vsj]), -1)
+    roots = (
+        jnp.zeros((g.N, R), bool)
+        .at[usj, cols].max(validj)
+        .at[vsj, cols].max(validj)
+    )
+    visited, steps = ex.k_reachable_batch(core, roots, ks)
+    return (visited | roots) & validj[None, :], steps
+
+
+def _apply_and_recompute_spmd(
+    g: GraphBlocks, core, us, vs, ops_, cand_ins, cand_del, W=None
+):
+    """`_apply_and_recompute` with the joint clamped recompute on the mesh.
+
+    The halo plan depends on the adjacency, so the executor is rebuilt on
+    the post-update graph; the compiled mesh steps are reused from the
+    per-(mesh, H) cache whenever the halo capacity is unchanged.
+    """
+    g2 = _apply_edges(g, jnp.asarray(us), jnp.asarray(vs), jnp.asarray(ops_))
+    ub = jnp.where(cand_ins, jnp.minimum(core + 1, g2.deg), core)
+    ub = jnp.where(cand_del, jnp.minimum(core, g2.deg), ub)
+    union = cand_ins | cand_del
+    ex2 = _spmd_executor(g2, W)
+    new_core, rec_steps = ex2.restricted_recompute(ub, union)
+    return g2, new_core, rec_steps
+
+
+def _maintain_one_spmd(g: GraphBlocks, core, update, tot, W=None):
+    """Sequential (coordinator-path) maintenance of one update on the mesh."""
+    u, v, op = update
+    uj, vj = jnp.int32(u), jnp.int32(v)
+    ex = _spmd_executor(g, W)
+    k = jnp.minimum(core[uj], core[vj])
+    roots = jnp.zeros(g.N, bool).at[uj].set(True).at[vj].set(True)
+    cand, bfs_steps = ex.k_reachable_batch(core, roots[:, None], k[None])
+    cand = cand[:, 0] | roots
+
+    g2 = insert_edge(g, uj, vj) if op > 0 else delete_edge(g, uj, vj)
+    bump = core + 1 if op > 0 else core
+    ub = jnp.where(cand, jnp.minimum(bump, g2.deg), core)
+    ex2 = _spmd_executor(g2, W)
+    new_core, rec_steps = ex2.restricted_recompute(ub, cand)
+    tot["bfs"] += int(bfs_steps)
+    tot["rec"] += int(rec_steps)
+    tot["cand"] += int(jnp.sum(cand))
+    tot["seq"] += 1
+    return g2, new_core
+
+
 def maintain_batch(
     g: GraphBlocks,
     core: jax.Array,
     updates: Sequence[Tuple[int, int, int]],
     R: int = 8,
     backend: str = "jnp",
+    W=None,
 ) -> Tuple[GraphBlocks, jax.Array, BatchMaintenanceStats]:
     """Maintain coreness over a stream of updates, R at a time.
 
@@ -346,6 +442,12 @@ def maintain_batch(
     capacity) — this is a host boundary (the jitted update path never
     re-validates).
 
+    With `backend="ell_spmd"` every superstep (the batched k-reachability
+    search and the joint clamped recompute) executes on the worker mesh
+    via the runtime subsystem's halo exchange; `W` forces the worker
+    count (default: as many devices as divide P).  Results are identical
+    to every other backend.
+
     NOTE: like the single-edge maintain functions, this CONSUMES `g` via
     jit buffer donation (a no-op on CPU, enforced on TPU/GPU) — do not
     reuse the argument afterwards; use the returned graph.
@@ -353,13 +455,14 @@ def maintain_batch(
     if R < 1:
         raise ValueError(f"R must be >= 1, got {R}")
     _validate_updates_host(g, updates)
+    spmd = backend == SPMD_BACKEND
 
     core = jnp.asarray(core)
     tot = dict(bfs=0, rec=0, cand=0, batched=0, seq=0, batches=0)
     for start in range(0, len(updates), R):
         chunk = list(updates[start:start + R])
         if len(chunk) == 1:
-            g, core = _maintain_one(g, core, chunk[0], tot, backend)
+            g, core = _maintain_one(g, core, chunk[0], tot, backend, W=W)
             continue
         n = len(chunk)
         us = np.zeros(R, np.int32)
@@ -371,10 +474,14 @@ def maintain_batch(
         valid = np.zeros(R, bool)
         valid[:n] = True
 
-        cand, steps = _batch_candidates(
-            g, core, jnp.asarray(us), jnp.asarray(vs),
-            jnp.asarray(valid), backend=backend,
-        )
+        if spmd:
+            cand, steps = _batch_candidates_spmd(
+                _spmd_executor(g, W), g, core, us, vs, valid)
+        else:
+            cand, steps = _batch_candidates(
+                g, core, jnp.asarray(us), jnp.asarray(vs),
+                jnp.asarray(valid), backend=backend,
+            )
         tot["bfs"] += int(steps)
         tot["batches"] += 1
         cand_np = np.asarray(jax.device_get(cand))
@@ -394,17 +501,21 @@ def maintain_batch(
             us_a[:len(acc)] = us[acc]
             vs_a[:len(acc)] = vs[acc]
             ops_a[:len(acc)] = ops_[acc]
-            g, core, rec_steps = _apply_and_recompute(
-                g, core,
-                jnp.asarray(us_a), jnp.asarray(vs_a), jnp.asarray(ops_a),
-                cand_ins, cand_del, backend=backend,
-            )
+            if spmd:
+                g, core, rec_steps = _apply_and_recompute_spmd(
+                    g, core, us_a, vs_a, ops_a, cand_ins, cand_del, W=W)
+            else:
+                g, core, rec_steps = _apply_and_recompute(
+                    g, core,
+                    jnp.asarray(us_a), jnp.asarray(vs_a), jnp.asarray(ops_a),
+                    cand_ins, cand_del, backend=backend,
+                )
             tot["rec"] += int(rec_steps)
             tot["cand"] += int(cand_np[:, acc].sum())
             tot["batched"] += len(accepted)
 
         for r in deferred:
-            g, core = _maintain_one(g, core, chunk[r], tot, backend)
+            g, core = _maintain_one(g, core, chunk[r], tot, backend, W=W)
 
     stats = BatchMaintenanceStats(
         updates=len(updates),
@@ -418,8 +529,10 @@ def maintain_batch(
     return g, core, stats
 
 
-def _maintain_one(g, core, update, tot, backend):
+def _maintain_one(g, core, update, tot, backend, W=None):
     """Sequential fallback for one update; accumulates into `tot`."""
+    if backend == SPMD_BACKEND:
+        return _maintain_one_spmd(g, core, update, tot, W=W)
     u, v, op = update
     fn = insert_edge_maintain if op > 0 else delete_edge_maintain
     g, core, s = fn(g, core, jnp.int32(u), jnp.int32(v), backend=backend)

@@ -12,12 +12,21 @@ of neighbor estimates; masked frontier hop), all exact and bit-identical:
            `ell_frontier.py`) — consumes `GraphBlocks.nbr` tiles directly,
            O(N*Cd) memory; the scaling path.
 
+A fourth, explicit-only backend executes over the device mesh:
+
+  "ell_spmd"  shard_map over the `workers` mesh axis (`repro.runtime`):
+              each device owns a fold of blocks, the neighbor gather is a
+              real halo exchange (all-to-all per the precomputed
+              `HaloPlan`).  Never chosen by "auto"; host-boundary only —
+              the halo plan derives from concrete adjacency, so calls
+              under an outer jit trace raise.
+
 `backend="auto"` resolves per call: jnp off-TPU (Pallas would run in the
 interpreter), dense for blocks small enough to densify profitably
 (N <= DENSE_AUTO_MAX), ell beyond.  `core.kcore`, `core.kcore_dynamic`, and
 the benchmarks call the primitives *only* through this layer — adding a
-backend (e.g. a shard_map multi-device path) is a registry entry, not a
-core-algorithm change.
+backend (the shard_map multi-device path arrived exactly this way) is a
+registry entry, not a core-algorithm change.
 
 The GraphBlocks-level entry points (`hindex_blocks`, `frontier_blocks`,
 `coreness_blocks`) duck-type on `.nbr`/`.deg`/`.node_mask`/`.N`/`.Cd` so this
@@ -41,7 +50,7 @@ from .frontier import frontier_step as _frontier_pallas
 from .ell_hindex import hindex_ell as _hindex_ell_pallas
 from .ell_frontier import frontier_step_ell as _frontier_ell_pallas
 
-BACKENDS = ("jnp", "dense", "ell")
+BACKENDS = ("jnp", "dense", "ell", "ell_spmd")
 
 #: auto picks the dense MXU path up to this many (padded) nodes; beyond it
 #: the O(N^2) adjacency dominates memory and ELL wins (see EXPERIMENTS.md).
@@ -227,6 +236,10 @@ def hindex_blocks(
         return ref.ell_hindex_ref(g.nbr, est).astype(jnp.int32)
     if b == "ell":
         return hindex_ell(g.nbr, est, interpret=interpret)
+    if b == "ell_spmd":
+        from ..runtime.spmd import hindex_spmd  # lazy: no import cycle
+
+        return hindex_spmd(g, est)
     if adj is None:
         adj = ref.ell_to_dense(g.nbr, g.N)
     return hindex(adj, est, K=g.Cd + 1, interpret=interpret)
@@ -268,6 +281,10 @@ def frontier_blocks(
         return ref.ell_frontier_hop_ref(g.nbr, f, elig, visited)
     if b == "ell":
         return frontier_step_ell(g.nbr, f, elig, visited, interpret=interpret) > 0
+    if b == "ell_spmd":
+        from ..runtime.spmd import frontier_spmd  # lazy: no import cycle
+
+        return frontier_spmd(g, f, elig, visited)
     # dense kernel takes a shared (N,) eligibility; fold the per-column mask
     # into `visited` (a node ineligible for column r can never enter it).
     if adj is None:
@@ -305,6 +322,10 @@ def coreness_blocks(
     b = resolve_backend(backend, g.N)
     if b == "jnp":
         return _coreness_blocks_jnp(g, max_steps)
+    if b == "ell_spmd":
+        from ..runtime.spmd import coreness_spmd  # lazy: no import cycle
+
+        return coreness_spmd(g, max_steps=max_steps)
     est = jnp.where(g.node_mask, g.deg, 0).astype(jnp.int32)
     adj = ref.ell_to_dense(g.nbr, g.N) if b == "dense" else None
     for _ in range(max_steps):

@@ -1,0 +1,44 @@
+"""Distributed block runtime: BLADYG's architecture on a JAX device mesh.
+
+The paper's deployment is a coordinator plus one Akka worker per block,
+exchanging messages across block boundaries.  This package is that
+architecture on SPMD JAX:
+
+  mesh.py   — `WorkerMesh`: the `workers` device axis (multi-device on
+              hardware, `XLA_FLAGS=--xla_force_host_platform_device_count=N`
+              on CPU CI) with a blocks-per-device fold when P > #devices.
+  halo.py   — `HaloPlan`: which neighbor slots cross shard boundaries and
+              the all-to-all gather indices that serve them, precomputed
+              host-side from `GraphBlocks.nbr`.
+  spmd.py   — `SpmdExecutor` (compiled halo-exchange primitives) and
+              `SpmdEngine.run_spmd`, the shard_map superstep executor:
+              W2W is an executed halo exchange, W2M an all-gather of
+              per-worker summaries, M2W the replicated master directive.
+  stream.py — streaming update ingestion: route each batch to owner
+              blocks host-side, drive `maintain_batch` block-locally,
+              escalate cross-block conflicts to the coordinator path.
+
+Everything here duck-types `GraphBlocks` (`.nbr`, `.deg`, `.node_mask`,
+`.P`, `.Cn`, `.Cd`, `.N`) the same way `kernels.ops` does, so the kernel
+registry can lazily dispatch into this package without an import cycle.
+"""
+from .mesh import AXIS, WorkerMesh, best_worker_count, make_worker_mesh
+from .halo import HaloPlan, build_halo_plan
+from .spmd import (
+    SpmdCorenessProgram,
+    SpmdEngine,
+    SpmdExecutor,
+    SpmdProgram,
+    coreness_spmd,
+    frontier_spmd,
+    hindex_spmd,
+)
+from .stream import StreamStats, route_updates, run_stream
+
+__all__ = [
+    "AXIS", "WorkerMesh", "best_worker_count", "make_worker_mesh",
+    "HaloPlan", "build_halo_plan",
+    "SpmdExecutor", "SpmdEngine", "SpmdProgram", "SpmdCorenessProgram",
+    "coreness_spmd", "hindex_spmd", "frontier_spmd",
+    "StreamStats", "route_updates", "run_stream",
+]

@@ -1,0 +1,160 @@
+"""Halo plan: the executed form of BLADYG's W2W exchange.
+
+`GraphBlocks.nbr` stores *global* padded neighbor ids.  Under the worker
+mesh each device only holds its own `S = B*Cn` node rows, so every valid
+neighbor slot is either served locally (the neighbor lives on the same
+worker) or from the *halo* — values fetched from the owning worker each
+superstep.  This module precomputes, host-side from the concrete
+adjacency, everything that exchange needs:
+
+  * per worker pair (r needs-from s): the sorted unique remote node ids,
+    deduplicated — a node read by many local neighbor slots crosses the
+    wire once per superstep, exactly the paper's one-message-per-boundary
+    -vertex W2W semantics;
+  * `send_idx[s, r, k]` — local row on sender s of the k-th value it
+    serves to receiver r (the all-to-all send-buffer gather);
+  * `recv_pos[r, s, k]` — where receiver r scatters that value inside its
+    halo buffer (size H, padded entries land on a dump slot);
+  * `nbr_local` — the adjacency remapped to each worker's local frame:
+    own neighbors index the local shard `[0, S)`, remote neighbors index
+    `S + halo position`, PAD slots index a sentinel that always reads the
+    ignore value.
+
+Message accounting lives here too, at two granularities:
+
+  * `slot_counts()` — (intra, inter) valid neighbor slots at *block*
+    granularity.  Blocks are the paper's messaging unit (one worker per
+    block); the device fold is an execution detail, so these are the
+    numbers the engine's metering (`graph.halo_slot_counts`) must match.
+  * `device_elems` / `pair_elems` — unique values actually moved through
+    the all-to-all per superstep (worker granularity, deduplicated), and
+    the (W, W) per-pair breakdown.
+
+Shapes are static (`K` = max pair payload, `H` = max halo size), so the
+plan drops straight into `shard_map`/`jit`.  The plan is a pure function
+of `nbr` **contents** — rebuild it after structural updates.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+import jax
+
+from .mesh import WorkerMesh, make_worker_mesh
+
+
+@dataclasses.dataclass(frozen=True)
+class HaloPlan:
+    """Precomputed W2W exchange for one (graph, worker mesh) pair."""
+
+    wm: WorkerMesh
+    K: int                 # max values any (sender, receiver) pair moves
+    H: int                 # max halo-buffer entries on any worker
+    send_idx: np.ndarray   # (W, W, K) int32 — [sender, receiver, k] local row
+    recv_pos: np.ndarray   # (W, W, K) int32 — [receiver, sender, k] halo pos
+    halo_len: np.ndarray   # (W,) int64 — real halo entries per worker
+    nbr_local: np.ndarray  # (N, Cd) int32 — local-frame adjacency
+    pair_elems: np.ndarray  # (W, W) int64 — unique values moved s -> r
+    slot_intra: int        # valid slots inside their own *block*
+    slot_inter: int        # valid slots crossing a *block* boundary
+
+    def slot_counts(self) -> Tuple[int, int]:
+        """(intra, inter) at block granularity == `graph.halo_slot_counts`."""
+        return self.slot_intra, self.slot_inter
+
+    @property
+    def device_elems(self) -> int:
+        """Unique values crossing a *device* boundary per superstep."""
+        off = ~np.eye(self.wm.W, dtype=bool)
+        return int(self.pair_elems[off].sum())
+
+    @property
+    def padded_elems(self) -> int:
+        """Physical all-to-all payload per superstep (static padding)."""
+        return self.wm.W * self.wm.W * self.K
+
+    #: index (into the concat [local values | halo buffer]) that always
+    #: holds the ignore value — PAD neighbor slots point here.
+    @property
+    def pad_slot(self) -> int:
+        return self.wm.S + self.H + 1
+
+
+def build_halo_plan(g, wm: WorkerMesh = None, W: int = None) -> HaloPlan:
+    """Derive the halo plan from a *concrete* `GraphBlocks.nbr`.
+
+    Raises if called under a trace: the plan is host-side preprocessing
+    and cannot be derived from abstract values — build it outside `jit`
+    and close over it (the `ell_spmd` entry points do exactly that).
+    """
+    if isinstance(g.nbr, jax.core.Tracer):
+        raise TypeError(
+            "build_halo_plan needs concrete neighbor arrays; it cannot run "
+            "under jit/vmap tracing. Build the plan (or SpmdExecutor) at "
+            "the host boundary and reuse it across supersteps."
+        )
+    if wm is None:
+        wm = make_worker_mesh(g, W=W)
+    nbr = np.asarray(g.nbr)
+    N, Cd = nbr.shape
+    S, Wn = wm.S, wm.W
+    assert N == wm.N, (N, wm.N)
+
+    valid = nbr >= 0
+    own_block = np.arange(N) // g.Cn
+    inter_blk = valid & (np.where(valid, nbr // g.Cn, -1) != own_block[:, None])
+    slot_inter = int(inter_blk.sum())
+    slot_intra = int(valid.sum()) - slot_inter
+
+    # Per-receiver unique remote ids.  Sorting by global id groups by owner
+    # automatically (owner = id // S is monotone in id), so "position in the
+    # sorted unique array" doubles as the halo-buffer layout.
+    uniq = []
+    for r in range(Wn):
+        nb = nbr[r * S:(r + 1) * S]
+        v = nb >= 0
+        remote = nb[v & (np.where(v, nb // S, -1) != r)]
+        uniq.append(np.unique(remote))
+
+    halo_len = np.array([len(u) for u in uniq], np.int64)
+    H = int(max(1, halo_len.max() if Wn else 1))
+    pair_elems = np.zeros((Wn, Wn), np.int64)
+    for r in range(Wn):
+        owners = uniq[r] // S
+        cnt = np.bincount(owners, minlength=Wn) if len(owners) else \
+            np.zeros(Wn, np.int64)
+        pair_elems[:, r] = cnt  # column r: what each sender moves to r
+    K = int(max(1, pair_elems.max()))
+
+    send_idx = np.zeros((Wn, Wn, K), np.int32)
+    recv_pos = np.full((Wn, Wn, K), H, np.int32)  # default: dump slot
+    for r in range(Wn):
+        for s in range(Wn):
+            ids = uniq[r][uniq[r] // S == s]
+            if not len(ids):
+                continue
+            pos = np.searchsorted(uniq[r], ids).astype(np.int32)
+            send_idx[s, r, :len(ids)] = (ids - s * S).astype(np.int32)
+            recv_pos[r, s, :len(ids)] = pos
+
+    # local-frame adjacency: [0, S) own rows, [S, S+H) halo, S+H+1 PAD
+    nbr_local = np.full((N, Cd), S + H + 1, np.int32)
+    for r in range(Wn):
+        rows = slice(r * S, (r + 1) * S)
+        nb = nbr[rows]
+        v = nb >= 0
+        ownm = v & (np.where(v, nb // S, -1) == r)
+        rem = v & ~ownm
+        out = nbr_local[rows]
+        out[ownm] = (nb[ownm] - r * S).astype(np.int32)
+        out[rem] = (S + np.searchsorted(uniq[r], nb[rem])).astype(np.int32)
+        nbr_local[rows] = out
+
+    return HaloPlan(
+        wm=wm, K=K, H=H, send_idx=send_idx, recv_pos=recv_pos,
+        halo_len=halo_len, nbr_local=nbr_local, pair_elems=pair_elems,
+        slot_intra=slot_intra, slot_inter=slot_inter,
+    )

@@ -1,0 +1,102 @@
+"""Worker mesh: one `workers` device axis, blocks folded onto devices.
+
+The paper assigns one block per Akka worker.  Here a *worker* is a JAX
+device on the 1-D `workers` mesh axis; when the graph has more blocks than
+there are devices, `B = P // W` consecutive blocks fold onto each device
+(block-contiguous relabeling makes the fold a plain leading-axis shard:
+device w owns padded node rows `[w*B*Cn, (w+1)*B*Cn)`).
+
+On hardware the axis spans real accelerators; on CPU CI it spans the
+host devices created by `XLA_FLAGS=--xla_force_host_platform_device_count=N`
+(set before the first jax import — jax locks the device count on first
+use, which is why nothing in this module touches device state at import
+time).  With a single device everything still runs: W = 1 and the whole
+graph folds onto it, so the SPMD path is testable anywhere.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+#: the one mesh axis of the block runtime
+AXIS = "workers"
+
+
+def best_worker_count(P: int, n_devices: int) -> int:
+    """Largest W <= n_devices with W | P (every device gets B = P/W blocks).
+
+    Divisibility keeps the fold exact: a non-divisor W would strand partial
+    blocks on shard boundaries and break `block_of(u) = u // Cn` locality.
+    """
+    if P < 1:
+        raise ValueError(f"need at least one block, got P={P}")
+    for w in range(min(P, max(1, n_devices)), 0, -1):
+        if P % w == 0:
+            return w
+    return 1
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkerMesh:
+    """A 1-D device mesh plus the static block-fold geometry.
+
+    Attributes
+    ----------
+    mesh: the jax Mesh with the single `workers` axis.
+    W:    worker (device) count along the axis.
+    P:    number of graph blocks.
+    B:    blocks per worker (the fold), B * W == P.
+    Cn:   node capacity per block (from the graph).
+    """
+
+    mesh: Mesh
+    W: int
+    P: int
+    B: int
+    Cn: int
+
+    @property
+    def S(self) -> int:
+        """Padded nodes per worker shard (B blocks of Cn rows)."""
+        return self.B * self.Cn
+
+    @property
+    def N(self) -> int:
+        return self.P * self.Cn
+
+    def worker_of(self, u) -> int:
+        """Owning worker of a global padded node id."""
+        return u // self.S
+
+    def node_sharding(self) -> NamedSharding:
+        """Sharding for node arrays: leading (P*Cn) axis split over workers."""
+        return NamedSharding(self.mesh, PartitionSpec(AXIS))
+
+    def replicated(self) -> NamedSharding:
+        return NamedSharding(self.mesh, PartitionSpec())
+
+
+def make_worker_mesh(
+    g,  # GraphBlocks (duck-typed: .P, .Cn)
+    W: Optional[int] = None,
+    devices: Optional[Sequence[jax.Device]] = None,
+) -> WorkerMesh:
+    """Build the worker mesh for a block-partitioned graph.
+
+    W defaults to `best_worker_count(P, #devices)`; pass it explicitly to
+    force a deeper fold (e.g. W=2 on an 8-device host to exercise B=4).
+    """
+    devices = list(jax.devices() if devices is None else devices)
+    if W is None:
+        W = best_worker_count(g.P, len(devices))
+    if W < 1 or W > len(devices):
+        raise ValueError(f"W={W} outside [1, {len(devices)} devices]")
+    if g.P % W:
+        raise ValueError(f"W={W} must divide P={g.P} (blocks-per-device fold)")
+    mesh = Mesh(np.asarray(devices[:W]), (AXIS,))
+    return WorkerMesh(mesh=mesh, W=W, P=g.P, B=g.P // W, Cn=g.Cn)

@@ -1,0 +1,431 @@
+"""shard_map superstep execution: BLADYG modes as real collectives.
+
+`SpmdExecutor` compiles the graph primitives over the worker mesh with the
+halo plan baked in:
+
+  W2W   — `_halo_exchange`: gather the send buffers, `lax.all_to_all`
+          across the `workers` axis, scatter into the halo buffer; the
+          neighbor read is then a purely local gather through the
+          plan's local-frame adjacency.
+  W2M   — per-block summaries leave the shard through the sharded
+          output (an all-gather) or a `lax.psum` for reduced flags.
+  M2W   — the master's directive enters the next superstep replicated.
+  Local — everything else: h-index / frontier math on the shard.
+
+`SpmdEngine.run_spmd` is the program-level executor (the distributed
+counterpart of `core.engine.BladygEngine.run`): it drives an
+`SpmdProgram`'s worker/master ops and records per-superstep
+`SuperstepTrace`s whose W2W numbers come from the **executed** halo plan
+(`HaloPlan.slot_counts`), not from shape reconstruction.
+
+Compiled step functions are cached per (mesh, halo capacity H): the plan
+tables are *arguments*, not closure constants, so maintenance loops that
+rebuild the plan after every structural update (the halo changes with the
+adjacency) reuse the compiled executables as long as the halo capacity is
+stable — jit's shape cache handles the rest.
+
+Bit-exactness: all math is int32/bool and identical to the single-device
+reference (`kernels.ref`), so `coreness_spmd` equals
+`ops.coreness_blocks(backend="jnp")` exactly for any worker count,
+including the blocks-per-device fold and W = 1.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec
+
+from ..kernels.ref import hindex_rows
+from .halo import HaloPlan, build_halo_plan
+from .mesh import AXIS, WorkerMesh, make_worker_mesh
+
+P_ = PartitionSpec
+
+
+def _halo_exchange(x_local, send_idx, recv_pos, H: int, fill):
+    """One W2W round for a per-node field shard.
+
+    x_local: (S, ...) — this worker's values.
+    send_idx: (W, K)  — local rows to serve each receiver.
+    recv_pos: (W, K)  — halo positions for each sender's values (pad
+                        entries target the dump slot H).
+    Returns the (H+2, ...) halo buffer: [0, H) real entries, H the dump
+    slot, H+1 the PAD sentinel pinned at `fill`.
+    """
+    tail = x_local.shape[1:]
+    sendbuf = x_local[send_idx]                              # (W, K, ...)
+    recvbuf = jax.lax.all_to_all(
+        sendbuf, AXIS, split_axis=0, concat_axis=0, tiled=True
+    )
+    buf = jnp.full((H + 2,) + tail, fill, x_local.dtype)
+    return buf.at[recv_pos.reshape(-1)].set(
+        recvbuf.reshape((-1,) + tail)
+    ).at[H + 1].set(fill)
+
+
+def _neighbor_vals(x_local, halo_buf, nbr_local):
+    """Local gather through the plan's local-frame adjacency: (S, Cd, ...)."""
+    vals = jnp.concatenate([x_local, halo_buf], axis=0)
+    return vals[nbr_local]
+
+
+def _any_global(x) -> jax.Array:
+    """Replicated 'any' across all shards (the W2M reduced flag)."""
+    return jax.lax.psum(jnp.any(x).astype(jnp.int32), AXIS) > 0
+
+
+def _exchange_gather(field, nbrl, send, recv, H, fill):
+    """W2W exchange + local gather: field (S, ...) -> (S, Cd, ...).
+
+    send/recv arrive with their sharded leading worker axis of size 1.
+    """
+    halo = _halo_exchange(field, send[0], recv[0], H, fill)
+    return _neighbor_vals(field, halo, nbrl)
+
+
+# ---------------------------------------------------------------------------
+# Compiled step functions, cached per (mesh, H).  Plan tables and state are
+# arguments, so executors rebuilt after graph updates hit this cache.
+# ---------------------------------------------------------------------------
+
+
+def _smap(fn, mesh, n_lead: int, n_rep: int, out_specs):
+    """shard_map + jit: `n_lead` node-sharded args, `n_rep` replicated args,
+    then the three plan tables (nbr_local / send / recv, worker-sharded)."""
+    specs = [P_(AXIS)] * n_lead + [P_()] * n_rep + [P_(AXIS)] * 3
+    return jax.jit(shard_map(
+        fn, mesh=mesh, in_specs=tuple(specs), out_specs=out_specs,
+        check_rep=False,
+    ))
+
+
+@functools.lru_cache(maxsize=128)
+def _compiled_hindex(mesh, H: int):
+    def local(est, nbrl, send, recv):
+        vals = _exchange_gather(est, nbrl, send, recv, H, jnp.int32(-1))
+        return hindex_rows(vals)
+
+    return _smap(local, mesh, 1, 0, P_(AXIS))
+
+
+@functools.lru_cache(maxsize=128)
+def _compiled_frontier(mesh, H: int):
+    def local(f, elig, vis, nbrl, send, recv):
+        vals = _exchange_gather(
+            f.astype(jnp.int8), nbrl, send, recv, H, jnp.int8(0))
+        return jnp.any(vals > 0, axis=1) & elig & ~vis
+
+    return _smap(local, mesh, 3, 0, P_(AXIS))
+
+
+@functools.lru_cache(maxsize=128)
+def _compiled_coreness(mesh, H: int):
+    def local(est, mask, max_steps, nbrl, send, recv):
+        def cond(c):
+            _, changed, it = c
+            return changed & (it < max_steps)
+
+        def body(c):
+            est, _, it = c
+            vals = _exchange_gather(est, nbrl, send, recv, H, jnp.int32(-1))
+            new = jnp.where(mask, jnp.minimum(est, hindex_rows(vals)), est)
+            return new, _any_global(new != est), it + 1
+
+        est, _, steps = jax.lax.while_loop(
+            cond, body, (est, jnp.bool_(True), jnp.int32(0)))
+        return est, steps
+
+    return _smap(local, mesh, 2, 1, (P_(AXIS), P_()))
+
+
+@functools.lru_cache(maxsize=128)
+def _compiled_reach(mesh, H: int):
+    def local(core, mask, roots, ks, max_steps, nbrl, send, recv):
+        elig = (core[:, None] == ks[None, :]) & mask[:, None]
+        visited0 = roots & elig
+
+        def cond(c):
+            _, _, cont, it = c
+            return cont & (it < max_steps)
+
+        def body(c):
+            visited, frontier, _, it = c
+            vals = _exchange_gather(
+                frontier.astype(jnp.int8), nbrl, send, recv, H, jnp.int8(0))
+            nxt = jnp.any(vals > 0, axis=1) & elig & ~visited
+            return visited | nxt, nxt, _any_global(nxt), it + 1
+
+        visited, _, _, steps = jax.lax.while_loop(
+            cond, body,
+            (visited0, visited0, _any_global(visited0), jnp.int32(0)))
+        return visited, steps
+
+    return _smap(local, mesh, 3, 2, (P_(AXIS), P_()))
+
+
+@functools.lru_cache(maxsize=128)
+def _compiled_recompute(mesh, H: int):
+    def local(est, cand, mask, max_steps, nbrl, send, recv):
+        move = cand & mask
+
+        def cond(c):
+            _, changed, it = c
+            return changed & (it < max_steps)
+
+        def body(c):
+            est, _, it = c
+            vals = _exchange_gather(est, nbrl, send, recv, H, jnp.int32(-1))
+            new = jnp.where(move, jnp.minimum(est, hindex_rows(vals)), est)
+            return new, _any_global(new != est), it + 1
+
+        est, _, steps = jax.lax.while_loop(
+            cond, body, (est, jnp.bool_(True), jnp.int32(0)))
+        return est, steps
+
+    return _smap(local, mesh, 3, 1, (P_(AXIS), P_()))
+
+
+class LocalCtx(NamedTuple):
+    """Per-shard context handed to `SpmdProgram.worker_local`."""
+
+    deg: jax.Array        # (S,) int32
+    node_mask: jax.Array  # (S,) bool
+    B: int                # blocks on this worker (fold)
+    Cn: int               # nodes per block
+    Cd: int
+
+
+class SpmdExecutor:
+    """Compiled halo-exchange primitives for one (graph, mesh) pair.
+
+    Holds the worker mesh, the halo plan, and the per-(mesh, H) compiled
+    step functions.  The plan is a function of `nbr` *contents* — after
+    structural updates (edge insert/delete) build a fresh executor; the
+    compiled executables are reused as long as the halo capacity holds.
+    """
+
+    def __init__(self, g, W: Optional[int] = None,
+                 wm: Optional[WorkerMesh] = None,
+                 plan: Optional[HaloPlan] = None):
+        self.wm = wm if wm is not None else make_worker_mesh(g, W=W)
+        self.plan = plan if plan is not None else build_halo_plan(g, self.wm)
+        self.node_mask = jnp.asarray(g.node_mask)
+        self.deg = jnp.asarray(g.deg, jnp.int32)
+        self._nbrl = jnp.asarray(self.plan.nbr_local)
+        self._send = jnp.asarray(self.plan.send_idx)
+        self._recv = jnp.asarray(self.plan.recv_pos)
+
+    @property
+    def _tables(self):
+        return self._nbrl, self._send, self._recv
+
+    def hindex(self, est: jax.Array) -> jax.Array:
+        """h-index of neighbor estimates — one executed W2W superstep."""
+        fn = _compiled_hindex(self.wm.mesh, self.plan.H)
+        return fn(est.astype(jnp.int32), *self._tables)
+
+    def frontier(self, f, eligible, visited) -> jax.Array:
+        """One masked BFS hop; f/eligible/visited are (N, R) bool."""
+        fn = _compiled_frontier(self.wm.mesh, self.plan.H)
+        return fn(f.astype(bool), eligible.astype(bool),
+                  visited.astype(bool), *self._tables)
+
+    def coreness(self, max_steps: int = 10_000) -> Tuple[jax.Array, jax.Array]:
+        """Full min-H coreness on the mesh; returns (est, supersteps)."""
+        fn = _compiled_coreness(self.wm.mesh, self.plan.H)
+        est0 = jnp.where(self.node_mask, self.deg, 0).astype(jnp.int32)
+        return fn(est0, self.node_mask, jnp.int32(max_steps), *self._tables)
+
+    def k_reachable_batch(self, core, roots, ks, max_steps: int = 10_000):
+        """R stacked k-reachability searches (semantics of
+        `core.kcore_dynamic.k_reachable_batch`); returns (visited, steps)."""
+        fn = _compiled_reach(self.wm.mesh, self.plan.H)
+        return fn(jnp.asarray(core, jnp.int32), self.node_mask,
+                  roots.astype(bool), jnp.asarray(ks, jnp.int32),
+                  jnp.int32(max_steps), *self._tables)
+
+    def restricted_recompute(self, est0, cand, max_steps: int = 10_000):
+        """Clamped min-H iteration (only `cand` nodes move) on the mesh."""
+        fn = _compiled_recompute(self.wm.mesh, self.plan.H)
+        return fn(jnp.asarray(est0, jnp.int32), cand.astype(bool),
+                  self.node_mask, jnp.int32(max_steps), *self._tables)
+
+
+# ---------------------------------------------------------------------------
+# Program-level executor: the distributed BladygEngine.
+# ---------------------------------------------------------------------------
+
+
+class SpmdProgram:
+    """A BLADYG program in per-shard form.
+
+    `worker_local` sees only this worker's rows plus the halo-served
+    neighbor values of the declared exchange field; `master_compute` runs
+    replicated on the gathered per-block summaries, exactly the paper's
+    masterCompute.
+    """
+
+    #: value PAD / dump slots read as (must match the field dtype)
+    halo_fill = -1
+
+    def halo_field(self, wstate) -> jax.Array:
+        """The (S, ...) per-node array whose values neighbors read (W2W)."""
+        return wstate
+
+    def worker_local(self, ctx: LocalCtx, wstate, nb_vals, directive):
+        """(ctx, local state, (S, Cd, ...) neighbor values, directive)
+        -> (local state', per-block summary with leading axis B)."""
+        raise NotImplementedError
+
+    def master_compute(self, mstate, summary):
+        """(master state, gathered (P, ...) summaries)
+        -> (master state', directive, halt)."""
+        raise NotImplementedError
+
+
+class SpmdCorenessProgram(SpmdProgram):
+    """min-H coreness as an SPMD program (`core.kcore.CorenessProgram`
+    routed through the mesh): the estimate vector is the exchanged field,
+    the per-block changed flags are the W2M summary, the halt decision is
+    the replicated M2W directive."""
+
+    halo_fill = -1
+
+    # stateless: any two instances are interchangeable, so they share the
+    # engine's compiled-step cache entry
+    def __hash__(self):
+        return hash(type(self))
+
+    def __eq__(self, other):
+        return type(other) is type(self)
+
+    def worker_local(self, ctx, est, nb_vals, directive):
+        new = jnp.where(
+            ctx.node_mask, jnp.minimum(est, hindex_rows(nb_vals)), est)
+        changed = jnp.any(
+            (new != est).reshape(ctx.B, ctx.Cn), axis=1)  # per-block W2M
+        return new, changed
+
+    def master_compute(self, mstate, summary):
+        return mstate, None, jnp.logical_not(jnp.any(summary))
+
+
+class SpmdEngine:
+    """Superstep scheduler over the worker mesh (cf. `BladygEngine`).
+
+    Differences from the single-device engine: workerCompute executes
+    under `shard_map` with a real halo exchange, and the recorded
+    per-superstep W2W counts come from the executed `HaloPlan`
+    (`plan.slot_counts()`), not from declared shapes.
+    """
+
+    #: compiled program steps, keyed by (mesh, H, B, Cn, Cd, program
+    #: instance) — the program is part of the key because the closure
+    #: captures it, so reusing one program object across runs (as
+    #: `coreness_via_spmd` does) reuses the compiled superstep.
+    _step_cache: dict = {}
+
+    def __init__(self, g, W: Optional[int] = None,
+                 executor: Optional[SpmdExecutor] = None):
+        self.g = g
+        self.ex = executor if executor is not None else SpmdExecutor(g, W=W)
+        self.traces = []
+
+    def _step_fn(self, program: SpmdProgram):
+        ex = self.ex
+        H = ex.plan.H
+        B, Cn = ex.wm.B, ex.wm.Cn
+        Cd = ex.plan.nbr_local.shape[1]
+        key = (ex.wm.mesh, H, B, Cn, Cd, program)
+        cached = self._step_cache.get(key)
+        if cached is not None:
+            return cached
+
+        def local(wstate, deg, mask, directive, nbrl, send, recv):
+            field = program.halo_field(wstate)
+            nb_vals = _exchange_gather(
+                field, nbrl, send, recv, H,
+                jnp.asarray(program.halo_fill, field.dtype))
+            ctx = LocalCtx(deg=deg, node_mask=mask, B=B, Cn=Cn, Cd=Cd)
+            return program.worker_local(ctx, wstate, nb_vals, directive)
+
+        fn = _smap(local, ex.wm.mesh, 3, 1, (P_(AXIS), P_(AXIS)))
+        self._step_cache[key] = fn
+        return fn
+
+    def run_spmd(
+        self,
+        program: SpmdProgram,
+        wstate: Any,
+        mstate: Any,
+        directive: Any = None,
+        max_supersteps: int = 10_000,
+    ) -> Tuple[Any, Any]:
+        """Execute the program; worker steps run sharded on the mesh.
+
+        The trace's W2W numbers are the executed halo plan's slot counts
+        (block granularity — identical accounting to the paper's one
+        worker per block, independent of the device fold).
+        """
+        from ..core.engine import BladygEngine, Mode, SuperstepTrace
+
+        step = self._step_fn(program)
+        w2w = self.ex.plan.slot_counts()
+        modes = getattr(program, "modes",
+                        Mode.LOCAL | Mode.M2W | Mode.W2M | Mode.W2W)
+        it = 0
+        while it < max_supersteps:
+            # None directives still need an array through shard_map; the
+            # metering sees the real (None) directive.
+            d = directive if directive is not None else jnp.int32(0)
+            wstate, summary = step(
+                wstate, self.ex.deg, self.ex.node_mask, d, *self.ex._tables)
+            mstate, directive, halt = program.master_compute(mstate, summary)
+            self.traces.append(SuperstepTrace(
+                it, modes, BladygEngine._meter(summary, directive, w2w)))
+            it += 1
+            if bool(halt):
+                break
+        return wstate, mstate
+
+    def message_totals(self):
+        from ..core.engine import MessageStats
+
+        tot = MessageStats()
+        for t in self.traces:
+            tot = tot + t.stats
+        return tot
+
+
+# ---------------------------------------------------------------------------
+# Functional entry points (what `kernels.ops` dispatches to).
+# ---------------------------------------------------------------------------
+
+
+def coreness_spmd(g, W: Optional[int] = None, max_steps: int = 10_000,
+                  executor: Optional[SpmdExecutor] = None) -> jax.Array:
+    """Full coreness on the worker mesh — bit-identical to the jnp path."""
+    ex = executor if executor is not None else SpmdExecutor(g, W=W)
+    est, _ = ex.coreness(max_steps=max_steps)
+    return est
+
+
+def hindex_spmd(g, est, W: Optional[int] = None,
+                executor: Optional[SpmdExecutor] = None) -> jax.Array:
+    """One h-index superstep on the mesh.  Builds an executor per call —
+    loops should construct `SpmdExecutor` once and call `.hindex`."""
+    ex = executor if executor is not None else SpmdExecutor(g, W=W)
+    return ex.hindex(est)
+
+
+def frontier_spmd(g, f, eligible, visited, W: Optional[int] = None,
+                  executor: Optional[SpmdExecutor] = None) -> jax.Array:
+    """One masked BFS hop on the mesh (eligible may be (N,) or (N, R))."""
+    ex = executor if executor is not None else SpmdExecutor(g, W=W)
+    if eligible.ndim == 1:
+        eligible = jnp.broadcast_to(eligible[:, None], f.shape)
+    return ex.frontier(f, eligible, visited)

@@ -1,0 +1,218 @@
+"""Streaming update ingestion: route batches to owner blocks, escalate
+cross-block work to the coordinator.
+
+BLADYG's dynamic side is a *stream* of edge updates arriving at the
+coordinator.  This module is that ingestion path over the block runtime:
+
+  1. a window of up to R updates is taken off the stream and validated
+     at the host boundary (against the *current* graph — streams may be
+     generators, so there is no up-front whole-stream pass);
+  2. one batched Theorem-1 candidate search (on the frontier kernels' R
+     axis, or on the worker mesh under `backend="ell_spmd"`) determines
+     each update's candidate set;
+  3. updates that are **block-local** — both endpoints in one block and
+     the candidate set confined to it — and independent of everything
+     earlier in the window are applied together, with ONE joint clamped
+     recompute (each update's recompute only moves nodes of its own
+     block: the paper's workerCompute-only fast path);
+  4. everything else escalates to the coordinator path (exact sequential
+     maintenance, original stream order): cross-block endpoints,
+     candidate sets that spill over the block boundary, and conflicts
+     with earlier in-window updates.
+
+Escalation order is what keeps this exact: an update is only hoisted
+into the block-local batch if its candidate set is disjoint from every
+*earlier* window column — the same commutation argument as
+`core.kcore_dynamic.maintain_batch` — so the final coreness is
+bit-identical to processing the stream one update at a time.
+"""
+from __future__ import annotations
+
+from itertools import islice
+from typing import Dict, Iterable, Iterator, List, NamedTuple, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import kcore_dynamic as kd
+from ..core.kcore_dynamic import SPMD_BACKEND
+
+
+class StreamStats(NamedTuple):
+    """Routing + superstep accounting for one `run_stream` pass."""
+
+    updates: int                 # total updates ingested
+    batches: int                 # windows taken off the stream
+    block_local: int             # applied on the block-local batched path
+    escalated_cross_block: int   # endpoints in two blocks -> coordinator
+    escalated_spill: int         # candidates left the owner block
+    escalated_conflict: int      # overlapped an earlier window column
+    bfs_steps: int               # frontier supersteps (all paths)
+    recompute_steps: int         # clamped min-H supersteps (all paths)
+    per_block: Tuple[int, ...]   # block-local updates applied per block
+
+    @property
+    def escalated(self) -> int:
+        return (self.escalated_cross_block + self.escalated_spill
+                + self.escalated_conflict)
+
+
+def _owner_blocks(g, ids) -> np.ndarray:
+    """Owning block of global padded node ids — THE routing rule (block-
+    contiguous relabeling makes it pure arithmetic); every ownership
+    decision in this module goes through here."""
+    return np.asarray(ids) // g.Cn
+
+
+def owner_block(g, u: int) -> int:
+    """Owning block of a global padded node id (host-side routing key)."""
+    return int(_owner_blocks(g, u))
+
+
+def route_updates(
+    g, updates: Iterable[Tuple[int, int, int]]
+) -> Tuple[Dict[int, List[Tuple[int, int, int]]], List[Tuple[int, int, int]]]:
+    """Host-side router: split a batch into per-owner-block queues plus the
+    cross-block remainder the coordinator must handle itself.
+
+    An update is routed to block b iff both endpoints live in b (the M2W
+    directive then targets a single worker); otherwise it stays with the
+    coordinator.  Returns ({block: [updates]}, cross_block_updates).
+    """
+    per_block: Dict[int, List[Tuple[int, int, int]]] = {}
+    cross: List[Tuple[int, int, int]] = []
+    for u, v, op in updates:
+        bu, bv = owner_block(g, u), owner_block(g, v)
+        if bu == bv:
+            per_block.setdefault(bu, []).append((u, v, op))
+        else:
+            cross.append((u, v, op))
+    return per_block, cross
+
+
+def _iter_windows(updates, R: int) -> Iterator[list]:
+    it = iter(updates)
+    while True:
+        window = list(islice(it, R))
+        if not window:
+            return
+        yield window
+
+
+def run_stream(
+    g,
+    core,
+    updates: Iterable[Tuple[int, int, int]],
+    R: int = 8,
+    backend: str = "jnp",
+    W=None,
+):
+    """Ingest an update stream; returns (g', core', StreamStats).
+
+    `updates` may be any iterable (including a generator) of (u, v, op)
+    with op = +1 insert / -1 delete, ids global padded.  Exactness: the
+    final coreness equals sequential per-update maintenance.  With
+    `backend="ell_spmd"` every superstep runs on the worker mesh.
+
+    NOTE: consumes `g` via jit buffer donation on the escalation path
+    (like `maintain_batch`) — use the returned graph.
+    """
+    if R < 1:
+        raise ValueError(f"R must be >= 1, got {R}")
+    spmd = backend == SPMD_BACKEND
+    core = jnp.asarray(core)
+    tot = dict(bfs=0, rec=0, cand=0, batched=0, seq=0, batches=0)
+    n_updates = 0
+    n_local = 0
+    esc_cross = esc_spill = esc_conflict = 0
+    per_block = np.zeros(g.P, np.int64)
+
+    for window in _iter_windows(updates, R):
+        kd._validate_updates_host(g, window)
+        tot["batches"] += 1
+        n = len(window)
+        n_updates += n
+        us = np.zeros(R, np.int32)
+        vs = np.zeros(R, np.int32)
+        ops_ = np.zeros(R, np.int32)
+        us[:n] = [u for u, _, _ in window]
+        vs[:n] = [v for _, v, _ in window]
+        ops_[:n] = [op for _, _, op in window]
+        valid = np.zeros(R, bool)
+        valid[:n] = True
+
+        if spmd:
+            cand, steps = kd._batch_candidates_spmd(
+                kd._spmd_executor(g, W), g, core, us, vs, valid)
+        else:
+            cand, steps = kd._batch_candidates(
+                g, core, jnp.asarray(us), jnp.asarray(vs),
+                jnp.asarray(valid), backend=backend)
+        tot["bfs"] += int(steps)
+        cand_np = np.asarray(cand)
+
+        # routing decisions, host-side (same rule as `route_updates`)
+        block_of = _owner_blocks(g, np.arange(g.N))
+        owner_u = _owner_blocks(g, us[:n])
+        intra = owner_u == _owner_blocks(g, vs[:n])
+        spill = np.array([
+            bool((cand_np[:, r] & (block_of != owner_u[r])).any())
+            for r in range(n)
+        ])
+        overlap = cand_np.T.astype(np.int64) @ cand_np.astype(np.int64)
+
+        accepted: List[int] = []
+        escalated: List[int] = []
+        for r in range(n):
+            conflicts = bool(overlap[r, :r].any())
+            if intra[r] and not spill[r] and not conflicts:
+                accepted.append(r)
+                continue
+            escalated.append(r)
+            if not intra[r]:
+                esc_cross += 1
+            elif spill[r]:
+                esc_spill += 1
+            else:
+                esc_conflict += 1
+
+        if accepted:
+            acc = np.asarray(accepted)
+            ins_cols = acc[ops_[acc] > 0]
+            del_cols = acc[ops_[acc] < 0]
+            cand_ins = jnp.asarray(cand_np[:, ins_cols].any(axis=1))
+            cand_del = jnp.asarray(cand_np[:, del_cols].any(axis=1))
+            us_a = np.zeros(R, np.int32)
+            vs_a = np.zeros(R, np.int32)
+            ops_a = np.zeros(R, np.int32)
+            us_a[:len(acc)] = us[acc]
+            vs_a[:len(acc)] = vs[acc]
+            ops_a[:len(acc)] = ops_[acc]
+            if spmd:
+                g, core, rec = kd._apply_and_recompute_spmd(
+                    g, core, us_a, vs_a, ops_a, cand_ins, cand_del, W=W)
+            else:
+                g, core, rec = kd._apply_and_recompute(
+                    g, core,
+                    jnp.asarray(us_a), jnp.asarray(vs_a), jnp.asarray(ops_a),
+                    cand_ins, cand_del, backend=backend)
+            tot["rec"] += int(rec)
+            n_local += len(accepted)
+            np.add.at(per_block, owner_u[acc], 1)
+
+        # coordinator path, original stream order within the window
+        for r in escalated:
+            g, core = kd._maintain_one(g, core, window[r], tot, backend, W=W)
+
+    stats = StreamStats(
+        updates=n_updates,
+        batches=tot["batches"],
+        block_local=n_local,
+        escalated_cross_block=esc_cross,
+        escalated_spill=esc_spill,
+        escalated_conflict=esc_conflict,
+        bfs_steps=tot["bfs"],
+        recompute_steps=tot["rec"],
+        per_block=tuple(int(x) for x in per_block),
+    )
+    return g, core, stats

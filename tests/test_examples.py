@@ -1,0 +1,40 @@
+"""Smoke-run every graph example so the example scripts cannot rot.
+
+Each example is executed as a subprocess (its own jax process: examples
+assert their own invariants and exit nonzero on failure) at a tiny scale.
+The LM examples (serve_lm/train_lm) are exercised by the arch smoke tests
+and are out of scope here.
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+EXAMPLES = REPO / "examples"
+
+GRAPH_EXAMPLES = [
+    ("quickstart.py", []),
+    ("kcore_dynamic.py", ["--nodes", "300", "--updates", "8", "--blocks", "2"]),
+    ("kcore_dynamic.py", ["--nodes", "250", "--updates", "4", "--blocks", "2",
+                          "--backend", "ell_spmd", "--stream"]),
+    ("partition_dynamic.py", ["--method", "hash", "--scale", "0.05"]),
+]
+
+
+@pytest.mark.parametrize("script,args", GRAPH_EXAMPLES,
+                         ids=lambda p: p if isinstance(p, str) else "")
+def test_graph_example_runs(script, args):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    proc = subprocess.run(
+        [sys.executable, str(EXAMPLES / script), *args],
+        capture_output=True, text=True, timeout=900, env=env, cwd=str(REPO),
+    )
+    assert proc.returncode == 0, (
+        f"{script} {' '.join(args)} failed\n"
+        f"--- stdout ---\n{proc.stdout}\n--- stderr ---\n{proc.stderr}"
+    )

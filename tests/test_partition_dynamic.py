@@ -1,0 +1,105 @@
+"""Deletion-triggered repartition-threshold protocol (paper §4.2).
+
+On deletions every worker reports its block's edge count (workerCompute,
+W2M) and the coordinator repartitions iff the imbalance summary exceeds
+the threshold (masterCompute).  `partition_dynamic.delete_edges` is that
+protocol; these tests pin its three contractual behaviors:
+
+  * below threshold — edge owners of the surviving edges are untouched
+    (no data movement, the paper's cheap path);
+  * above threshold — a full repartition runs and restores balance;
+  * the balance summary the decision is made on equals the NumPy oracle
+    max(block size) / mean(block size).
+"""
+import numpy as np
+import pytest
+
+from repro.core.partition import edge_balance
+from repro.core.partition_dynamic import (
+    PartitionState, delete_edges, initial_partition)
+from repro.graphgen import barabasi_albert
+
+P = 4
+
+
+@pytest.fixture()
+def skewed_state():
+    """Hand-built owner assignment: block 0 holds half of all edges, so
+    targeted deletions can push the imbalance over any threshold."""
+    edges = barabasi_albert(200, 4, seed=9)
+    m = len(edges)
+    owner = np.zeros(m, np.int64)
+    owner[: m // 2] = 0
+    owner[m // 2:] = 1 + np.arange(m - m // 2) % (P - 1)
+    return PartitionState(edges, owner, int(edges.max()) + 1, P, "hash")
+
+
+def _balance_oracle(owner: np.ndarray) -> float:
+    size = np.bincount(owner, minlength=P)
+    return float(size.max() / size.mean())
+
+
+def test_balance_summary_matches_numpy_oracle(skewed_state):
+    st = skewed_state
+    assert edge_balance(st.owner, P) == pytest.approx(
+        _balance_oracle(st.owner))
+    # and for the post-deletion state the decision is actually made on
+    keep = np.ones(len(st.edges), bool)
+    keep[:10] = False
+    assert edge_balance(st.owner[keep], P) == pytest.approx(
+        _balance_oracle(st.owner[keep]))
+
+
+def test_below_threshold_keeps_owners_stable(skewed_state):
+    st = skewed_state
+    # delete a few block-0 edges: block 0 stays the biggest but the
+    # imbalance stays under a generous threshold
+    idx = np.arange(5)
+    bal_after = _balance_oracle(np.delete(st.owner, idx))
+    st2, repartitioned, ut = delete_edges(st, idx, threshold=bal_after + 0.5)
+    assert not repartitioned
+    assert ut >= 0.0
+    keep = np.ones(len(st.edges), bool)
+    keep[idx] = False
+    np.testing.assert_array_equal(st2.edges, st.edges[keep])
+    np.testing.assert_array_equal(st2.owner, st.owner[keep])  # stable owners
+
+
+def test_above_threshold_triggers_full_repartition(skewed_state):
+    st = skewed_state
+    # deleting every non-block-0 edge leaves all survivors on one block:
+    # imbalance == P, above any sane threshold
+    idx = np.flatnonzero(st.owner != 0)
+    survivors = np.delete(st.owner, idx)
+    assert _balance_oracle(survivors) == pytest.approx(P)
+    st2, repartitioned, _ = delete_edges(st, idx, threshold=1.5)
+    assert repartitioned
+    assert len(st2.owner) == len(st.edges) - len(idx)
+    # the repartition restored balance below the trigger level
+    assert _balance_oracle(st2.owner) < P / 2
+    # and owners were genuinely recomputed (hash spreads over blocks)
+    assert len(np.unique(st2.owner)) > 1
+
+
+def test_threshold_boundary_is_strict(skewed_state):
+    """Repartition fires only strictly above the threshold."""
+    st = skewed_state
+    idx = np.arange(3)
+    bal = edge_balance(np.delete(st.owner, idx), P)
+    _, at_threshold, _ = delete_edges(st, idx, threshold=bal)
+    assert not at_threshold  # bal > bal is False
+    _, above, _ = delete_edges(st, idx, threshold=bal - 1e-6)
+    assert above
+
+
+def test_initial_partition_then_delete_roundtrip():
+    """End-to-end §4.2 flow: partition, delete, re-balance decision."""
+    edges = barabasi_albert(150, 3, seed=4)
+    n = int(edges.max()) + 1
+    st, _ = initial_partition(edges, n, P, "hash", seed=0)
+    rng = np.random.default_rng(0)
+    idx = rng.choice(len(edges), size=len(edges) // 10, replace=False)
+    st2, repartitioned, _ = delete_edges(st, idx, threshold=1.5)
+    assert len(st2.edges) == len(edges) - len(idx)
+    # hash partitioning is balanced; random 10% deletions keep it that way
+    assert not repartitioned

@@ -1,0 +1,148 @@
+"""Streaming update router: block routing, escalation, exactness.
+
+The contract of `runtime.run_stream`: final (graph, coreness) are
+bit-identical to sequential per-update maintenance, while updates that
+are block-local and independent ride the batched workerCompute-only path
+and everything else escalates to the coordinator.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import build_blocks, coreness, maintain_batch_host
+from repro.core.partition import node_random_partition
+from repro.graphgen import barabasi_albert
+from repro.runtime import route_updates, run_stream
+from repro.runtime.stream import owner_block
+
+P = 4
+COMMUNITY = 12  # nodes per block in the community graph
+
+
+def _clone(g):
+    return jax.tree.map(
+        lambda x: jnp.copy(x) if hasattr(x, "dtype") else x, g)
+
+
+def community_graph():
+    """P disjoint communities, one per block: candidate sets can never
+    leave the owner block, so intra-block updates are block-local."""
+    edges = []
+    for b in range(P):
+        base = b * COMMUNITY
+        for i in range(COMMUNITY):
+            edges.append((base + i, base + (i + 1) % COMMUNITY))  # cycle
+            edges.append((base + i, base + (i + 2) % COMMUNITY))  # chords
+    edges = np.array(edges)
+    n = P * COMMUNITY
+    assign = np.arange(n) // COMMUNITY
+    return build_blocks(edges, n, assign, P=P, deg_slack=16)
+
+
+def ba_graph():
+    edges = barabasi_albert(160, 4, seed=7)
+    n = int(edges.max()) + 1
+    assign = node_random_partition(n, P, seed=2)
+    return build_blocks(edges, n, assign, P=P, deg_slack=48)
+
+
+def _pad_id(g, b, i):
+    """Global padded id of the i-th node of block b (community graph)."""
+    orig = np.asarray(g.orig_id)
+    return int(np.flatnonzero(orig == b * COMMUNITY + i)[0])
+
+
+def test_route_updates_splits_by_owner_block():
+    g = community_graph()
+    ups = [
+        (_pad_id(g, 0, 0), _pad_id(g, 0, 5), +1),   # block 0
+        (_pad_id(g, 2, 1), _pad_id(g, 2, 7), +1),   # block 2
+        (_pad_id(g, 0, 3), _pad_id(g, 3, 3), +1),   # cross 0-3
+    ]
+    per_block, cross = route_updates(g, ups)
+    assert set(per_block) == {0, 2}
+    assert per_block[0] == [ups[0]] and per_block[2] == [ups[1]]
+    assert cross == [ups[2]]
+    assert owner_block(g, ups[0][0]) == 0
+
+
+def test_block_local_updates_ride_the_batched_path():
+    g = community_graph()
+    core0 = coreness(g, backend="jnp")
+    # one independent intra-block insertion per block: all block-local
+    ups = [(_pad_id(g, b, 0), _pad_id(g, b, 5), +1) for b in range(P)]
+    g2, core2, st = run_stream(_clone(g), core0, ups, R=P)
+    assert st.block_local == P and st.escalated == 0
+    assert st.per_block == (1,) * P
+    assert (np.asarray(coreness(g2, backend="jnp"))
+            == np.asarray(core2)).all()
+
+
+def test_cross_block_and_conflicts_escalate():
+    g = community_graph()
+    core0 = coreness(g, backend="jnp")
+    u00, u05 = _pad_id(g, 0, 0), _pad_id(g, 0, 5)
+    ups = [
+        (u00, u05, +1),                         # block-local
+        (u00, _pad_id(g, 0, 6), +1),            # shares u00 -> conflict
+        (_pad_id(g, 1, 0), _pad_id(g, 2, 0), +1),  # cross-block
+    ]
+    g2, core2, st = run_stream(_clone(g), core0, ups, R=4)
+    assert st.escalated_cross_block == 1
+    assert st.escalated_conflict >= 1
+    # exactness regardless of routing decisions
+    ref_g, ref_core, _ = maintain_batch_host(_clone(g), core0, ups)
+    assert (np.asarray(core2) == np.asarray(ref_core)).all()
+    assert (np.asarray(g2.nbr) == np.asarray(ref_g.nbr)).all()
+
+
+def test_stream_exact_vs_sequential_on_general_graph():
+    from repro.core.updates import sample_deletions, sample_insertions
+
+    g = ba_graph()
+    core0 = coreness(g, backend="jnp")
+    ups = (sample_insertions(g, 3, "inter", seed=2)
+           + sample_insertions(g, 3, "intra", seed=3)
+           + sample_deletions(g, 3, "inter", seed=4)
+           + sample_deletions(g, 3, "intra", seed=5))
+    ref_g, ref_core, _ = maintain_batch_host(_clone(g), core0, list(ups))
+    g2, core2, st = run_stream(_clone(g), core0, ups, R=4)
+    assert (np.asarray(core2) == np.asarray(ref_core)).all()
+    assert (np.asarray(g2.nbr) == np.asarray(ref_g.nbr)).all()
+    assert st.updates == len(ups)
+    assert st.block_local + st.escalated == len(ups)
+
+
+def test_stream_accepts_generators():
+    g = community_graph()
+    core0 = coreness(g, backend="jnp")
+    ups = [(_pad_id(g, b, 1), _pad_id(g, b, 6), +1) for b in range(P)]
+    g2, core2, st = run_stream(_clone(g), core0, iter(ups), R=2)
+    assert st.batches == 2 and st.updates == P
+    assert (np.asarray(coreness(g2, backend="jnp"))
+            == np.asarray(core2)).all()
+
+
+def test_stream_spmd_backend_parity():
+    g = community_graph()
+    core0 = coreness(g, backend="jnp")
+    ups = [(_pad_id(g, 0, 0), _pad_id(g, 0, 5), +1),
+           (_pad_id(g, 1, 0), _pad_id(g, 2, 0), +1)]
+    g_a, core_a, _ = run_stream(_clone(g), core0, ups, R=2, backend="jnp")
+    g_b, core_b, st = run_stream(_clone(g), core0, ups, R=2,
+                                 backend="ell_spmd")
+    assert (np.asarray(core_a) == np.asarray(core_b)).all()
+    assert (np.asarray(g_a.nbr) == np.asarray(g_b.nbr)).all()
+
+
+def test_stream_rejects_bad_window():
+    g = community_graph()
+    core0 = coreness(g, backend="jnp")
+    with pytest.raises(ValueError):
+        run_stream(g, core0, [], R=0)
+    # invalid update (self-loop) is caught at the host boundary
+    u = _pad_id(g, 0, 0)
+    with pytest.raises(ValueError):
+        run_stream(g, core0, [(u, u, +1)], R=2)
