@@ -1,0 +1,126 @@
+"""Streaming runtime: incremental halo-plan maintenance + live rebalancing.
+
+Three measurement surfaces for the stream-facing runtime work:
+
+  * `stream/plan/*` — host cost of keeping the W2W halo plan in sync
+    with one update window: the old full `build_halo_plan` rebuild
+    (O(N*Cd) scan) vs `HaloPlan.apply_updates` (dirty workers only).
+    The speedup is the window-rate headroom of the ingestion path.
+  * `stream/run/*` — an `ell_spmd` stream pass with ONE threaded
+    executor: wall time plus the plan-maintenance counters
+    (`plan_updates` windows maintained incrementally, `plan_rebuilds`
+    MUST be 0 in steady state — asserted here like the parity gates in
+    bench_runtime).
+  * `stream/rebalance/*` — the §4.2 threshold protocol live against a
+    deliberately skewed block layout: balance + edge-cut + escalation
+    trajectory without and with rebalancing, and the migration counts.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core import build_blocks, coreness
+from repro.core.partition import node_bfs_partition
+from repro.core.partition_dynamic import block_balance
+from repro.core.updates import (
+    apply_updates_host, sample_deletions, sample_insertions)
+from repro.graphgen import barabasi_albert
+from repro.runtime import build_halo_plan, make_worker_mesh, run_stream
+
+from .common import row, timeit_us
+
+
+def _mixed_updates(g, count: int, seed: int):
+    per = max(1, count // 4)
+    return (sample_insertions(g, per, "inter", seed=seed)
+            + sample_insertions(g, per, "intra", seed=seed + 1)
+            + sample_deletions(g, per, "inter", seed=seed + 2)
+            + sample_deletions(g, per, "intra", seed=seed + 3))
+
+
+def run(seed: int = 0, smoke: bool = False) -> List[Tuple[str, float, str]]:
+    rows = []
+    n = 400 if smoke else 4000
+    reps = 3 if smoke else 10
+
+    # ---- plan maintenance: full rebuild vs incremental -----------------
+    edges = barabasi_albert(n, 4, seed=seed)
+    nn = int(edges.max()) + 1
+    assign = node_bfs_partition(edges, nn, 8, seed=seed)
+    g = build_blocks(edges, nn, assign, P=8, deg_slack=48)
+    wm = make_worker_mesh(g)
+    plan = build_halo_plan(g, wm)
+    window = _mixed_updates(g, 8, seed)
+    g2 = apply_updates_host(g, window)
+    t_full = timeit_us(lambda: build_halo_plan(
+        g2, wm, H_min=plan.H, K_min=plan.K), n=reps)
+    t_inc = timeit_us(lambda: plan.apply_updates(g2, window), n=reps)
+    inc = plan.apply_updates(g2, window)
+    fresh = build_halo_plan(g2, wm, H_min=plan.H, K_min=plan.K)
+    assert (inc.nbr_local == fresh.nbr_local).all() and inc.H == fresh.H, \
+        "incremental halo plan diverged from from-scratch build"
+    rows.append(row("stream/plan/full_rebuild", t_full,
+                    f"n={nn};P=8;W={wm.W};H={plan.H}"))
+    rows.append(row("stream/plan/incremental", t_inc,
+                    f"window=8;speedup={t_full / max(t_inc, 1e-9):.1f}x"))
+    # the escalation path maintains per single edit: <= 2 dirty workers
+    one = window[:1]
+    g1 = apply_updates_host(g, one)
+    t_one = timeit_us(lambda: plan.apply_updates(g1, one), n=reps)
+    rows.append(row("stream/plan/incremental_1edit", t_one,
+                    f"speedup={t_full / max(t_one, 1e-9):.1f}x"))
+
+    # ---- executor reuse through a stream pass --------------------------
+    sn = 160 if smoke else 800
+    sedges = barabasi_albert(sn, 4, seed=seed + 7)
+    snn = int(sedges.max()) + 1
+    sg = build_blocks(sedges, snn, node_bfs_partition(sedges, snn, 4,
+                                                      seed=seed),
+                      P=4, deg_slack=48)
+    score = coreness(sg, backend="jnp")
+    ups = _mixed_updates(sg, 16, seed + 11)
+    t0 = time.perf_counter()
+    sg1, score1, st = run_stream(sg, score, list(ups), R=4,
+                                 backend="ell_spmd")
+    dt = time.perf_counter() - t0
+    assert st.plan_rebuilds == 0, \
+        f"steady-state stream performed {st.plan_rebuilds} full rebuilds"
+    rows.append(row("stream/run/ell_spmd", dt * 1e6 / max(1, st.updates),
+                    f"updates={st.updates};plan_updates={st.plan_updates};"
+                    f"plan_rebuilds={st.plan_rebuilds};"
+                    f"escalated={st.escalated}"))
+
+    # ---- live rebalancing: §4.2 threshold protocol ---------------------
+    rn = 160 if smoke else 1200
+    redges = barabasi_albert(rn, 4, seed=seed + 3)
+    rnn = int(redges.max()) + 1
+    skew = np.where(np.arange(rnn) < rnn // 2, 0, 1 + np.arange(rnn) % 3)
+    Cn = int(-(-rnn // 2 // 8) * 8) + 16  # half the nodes + slack
+    rg = build_blocks(redges, rnn, skew, P=4, Cn=Cn, deg_slack=48)
+    rcore = coreness(rg, backend="jnp")
+    rups = _mixed_updates(rg, 16, seed + 5)
+
+    def _clone(gg):
+        import jax
+        import jax.numpy as jnp
+        return jax.tree.map(
+            lambda x: jnp.copy(x) if hasattr(x, "dtype") else x, gg)
+
+    for label, thresh in (("off", None), ("on", 1.2)):
+        gg, cc, stt = run_stream(_clone(rg), rcore, list(rups), R=4,
+                                 backend="jnp", rebalance_threshold=thresh,
+                                 rebalance_max_moves=8)
+        rows.append(row(
+            f"stream/rebalance/{label}", 0.0,
+            f"balance={block_balance(gg):.2f};edge_cut={int(gg.edge_cut())};"
+            f"escalated={stt.escalated};migrations={stt.migrations};"
+            f"moved={stt.migrated_vertices}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import print_rows
+    print_rows(run())

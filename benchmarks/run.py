@@ -11,6 +11,8 @@ Prints ``name,us_per_call,derived`` CSV rows.
              infeasible N (EXPERIMENTS.md §Backends)
   runtime  — mesh (ell_spmd) coreness parity/time + metered vs executed
              W2W accounting (EXPERIMENTS.md §Runtime)
+  stream   — incremental vs full halo-plan maintenance, executor-reuse
+             stream pass, §4.2 live rebalancing (EXPERIMENTS.md §Stream)
   roofline — three-term roofline per (arch × shape) from the dry-run JSONs
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--full] [--updates N]
@@ -40,12 +42,13 @@ def main() -> None:
                     help="tiny CI pass: backend parity + a few updates")
     ap.add_argument("--only", default=None,
                     help="comma list: table2,fig7,partitioning,static,"
-                         "backends,runtime,roofline")
+                         "backends,runtime,stream,roofline")
     args = ap.parse_args()
 
     from . import (bench_backends, bench_kcore_maintenance,
                    bench_vs_naive_kcore, bench_partitioning,
-                   bench_runtime, bench_static_kcore, roofline)
+                   bench_runtime, bench_static_kcore, bench_stream,
+                   roofline)
 
     backends = tuple(b for b in args.backends.split(",") if b)
     batch_sizes = tuple(int(r) for r in args.batch_sizes.split(",") if r)
@@ -74,6 +77,8 @@ def main() -> None:
         "backends": lambda: bench_backends.run(
             seed=args.seed, smoke=args.smoke),
         "runtime": lambda: bench_runtime.run(
+            seed=args.seed, smoke=args.smoke),
+        "stream": lambda: bench_stream.run(
             seed=args.seed, smoke=args.smoke),
         "roofline": lambda: roofline.run(full=args.full, seed=args.seed),
     }

@@ -1,7 +1,7 @@
 """BLADYG core: block-centric processing of large dynamic graphs in JAX."""
 from .graph import (
     GraphBlocks, build_blocks, build_ell_random, insert_edge, delete_edge,
-    to_networkx_edges, halo_slot_counts, halo_pair_counts,
+    migrate_vertices, to_networkx_edges, halo_slot_counts, halo_pair_counts,
 )
 from .engine import BladygEngine, BladygProgram, Mode, MessageStats
 from .kcore import (
@@ -24,7 +24,8 @@ from . import partition, partition_dynamic, updates
 
 __all__ = [
     "GraphBlocks", "build_blocks", "build_ell_random", "insert_edge", "delete_edge",
-    "to_networkx_edges", "halo_slot_counts", "halo_pair_counts",
+    "migrate_vertices", "to_networkx_edges", "halo_slot_counts",
+    "halo_pair_counts",
     "BladygEngine", "BladygProgram",
     "Mode", "MessageStats", "coreness", "coreness_with_stats",
     "coreness_via_engine", "coreness_via_spmd", "hindex_rows",

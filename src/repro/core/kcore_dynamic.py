@@ -357,9 +357,13 @@ def _apply_and_recompute(
 # ---------------------------------------------------------------------------
 
 
-def _spmd_executor(g: GraphBlocks, W=None):
+def _spmd_executor(g: GraphBlocks, W=None, ex=None):
     """Host-boundary construction of the mesh executor (deferred import —
-    `runtime` lazily dispatches back into `kernels.ops`)."""
+    `runtime` lazily dispatches back into `kernels.ops`).  When a live
+    executor `ex` is threaded through, it is returned as-is: the caller
+    owns keeping its plan in sync via `ex.apply_updates`."""
+    if ex is not None:
+        return ex
     from ..runtime.spmd import SpmdExecutor
 
     return SpmdExecutor(g, W=W)
@@ -382,28 +386,40 @@ def _batch_candidates_spmd(ex, g: GraphBlocks, core, us, vs, valid):
 
 
 def _apply_and_recompute_spmd(
-    g: GraphBlocks, core, us, vs, ops_, cand_ins, cand_del, W=None
+    g: GraphBlocks, core, us, vs, ops_, cand_ins, cand_del, W=None, ex=None
 ):
     """`_apply_and_recompute` with the joint clamped recompute on the mesh.
 
-    The halo plan depends on the adjacency, so the executor is rebuilt on
-    the post-update graph; the compiled mesh steps are reused from the
-    per-(mesh, H) cache whenever the halo capacity is unchanged.
+    The halo plan depends on the adjacency: with a threaded executor `ex`
+    the plan is maintained *incrementally* on the post-update graph
+    (`ex.apply_updates` — dirty workers only, zero full rebuilds);
+    without one, a fresh executor is built per call (the legacy path).
+    Either way the compiled mesh steps are reused from the per-(mesh, H)
+    cache whenever the halo capacity holds.
     """
     g2 = _apply_edges(g, jnp.asarray(us), jnp.asarray(vs), jnp.asarray(ops_))
     ub = jnp.where(cand_ins, jnp.minimum(core + 1, g2.deg), core)
     ub = jnp.where(cand_del, jnp.minimum(core, g2.deg), ub)
     union = cand_ins | cand_del
-    ex2 = _spmd_executor(g2, W)
-    new_core, rec_steps = ex2.restricted_recompute(ub, union)
+    if ex is None:
+        ex = _spmd_executor(g2, W)
+    else:
+        ex.apply_updates(g2, list(zip(us, vs, ops_)))
+    new_core, rec_steps = ex.restricted_recompute(ub, union)
     return g2, new_core, rec_steps
 
 
-def _maintain_one_spmd(g: GraphBlocks, core, update, tot, W=None):
-    """Sequential (coordinator-path) maintenance of one update on the mesh."""
+def _maintain_one_spmd(g: GraphBlocks, core, update, tot, W=None, ex=None):
+    """Sequential (coordinator-path) maintenance of one update on the mesh.
+
+    With a threaded executor `ex` the halo plan rides along incrementally
+    (the edit touches at most two blocks); without one, executors are
+    built per call as before.
+    """
     u, v, op = update
     uj, vj = jnp.int32(u), jnp.int32(v)
-    ex = _spmd_executor(g, W)
+    shared = ex is not None
+    ex = _spmd_executor(g, W, ex)
     k = jnp.minimum(core[uj], core[vj])
     roots = jnp.zeros(g.N, bool).at[uj].set(True).at[vj].set(True)
     cand, bfs_steps = ex.k_reachable_batch(core, roots[:, None], k[None])
@@ -412,7 +428,11 @@ def _maintain_one_spmd(g: GraphBlocks, core, update, tot, W=None):
     g2 = insert_edge(g, uj, vj) if op > 0 else delete_edge(g, uj, vj)
     bump = core + 1 if op > 0 else core
     ub = jnp.where(cand, jnp.minimum(bump, g2.deg), core)
-    ex2 = _spmd_executor(g2, W)
+    if shared:
+        ex.apply_updates(g2, [update])
+        ex2 = ex
+    else:
+        ex2 = _spmd_executor(g2, W)
     new_core, rec_steps = ex2.restricted_recompute(ub, cand)
     tot["bfs"] += int(bfs_steps)
     tot["rec"] += int(rec_steps)
@@ -445,8 +465,10 @@ def maintain_batch(
     With `backend="ell_spmd"` every superstep (the batched k-reachability
     search and the joint clamped recompute) executes on the worker mesh
     via the runtime subsystem's halo exchange; `W` forces the worker
-    count (default: as many devices as divide P).  Results are identical
-    to every other backend.
+    count (default: as many devices as divide P).  ONE executor threads
+    through the whole stream, its halo plan maintained incrementally
+    after every applied edit (zero full plan rebuilds).  Results are
+    identical to every other backend.
 
     NOTE: like the single-edge maintain functions, this CONSUMES `g` via
     jit buffer donation (a no-op on CPU, enforced on TPU/GPU) — do not
@@ -456,13 +478,17 @@ def maintain_batch(
         raise ValueError(f"R must be >= 1, got {R}")
     _validate_updates_host(g, updates)
     spmd = backend == SPMD_BACKEND
+    # ONE executor threads through the whole stream on the mesh path; its
+    # halo plan is maintained incrementally after every applied edit
+    ex = _spmd_executor(g, W) if spmd else None
 
     core = jnp.asarray(core)
     tot = dict(bfs=0, rec=0, cand=0, batched=0, seq=0, batches=0)
     for start in range(0, len(updates), R):
         chunk = list(updates[start:start + R])
         if len(chunk) == 1:
-            g, core = _maintain_one(g, core, chunk[0], tot, backend, W=W)
+            g, core = _maintain_one(g, core, chunk[0], tot, backend, W=W,
+                                    ex=ex)
             continue
         n = len(chunk)
         us = np.zeros(R, np.int32)
@@ -475,8 +501,7 @@ def maintain_batch(
         valid[:n] = True
 
         if spmd:
-            cand, steps = _batch_candidates_spmd(
-                _spmd_executor(g, W), g, core, us, vs, valid)
+            cand, steps = _batch_candidates_spmd(ex, g, core, us, vs, valid)
         else:
             cand, steps = _batch_candidates(
                 g, core, jnp.asarray(us), jnp.asarray(vs),
@@ -503,7 +528,8 @@ def maintain_batch(
             ops_a[:len(acc)] = ops_[acc]
             if spmd:
                 g, core, rec_steps = _apply_and_recompute_spmd(
-                    g, core, us_a, vs_a, ops_a, cand_ins, cand_del, W=W)
+                    g, core, us_a, vs_a, ops_a, cand_ins, cand_del, W=W,
+                    ex=ex)
             else:
                 g, core, rec_steps = _apply_and_recompute(
                     g, core,
@@ -515,7 +541,8 @@ def maintain_batch(
             tot["batched"] += len(accepted)
 
         for r in deferred:
-            g, core = _maintain_one(g, core, chunk[r], tot, backend, W=W)
+            g, core = _maintain_one(g, core, chunk[r], tot, backend, W=W,
+                                    ex=ex)
 
     stats = BatchMaintenanceStats(
         updates=len(updates),
@@ -529,10 +556,10 @@ def maintain_batch(
     return g, core, stats
 
 
-def _maintain_one(g, core, update, tot, backend, W=None):
+def _maintain_one(g, core, update, tot, backend, W=None, ex=None):
     """Sequential fallback for one update; accumulates into `tot`."""
     if backend == SPMD_BACKEND:
-        return _maintain_one_spmd(g, core, update, tot, W=W)
+        return _maintain_one_spmd(g, core, update, tot, W=W, ex=ex)
     u, v, op = update
     fn = insert_edge_maintain if op > 0 else delete_edge_maintain
     g, core, s = fn(g, core, jnp.int32(u), jnp.int32(v), backend=backend)

@@ -14,6 +14,8 @@ nodes + their adjacency):
 3-5, where the unit being assigned is an edge):
     - ``edge_hash_partition``, ``edge_random_partition``
     - ``vertex_cut_greedy``     — the PowerGraph greedy heuristic (paper §2)
+    - ``vertex_cut_update``     — greedy continuation over new edges only
+      (the IncrementalPart counterpart of ``vertex_cut_greedy``)
     - ``dfep``                  — funding-based Distributed Edge Partitioning
       [Guerrieri & Montresor, Europar'15], vectorized rounds
     - ``ub_update``             — DynamicDFEP's Unit-Based incremental
@@ -36,6 +38,7 @@ __all__ = [
     "edge_hash_partition",
     "edge_random_partition",
     "vertex_cut_greedy",
+    "vertex_cut_update",
     "dfep",
     "ub_update",
     "edge_balance",
@@ -149,6 +152,49 @@ def edge_random_partition(edges: np.ndarray, P: int, seed: int = 0) -> np.ndarra
     return assign
 
 
+def _vertex_cut_assign(
+    edges: np.ndarray,
+    parts_of: list,
+    size: np.ndarray,
+    remaining: np.ndarray,
+    start: int,
+    P: int,
+    balance_slack: float,
+) -> np.ndarray:
+    """The greedy vertex-cut inner loop over `edges`, continuing from the
+    given per-node partition sets / sizes, with the running capacity
+    indexed from global edge position `start` (so a continuation is
+    bit-identical to the static greedy over the concatenated stream)."""
+    out = np.empty(len(edges), dtype=np.int64)
+    for j, (u, v) in enumerate(edges):
+        cap = balance_slack * ((start + j) / P) + 1.0
+        pu, pv = parts_of[u], parts_of[v]
+
+        def pick(cands):
+            ok = [q for q in cands if size[q] < cap]
+            if ok:
+                return min(ok, key=lambda q: size[q])
+            return int(np.argmin(size))
+
+        common = pu & pv
+        if common:
+            p = pick(common)
+        elif pu and pv:
+            picker = u if remaining[u] >= remaining[v] else v
+            p = pick(parts_of[picker])
+        elif pu or pv:
+            p = pick(pu or pv)
+        else:
+            p = int(np.argmin(size))
+        out[j] = p
+        size[p] += 1
+        pu.add(p)
+        pv.add(p)
+        remaining[u] -= 1
+        remaining[v] -= 1
+    return out
+
+
 def vertex_cut_greedy(
     edges: np.ndarray, n: int, P: int, balance_slack: float = 1.1
 ) -> np.ndarray:
@@ -173,34 +219,49 @@ def vertex_cut_greedy(
     np.add.at(remaining, edges[:, 1], 1)
     parts_of = [set() for _ in range(n)]
     size = np.zeros(P, dtype=np.int64)
-    out = np.empty(len(edges), dtype=np.int64)
-    for i, (u, v) in enumerate(edges):
-        cap = balance_slack * (i / P) + 1.0
-        pu, pv = parts_of[u], parts_of[v]
+    return _vertex_cut_assign(
+        edges, parts_of, size, remaining, 0, P, balance_slack)
 
-        def pick(cands):
-            ok = [q for q in cands if size[q] < cap]
-            if ok:
-                return min(ok, key=lambda q: size[q])
-            return int(np.argmin(size))
 
-        common = pu & pv
-        if common:
-            p = pick(common)
-        elif pu and pv:
-            picker = u if remaining[u] >= remaining[v] else v
-            p = pick(parts_of[picker])
-        elif pu or pv:
-            p = pick(pu or pv)
-        else:
-            p = int(np.argmin(size))
-        out[i] = p
-        size[p] += 1
-        pu.add(p)
-        pv.add(p)
-        remaining[u] -= 1
-        remaining[v] -= 1
-    return out
+def vertex_cut_update(
+    edges: np.ndarray,
+    owner: np.ndarray,
+    new_edges: np.ndarray,
+    n: int,
+    P: int,
+    balance_slack: float = 1.1,
+) -> np.ndarray:
+    """Greedy vertex-cut *continuation*: assign only `new_edges`, resuming
+    from the state the static greedy would hold after `edges`/`owner`.
+
+    Reconstructs the per-node partition sets and sizes from the existing
+    assignment and restarts the greedy with the running-capacity index
+    offset by `len(edges)`.  `remaining` at that point counts only the
+    not-yet-processed (new) edges — exactly the static greedy's state at
+    index `len(edges)` of the concatenated stream.  Parity contract:
+    `vertex_cut_greedy(concat(edges, new))` equals
+    `concat(owner, vertex_cut_update(...))` bit-for-bit whenever `owner`
+    is that static run's own prefix assignment.  (A greedy run over the
+    prefix *alone* is a different state — its `remaining` tie-break never
+    saw the future edges — so chaining `initial_partition` +
+    `incremental_part` matches the heuristic, not necessarily the
+    one-shot static output.)  Never touches the existing assignment
+    either way, which is the IncrementalPart contract.
+    """
+    edges = np.asarray(edges, dtype=np.int64)
+    new_edges = np.asarray(new_edges, dtype=np.int64)
+    owner = np.asarray(owner, dtype=np.int64)
+    parts_of = [set() for _ in range(n)]
+    for (u, v), p in zip(edges, owner):
+        parts_of[u].add(int(p))
+        parts_of[v].add(int(p))
+    size = np.bincount(owner, minlength=P).astype(np.int64)
+    remaining = np.zeros(n, dtype=np.int64)
+    if len(new_edges):
+        np.add.at(remaining, new_edges[:, 0], 1)
+        np.add.at(remaining, new_edges[:, 1], 1)
+    return _vertex_cut_assign(
+        new_edges, parts_of, size, remaining, len(edges), P, balance_slack)
 
 
 def dfep(

@@ -10,6 +10,13 @@ Two update strategies, exactly the paper's §5.2.2 experiment:
 Deletions trigger the repartition-threshold protocol of §4.2: every worker
 computes a local balance summary (workerCompute, W2M), the coordinator
 decides whether a full repartition is needed (masterCompute).
+
+The same protocol also runs *live* against the block runtime:
+`block_loads`/`block_balance` are the workerCompute summaries over a
+`GraphBlocks` instance and `choose_node_moves` is the masterCompute move
+selection that `runtime.run_stream` feeds into `graph.migrate_vertices`
+when the streaming balance trips its threshold — this is how the numpy
+protocol reaches the live mesh instead of staying an offline experiment.
 """
 from __future__ import annotations
 
@@ -61,8 +68,11 @@ def incremental_part(
     elif st.method == "dfep":
         new_owner = P_.ub_update(st.edges, st.owner, new_edges, st.n, st.P)
     elif st.method == "vertex_cut":
-        # greedy continues from current per-node partition sets
-        new_owner = P_.ub_update(st.edges, st.owner, new_edges, st.n, st.P)
+        # true greedy continuation from the current per-node partition
+        # sets (NOT DFEP's ub_update, which scores by owned-edge counts
+        # and silently changes the heuristic mid-stream)
+        new_owner = P_.vertex_cut_update(
+            st.edges, st.owner, new_edges, st.n, st.P)
     else:
         raise ValueError(st.method)
     ut = time.perf_counter() - t0
@@ -83,6 +93,98 @@ def naive_part(
     owner = _STATIC[st.method](all_edges, st.n, st.P, st.seed)
     ut = time.perf_counter() - t0
     return PartitionState(all_edges, owner, st.n, st.P, st.method, st.seed), ut
+
+
+def block_loads(g) -> np.ndarray:
+    """workerCompute load summary (W2M): valid neighbor slots per block.
+
+    Degree-sum is the superstep cost model of the block runtime — every
+    valid slot is one gathered value per superstep — so it is the balance
+    the §4.2 threshold protocol should act on (node counts would miss
+    hub skew)."""
+    return np.asarray(g.deg, dtype=np.int64).reshape(g.P, g.Cn).sum(axis=1)
+
+
+def block_balance(g) -> float:
+    """Imbalance summary the §4.2 masterCompute thresholds: max/mean load."""
+    load = block_loads(g)
+    return float(load.max() / max(1.0, load.mean()))
+
+
+def choose_node_moves(
+    g,
+    max_moves: int = 8,
+    balance_slack: float = 1.05,
+    pair_counts: Optional[np.ndarray] = None,
+) -> list:
+    """masterCompute move selection for live rebalancing (§4.2).
+
+    Greedy, deterministic: while some block's load exceeds
+    `balance_slack x mean`, move one of its real nodes to an underloaded
+    block with free node capacity, preferring the (node, destination)
+    pair with the best edge-cut gain — the node-level analogue of
+    `ub_update`'s "partition owning the most incident edges" rule.
+    `pair_counts` (`graph.halo_pair_counts`) orders destination
+    candidates by existing W2W traffic, so ties resolve toward the
+    blocks the overloaded block already talks to.
+
+    Only *pre-existing* padding slots count as capacity (slots vacated
+    by the chosen moves do not), matching `migrate_vertices`' contract.
+    Returns a list of (node_id, dest_block) — possibly empty when no
+    admissible move helps.
+    """
+    nbr = np.asarray(g.nbr)
+    mask = np.asarray(g.node_mask)
+    deg = np.asarray(g.deg, dtype=np.int64)
+    P, Cn = g.P, g.Cn
+    load = block_loads(g)
+    mean = max(1.0, float(load.mean()))
+    free = np.array([
+        int((~mask[b * Cn:(b + 1) * Cn]).sum()) for b in range(P)
+    ])
+    moves: list = []
+    moved: set = set()
+    while len(moves) < max_moves:
+        b = int(np.argmax(load))
+        if load[b] <= balance_slack * mean:
+            break
+        dests = [b2 for b2 in range(P)
+                 if b2 != b and free[b2] > 0 and load[b2] < mean]
+        if not dests:
+            break
+        if pair_counts is not None:
+            dests.sort(key=lambda b2: (-int(pair_counts[b, b2]), b2))
+        rows = np.arange(b * Cn, (b + 1) * Cn)
+        # key maximized lexicographically: best cut gain, then heaviest
+        # node (most load shed per move), then lowest id, then the
+        # destination with the most existing W2W traffic (dests order)
+        best = None
+        for u in rows[mask[rows]]:
+            u = int(u)
+            if u in moved or deg[u] == 0:
+                continue
+            nb = nbr[u]
+            aff = np.bincount(nb[nb >= 0] // Cn, minlength=P)
+            for j, b2 in enumerate(dests):
+                # post-move bound: never push the destination past the
+                # slack line, or a hub ping-pongs between blocks (each
+                # bounce is a migration — and a full plan rebuild on the
+                # mesh path)
+                if load[b2] + deg[u] > balance_slack * mean:
+                    continue
+                gain = int(aff[b2]) - int(aff[b])
+                cand = (gain, int(deg[u]), -u, -j)
+                if best is None or cand > best[0]:
+                    best = (cand, u, b2)
+        if best is None:
+            break
+        _, u, b2 = best
+        moves.append((u, b2))
+        moved.add(u)
+        load[b] -= deg[u]
+        load[b2] += deg[u]
+        free[b2] -= 1
+    return moves
 
 
 def delete_edges(

@@ -16,7 +16,10 @@ architecture on SPMD JAX:
               per-worker summaries, M2W the replicated master directive.
   stream.py — streaming update ingestion: route each batch to owner
               blocks host-side, drive `maintain_batch` block-locally,
-              escalate cross-block conflicts to the coordinator path.
+              escalate cross-block conflicts to the coordinator path;
+              one long-lived executor with incremental halo-plan
+              maintenance, plus the §4.2 live-rebalancing trigger
+              (threshold protocol -> `migrate_vertices`).
 
 Everything here duck-types `GraphBlocks` (`.nbr`, `.deg`, `.node_mask`,
 `.P`, `.Cn`, `.Cd`, `.N`) the same way `kernels.ops` does, so the kernel

@@ -15,6 +15,9 @@ adjacency, everything that exchange needs:
     serves to receiver r (the all-to-all send-buffer gather);
   * `recv_pos[r, s, k]` — where receiver r scatters that value inside its
     halo buffer (size H, padded entries land on a dump slot);
+  * `halo_ids[r]` — the halo-buffer layout itself: the sorted unique
+    remote ids worker r reads, padded with -1 (position k in this row IS
+    halo position k);
   * `nbr_local` — the adjacency remapped to each worker's local frame:
     own neighbors index the local shard `[0, S)`, remote neighbors index
     `S + halo position`, PAD slots index a sentinel that always reads the
@@ -30,14 +33,24 @@ Message accounting lives here too, at two granularities:
     the all-to-all per superstep (worker granularity, deduplicated), and
     the (W, W) per-pair breakdown.
 
-Shapes are static (`K` = max pair payload, `H` = max halo size), so the
-plan drops straight into `shard_map`/`jit`.  The plan is a pure function
-of `nbr` **contents** — rebuild it after structural updates.
+Shapes are static (`K` = pair-payload capacity, `H` = halo capacity),
+so the plan drops straight into `shard_map`/`jit`.  Both capacities are
+rounded up to powers of two (with `H_min`/`K_min` floors): the runtime's
+compiled step functions are cached per (mesh, H), so the slack absorbs
+small halo growth under streaming updates without recompiling, and when
+growth does overflow a capacity the doubling lands incremental and
+from-scratch plans on the same value.
+
+The plan is a pure function of `nbr` **contents**.  After structural
+updates either rebuild it (`build_halo_plan`) or — the streaming hot
+path — maintain it incrementally with `HaloPlan.apply_updates`: an edge
+touches at most two blocks, so only the workers owning its endpoints
+need their halo tables re-derived.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Sequence, Tuple
 
 import numpy as np
 
@@ -46,16 +59,76 @@ import jax
 from .mesh import WorkerMesh, make_worker_mesh
 
 
+def _pow2_ceil(x: int) -> int:
+    """Smallest power of two >= max(1, x) — the capacity slack policy."""
+    x = max(1, int(x))
+    return 1 << (x - 1).bit_length()
+
+
+def _check_concrete(nbr) -> None:
+    if isinstance(nbr, jax.core.Tracer):
+        raise TypeError(
+            "halo plans need concrete neighbor arrays; they cannot be "
+            "derived under jit/vmap tracing. Build/update the plan (or "
+            "SpmdExecutor) at the host boundary and reuse it across "
+            "supersteps."
+        )
+
+
+def _worker_uniq(nbr: np.ndarray, r: int, S: int) -> np.ndarray:
+    """Sorted unique remote ids referenced by worker r's rows."""
+    nb = nbr[r * S:(r + 1) * S]
+    v = nb >= 0
+    remote = nb[v & (np.where(v, nb // S, -1) != r)]
+    return np.unique(remote)
+
+
+def _fill_receiver(
+    send_idx: np.ndarray, recv_pos: np.ndarray, uniq_r: np.ndarray,
+    r: int, S: int, W: int, H: int,
+) -> None:
+    """(Re)derive the send/recv tables of receiver column r from uniq_r.
+
+    Sorting by global id groups by owner automatically (owner = id // S
+    is monotone in id), so "position in the sorted unique array" doubles
+    as the halo-buffer layout.
+    """
+    send_idx[:, r, :] = 0
+    recv_pos[r, :, :] = H  # default: dump slot
+    for s in range(W):
+        ids = uniq_r[uniq_r // S == s]
+        if not len(ids):
+            continue
+        pos = np.searchsorted(uniq_r, ids).astype(np.int32)
+        send_idx[s, r, :len(ids)] = (ids - s * S).astype(np.int32)
+        recv_pos[r, s, :len(ids)] = pos
+
+
+def _local_rows(
+    nbr_rows: np.ndarray, uniq_r: np.ndarray, r: int, S: int, H: int
+) -> np.ndarray:
+    """Remap global-id adjacency rows of worker r to its local frame:
+    [0, S) own rows, [S, S+H) halo positions, S+H+1 the PAD sentinel."""
+    out = np.full(nbr_rows.shape, S + H + 1, np.int32)
+    v = nbr_rows >= 0
+    ownm = v & (np.where(v, nbr_rows // S, -1) == r)
+    rem = v & ~ownm
+    out[ownm] = (nbr_rows[ownm] - r * S).astype(np.int32)
+    out[rem] = (S + np.searchsorted(uniq_r, nbr_rows[rem])).astype(np.int32)
+    return out
+
+
 @dataclasses.dataclass(frozen=True)
 class HaloPlan:
     """Precomputed W2W exchange for one (graph, worker mesh) pair."""
 
     wm: WorkerMesh
-    K: int                 # max values any (sender, receiver) pair moves
-    H: int                 # max halo-buffer entries on any worker
+    K: int                 # pair-payload capacity (pow2-padded max)
+    H: int                 # halo-buffer capacity (pow2-padded max)
     send_idx: np.ndarray   # (W, W, K) int32 — [sender, receiver, k] local row
     recv_pos: np.ndarray   # (W, W, K) int32 — [receiver, sender, k] halo pos
     halo_len: np.ndarray   # (W,) int64 — real halo entries per worker
+    halo_ids: np.ndarray   # (W, H) int64 — sorted unique remote ids, -1 pad
     nbr_local: np.ndarray  # (N, Cd) int32 — local-frame adjacency
     pair_elems: np.ndarray  # (W, W) int64 — unique values moved s -> r
     slot_intra: int        # valid slots inside their own *block*
@@ -82,20 +155,124 @@ class HaloPlan:
     def pad_slot(self) -> int:
         return self.wm.S + self.H + 1
 
+    # -----------------------------------------------------------------
+    # incremental maintenance (the streaming hot path)
+    # -----------------------------------------------------------------
 
-def build_halo_plan(g, wm: WorkerMesh = None, W: int = None) -> HaloPlan:
+    def apply_updates(self, g, edits: Sequence[Tuple[int, int, int]]
+                      ) -> "HaloPlan":
+        """Incrementally maintain the plan after edge `edits`.
+
+        `g` is the POST-update graph (its `nbr` already reflects the
+        edits); `edits` is a sequence of (u, v, op) with op = +1 insert /
+        -1 delete (op == 0 padding entries are skipped).  An edge touches
+        at most two blocks, hence at most two workers: only those dirty
+        workers get their halo layout (`halo_ids`, send/recv column,
+        local-frame rows) re-derived — O(dirty · S · Cd) instead of the
+        builder's O(N · Cd) — plus O(1) rows for worker-local edits.
+
+        Capacity growth follows the doubling policy: H/K only ever grow,
+        to the next power of two that fits, so the result is
+        field-for-field identical to
+        `build_halo_plan(g, wm, H_min=self.H, K_min=self.K)`.
+        """
+        _check_concrete(g.nbr)
+        wm = self.wm
+        S, W, Cn = wm.S, wm.W, g.Cn
+        nbr = np.asarray(g.nbr)
+        edits = [(int(u), int(v), int(op)) for u, v, op in edits
+                 if int(op) != 0]
+        if not edits:
+            return self
+
+        # slot counts move by +-2 per edit (one slot per endpoint row)
+        slot_intra, slot_inter = self.slot_intra, self.slot_inter
+        dirty: set = set()
+        touched: set = set()
+        for u, v, op in edits:
+            d = 2 if op > 0 else -2
+            if u // Cn == v // Cn:
+                slot_intra += d
+            else:
+                slot_inter += d
+            touched.add(u)
+            touched.add(v)
+            if u // S != v // S:  # remote reference created/removed
+                dirty.add(u // S)
+                dirty.add(v // S)
+
+        halo_len = self.halo_len.copy()
+        pair_elems = self.pair_elems.copy()
+        uniq_new = {r: _worker_uniq(nbr, r, S) for r in sorted(dirty)}
+        for r, u_ in uniq_new.items():
+            halo_len[r] = len(u_)
+            pair_elems[:, r] = (np.bincount(u_ // S, minlength=W)
+                                if len(u_) else 0)
+
+        H = max(self.H, _pow2_ceil(int(halo_len.max()) if W else 1))
+        K = max(self.K, _pow2_ceil(int(pair_elems.max())))
+
+        # grow tables (stale capacity-dependent sentinels are remapped:
+        # the dump slot H and the PAD sentinel S+H+1 move with H)
+        if K != self.K:
+            send_idx = np.zeros((W, W, K), np.int32)
+            send_idx[:, :, :self.K] = self.send_idx
+            recv_pos = np.full((W, W, K), self.H, np.int32)
+            recv_pos[:, :, :self.K] = self.recv_pos
+        else:
+            send_idx = self.send_idx.copy()
+            recv_pos = self.recv_pos.copy()
+        if H != self.H:
+            recv_pos = np.where(recv_pos == self.H, H, recv_pos
+                                ).astype(np.int32)
+            nbr_local = np.where(self.nbr_local == S + self.H + 1,
+                                 S + H + 1, self.nbr_local).astype(np.int32)
+            halo_ids = np.full((W, H), -1, np.int64)
+            halo_ids[:, :self.H] = self.halo_ids
+        else:
+            nbr_local = self.nbr_local.copy()
+            halo_ids = self.halo_ids.copy()
+
+        for r, u_ in uniq_new.items():
+            _fill_receiver(send_idx, recv_pos, u_, r, S, W, H)
+            halo_ids[r, :] = -1
+            halo_ids[r, :len(u_)] = u_
+            rows = slice(r * S, (r + 1) * S)
+            nbr_local[rows] = _local_rows(nbr[rows], u_, r, S, H)
+
+        # rows touched by worker-local edits: the halo layout of their
+        # worker is unchanged (the stored halo_ids row is its layout),
+        # only the row contents moved (insert appends, delete swaps)
+        for u in sorted(touched):
+            r = u // S
+            if r in uniq_new:
+                continue
+            u_ = halo_ids[r, :halo_len[r]]
+            nbr_local[u] = _local_rows(nbr[u:u + 1], u_, r, S, H)[0]
+
+        return HaloPlan(
+            wm=wm, K=K, H=H, send_idx=send_idx, recv_pos=recv_pos,
+            halo_len=halo_len, halo_ids=halo_ids, nbr_local=nbr_local,
+            pair_elems=pair_elems,
+            slot_intra=slot_intra, slot_inter=slot_inter,
+        )
+
+
+def build_halo_plan(
+    g, wm: WorkerMesh = None, W: int = None,
+    H_min: int = 1, K_min: int = 1,
+) -> HaloPlan:
     """Derive the halo plan from a *concrete* `GraphBlocks.nbr`.
+
+    `H_min`/`K_min` floor the capacities (a plan maintained through
+    `apply_updates` never shrinks its compiled-cache key); both are then
+    padded up to powers of two by the slack policy.
 
     Raises if called under a trace: the plan is host-side preprocessing
     and cannot be derived from abstract values — build it outside `jit`
     and close over it (the `ell_spmd` entry points do exactly that).
     """
-    if isinstance(g.nbr, jax.core.Tracer):
-        raise TypeError(
-            "build_halo_plan needs concrete neighbor arrays; it cannot run "
-            "under jit/vmap tracing. Build the plan (or SpmdExecutor) at "
-            "the host boundary and reuse it across supersteps."
-        )
+    _check_concrete(g.nbr)
     if wm is None:
         wm = make_worker_mesh(g, W=W)
     nbr = np.asarray(g.nbr)
@@ -109,52 +286,30 @@ def build_halo_plan(g, wm: WorkerMesh = None, W: int = None) -> HaloPlan:
     slot_inter = int(inter_blk.sum())
     slot_intra = int(valid.sum()) - slot_inter
 
-    # Per-receiver unique remote ids.  Sorting by global id groups by owner
-    # automatically (owner = id // S is monotone in id), so "position in the
-    # sorted unique array" doubles as the halo-buffer layout.
-    uniq = []
-    for r in range(Wn):
-        nb = nbr[r * S:(r + 1) * S]
-        v = nb >= 0
-        remote = nb[v & (np.where(v, nb // S, -1) != r)]
-        uniq.append(np.unique(remote))
-
+    uniq = [_worker_uniq(nbr, r, S) for r in range(Wn)]
     halo_len = np.array([len(u) for u in uniq], np.int64)
-    H = int(max(1, halo_len.max() if Wn else 1))
+    H = max(int(H_min), _pow2_ceil(int(halo_len.max()) if Wn else 1))
     pair_elems = np.zeros((Wn, Wn), np.int64)
     for r in range(Wn):
         owners = uniq[r] // S
         cnt = np.bincount(owners, minlength=Wn) if len(owners) else \
             np.zeros(Wn, np.int64)
         pair_elems[:, r] = cnt  # column r: what each sender moves to r
-    K = int(max(1, pair_elems.max()))
+    K = max(int(K_min), _pow2_ceil(int(pair_elems.max())))
 
     send_idx = np.zeros((Wn, Wn, K), np.int32)
     recv_pos = np.full((Wn, Wn, K), H, np.int32)  # default: dump slot
-    for r in range(Wn):
-        for s in range(Wn):
-            ids = uniq[r][uniq[r] // S == s]
-            if not len(ids):
-                continue
-            pos = np.searchsorted(uniq[r], ids).astype(np.int32)
-            send_idx[s, r, :len(ids)] = (ids - s * S).astype(np.int32)
-            recv_pos[r, s, :len(ids)] = pos
-
-    # local-frame adjacency: [0, S) own rows, [S, S+H) halo, S+H+1 PAD
+    halo_ids = np.full((Wn, H), -1, np.int64)
     nbr_local = np.full((N, Cd), S + H + 1, np.int32)
     for r in range(Wn):
+        _fill_receiver(send_idx, recv_pos, uniq[r], r, S, Wn, H)
+        halo_ids[r, :len(uniq[r])] = uniq[r]
         rows = slice(r * S, (r + 1) * S)
-        nb = nbr[rows]
-        v = nb >= 0
-        ownm = v & (np.where(v, nb // S, -1) == r)
-        rem = v & ~ownm
-        out = nbr_local[rows]
-        out[ownm] = (nb[ownm] - r * S).astype(np.int32)
-        out[rem] = (S + np.searchsorted(uniq[r], nb[rem])).astype(np.int32)
-        nbr_local[rows] = out
+        nbr_local[rows] = _local_rows(nbr[rows], uniq[r], r, S, H)
 
     return HaloPlan(
         wm=wm, K=K, H=H, send_idx=send_idx, recv_pos=recv_pos,
-        halo_len=halo_len, nbr_local=nbr_local, pair_elems=pair_elems,
+        halo_len=halo_len, halo_ids=halo_ids, nbr_local=nbr_local,
+        pair_elems=pair_elems,
         slot_intra=slot_intra, slot_inter=slot_inter,
     )

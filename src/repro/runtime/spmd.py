@@ -20,9 +20,11 @@ counterpart of `core.engine.BladygEngine.run`): it drives an
 
 Compiled step functions are cached per (mesh, halo capacity H): the plan
 tables are *arguments*, not closure constants, so maintenance loops that
-rebuild the plan after every structural update (the halo changes with the
-adjacency) reuse the compiled executables as long as the halo capacity is
-stable — jit's shape cache handles the rest.
+thread one executor through a stream (updating its plan in place via
+`SpmdExecutor.apply_updates` — the halo changes with the adjacency)
+reuse the compiled executables as long as the halo capacity holds, and
+the capacity doubling policy makes sure it almost always does — jit's
+shape cache handles the rest.
 
 Bit-exactness: all math is int32/bool and identical to the single-device
 reference (`kernels.ref`), so `coreness_spmd` equals
@@ -203,9 +205,13 @@ class SpmdExecutor:
     """Compiled halo-exchange primitives for one (graph, mesh) pair.
 
     Holds the worker mesh, the halo plan, and the per-(mesh, H) compiled
-    step functions.  The plan is a function of `nbr` *contents* — after
-    structural updates (edge insert/delete) build a fresh executor; the
-    compiled executables are reused as long as the halo capacity holds.
+    step functions.  The plan is a function of `nbr` *contents*: after
+    structural updates keep ONE executor alive and call `apply_updates`
+    (dirty-worker incremental plan maintenance — the streaming hot path)
+    or, after wholesale changes such as a vertex migration, `rebuild`.
+    Both preserve the capacity floors, so the per-(mesh, H) compiled
+    executables keep hitting; `full_rebuilds`/`plan_updates` count which
+    path ran (a steady-state stream performs zero full rebuilds).
     """
 
     def __init__(self, g, W: Optional[int] = None,
@@ -213,11 +219,40 @@ class SpmdExecutor:
                  plan: Optional[HaloPlan] = None):
         self.wm = wm if wm is not None else make_worker_mesh(g, W=W)
         self.plan = plan if plan is not None else build_halo_plan(g, self.wm)
+        #: full from-scratch plan rebuilds after construction (`rebuild`)
+        self.full_rebuilds = 0
+        #: incremental plan maintenance calls (`apply_updates`)
+        self.plan_updates = 0
+        self._refresh(g)
+
+    def _refresh(self, g) -> None:
+        """Re-stage the plan tables and per-node fields on device."""
         self.node_mask = jnp.asarray(g.node_mask)
         self.deg = jnp.asarray(g.deg, jnp.int32)
         self._nbrl = jnp.asarray(self.plan.nbr_local)
         self._send = jnp.asarray(self.plan.send_idx)
         self._recv = jnp.asarray(self.plan.recv_pos)
+
+    def apply_updates(self, g, edits) -> None:
+        """Incrementally maintain the halo plan after edge `edits`.
+
+        `g` is the POST-update graph; `edits` are (u, v, op) triples
+        (op = +1 insert / -1 delete / 0 padding no-op).  Only the workers
+        owning an endpoint of a cross-worker edit are re-derived; the
+        capacity doubling policy keeps the compiled caches warm.
+        """
+        self.plan = self.plan.apply_updates(g, edits)
+        self._refresh(g)
+        self.plan_updates += 1
+
+    def rebuild(self, g) -> None:
+        """Full from-scratch plan rebuild (e.g. after `migrate_vertices`
+        permuted the blocks).  Keeps the H/K capacity floors so compiled
+        step functions survive the rebuild."""
+        self.plan = build_halo_plan(
+            g, self.wm, H_min=self.plan.H, K_min=self.plan.K)
+        self._refresh(g)
+        self.full_rebuilds += 1
 
     @property
     def _tables(self):

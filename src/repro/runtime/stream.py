@@ -25,16 +25,37 @@ into the block-local batch if its candidate set is disjoint from every
 *earlier* window column — the same commutation argument as
 `core.kcore_dynamic.maintain_batch` — so the final coreness is
 bit-identical to processing the stream one update at a time.
+
+Two runtime-maintenance loops close over the stream:
+
+  * **Executor reuse** — under `backend="ell_spmd"` ONE `SpmdExecutor`
+    threads through the whole stream; every applied edit maintains its
+    halo plan incrementally (`SpmdExecutor.apply_updates`, dirty workers
+    only).  `StreamStats.plan_updates`/`plan_rebuilds` count the two
+    paths: a steady-state stream performs ZERO full plan rebuilds.
+  * **Live rebalancing** (`rebalance_threshold`) — after each window the
+    §4.2 threshold protocol runs: per-block load summaries
+    (workerCompute, `partition_dynamic.block_loads`) and the W2W pair
+    matrix (`graph.halo_pair_counts`) reach the coordinator, which —
+    when max/mean load exceeds the threshold — picks boundary-vertex
+    moves (`partition_dynamic.choose_node_moves`) and executes them with
+    `graph.migrate_vertices`: a pure node-axis permutation under fixed
+    (P, Cn, Cd), so nothing recompiles and coreness is bit-preserved.
+    Later stream updates still name nodes by their *pre-stream* padded
+    ids; the router composes the migration permutations and remaps each
+    window on ingest.
 """
 from __future__ import annotations
 
 from itertools import islice
-from typing import Dict, Iterable, Iterator, List, NamedTuple, Tuple
+from typing import Dict, Iterable, Iterator, List, NamedTuple, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 from ..core import kcore_dynamic as kd
+from ..core import partition_dynamic as pd
+from ..core.graph import halo_pair_counts, migrate_vertices
 from ..core.kcore_dynamic import SPMD_BACKEND
 
 
@@ -50,6 +71,10 @@ class StreamStats(NamedTuple):
     bfs_steps: int               # frontier supersteps (all paths)
     recompute_steps: int         # clamped min-H supersteps (all paths)
     per_block: Tuple[int, ...]   # block-local updates applied per block
+    plan_updates: int = 0        # incremental halo-plan maintenances (spmd)
+    plan_rebuilds: int = 0       # full plan rebuilds (spmd; 0 in steady state)
+    migrations: int = 0          # §4.2 rebalance rounds executed
+    migrated_vertices: int = 0   # vertices moved across blocks in total
 
     @property
     def escalated(self) -> int:
@@ -106,13 +131,26 @@ def run_stream(
     R: int = 8,
     backend: str = "jnp",
     W=None,
+    executor=None,
+    rebalance_threshold: Optional[float] = None,
+    rebalance_max_moves: int = 8,
 ):
     """Ingest an update stream; returns (g', core', StreamStats).
 
     `updates` may be any iterable (including a generator) of (u, v, op)
-    with op = +1 insert / -1 delete, ids global padded.  Exactness: the
-    final coreness equals sequential per-update maintenance.  With
-    `backend="ell_spmd"` every superstep runs on the worker mesh.
+    with op = +1 insert / -1 delete, ids global padded *as of the call*
+    (migrations remap later windows internally).  Exactness: the final
+    coreness equals sequential per-update maintenance — under live
+    rebalancing up to the node-axis permutation, i.e. bit-identical when
+    read through `orig_id`.  With `backend="ell_spmd"` every superstep
+    runs on the worker mesh through ONE long-lived executor (pass
+    `executor` to thread an existing `SpmdExecutor` across calls) whose
+    halo plan is maintained incrementally per window.
+
+    `rebalance_threshold` (e.g. 1.2) arms the §4.2 repartition-threshold
+    protocol after every window: blocks report load summaries, the
+    coordinator migrates boundary vertices when max/mean load exceeds
+    the threshold.  `None` disables it.
 
     NOTE: consumes `g` via jit buffer donation on the escalation path
     (like `maintain_batch`) — use the returned graph.
@@ -120,14 +158,33 @@ def run_stream(
     if R < 1:
         raise ValueError(f"R must be >= 1, got {R}")
     spmd = backend == SPMD_BACKEND
+    if executor is not None and not spmd:
+        raise ValueError(
+            f"executor= requires backend={SPMD_BACKEND!r} (got "
+            f"{backend!r}); a non-mesh stream would leave the executor's "
+            "halo plan stale."
+        )
+    ex = None
+    if spmd:
+        ex = executor if executor is not None else kd._spmd_executor(g, W)
+    ex_updates0 = ex.plan_updates if spmd else 0
+    ex_rebuilds0 = ex.full_rebuilds if spmd else 0
     core = jnp.asarray(core)
     tot = dict(bfs=0, rec=0, cand=0, batched=0, seq=0, batches=0)
     n_updates = 0
     n_local = 0
     esc_cross = esc_spill = esc_conflict = 0
     per_block = np.zeros(g.P, np.int64)
+    migrations = migrated = 0
+    # invariant across windows AND migrations: block_of[i] = i // Cn is
+    # pure position arithmetic, untouched by the node-axis permutation
+    block_of = _owner_blocks(g, np.arange(g.N))
+    remap: Optional[np.ndarray] = None  # pre-stream ids -> current ids
 
     for window in _iter_windows(updates, R):
+        if remap is not None:
+            window = [(int(remap[u]), int(remap[v]), op)
+                      for u, v, op in window]
         kd._validate_updates_host(g, window)
         tot["batches"] += 1
         n = len(window)
@@ -143,7 +200,7 @@ def run_stream(
 
         if spmd:
             cand, steps = kd._batch_candidates_spmd(
-                kd._spmd_executor(g, W), g, core, us, vs, valid)
+                ex, g, core, us, vs, valid)
         else:
             cand, steps = kd._batch_candidates(
                 g, core, jnp.asarray(us), jnp.asarray(vs),
@@ -151,14 +208,13 @@ def run_stream(
         tot["bfs"] += int(steps)
         cand_np = np.asarray(cand)
 
-        # routing decisions, host-side (same rule as `route_updates`)
-        block_of = _owner_blocks(g, np.arange(g.N))
+        # routing decisions, host-side (same rule as `route_updates`);
+        # spill = candidate mass outside the owner block, one matrix
+        # expression over the (N, n) candidate columns
         owner_u = _owner_blocks(g, us[:n])
         intra = owner_u == _owner_blocks(g, vs[:n])
-        spill = np.array([
-            bool((cand_np[:, r] & (block_of != owner_u[r])).any())
-            for r in range(n)
-        ])
+        spill = (cand_np[:, :n]
+                 & (block_of[:, None] != owner_u[None, :])).any(axis=0)
         overlap = cand_np.T.astype(np.int64) @ cand_np.astype(np.int64)
 
         accepted: List[int] = []
@@ -190,7 +246,8 @@ def run_stream(
             ops_a[:len(acc)] = ops_[acc]
             if spmd:
                 g, core, rec = kd._apply_and_recompute_spmd(
-                    g, core, us_a, vs_a, ops_a, cand_ins, cand_del, W=W)
+                    g, core, us_a, vs_a, ops_a, cand_ins, cand_del, W=W,
+                    ex=ex)
             else:
                 g, core, rec = kd._apply_and_recompute(
                     g, core,
@@ -202,7 +259,24 @@ def run_stream(
 
         # coordinator path, original stream order within the window
         for r in escalated:
-            g, core = kd._maintain_one(g, core, window[r], tot, backend, W=W)
+            g, core = kd._maintain_one(g, core, window[r], tot, backend,
+                                       W=W, ex=ex)
+
+        # §4.2 repartition-threshold protocol, live: workerCompute load
+        # summaries (W2M) -> masterCompute threshold + move selection ->
+        # an executed node migration (a permutation, nothing recompiles)
+        if rebalance_threshold is not None:
+            if pd.block_balance(g) > rebalance_threshold:
+                moves = pd.choose_node_moves(
+                    g, max_moves=rebalance_max_moves,
+                    pair_counts=halo_pair_counts(g))
+                if moves:
+                    g, perm, core = migrate_vertices(g, moves, core)
+                    remap = perm if remap is None else perm[remap]
+                    migrations += 1
+                    migrated += len(moves)
+                    if spmd:
+                        ex.rebuild(g)
 
     stats = StreamStats(
         updates=n_updates,
@@ -214,5 +288,9 @@ def run_stream(
         bfs_steps=tot["bfs"],
         recompute_steps=tot["rec"],
         per_block=tuple(int(x) for x in per_block),
+        plan_updates=(ex.plan_updates - ex_updates0) if spmd else 0,
+        plan_rebuilds=(ex.full_rebuilds - ex_rebuilds0) if spmd else 0,
+        migrations=migrations,
+        migrated_vertices=migrated,
     )
     return g, core, stats

@@ -1,0 +1,167 @@
+"""Incremental halo-plan maintenance: `HaloPlan.apply_updates` parity.
+
+The tentpole contract: a plan maintained incrementally over an arbitrary
+insert/delete stream is **field-for-field identical** to a from-scratch
+`build_halo_plan` on the post-update graph (with the maintained plan's
+capacity floors, since capacities never shrink in place), including the
+H/K capacity-doubling path.  Runs at whatever device count the host has
+(W = 1 folds everything onto one worker but still exercises the
+local-frame maintenance); the multi-device CI job re-runs this file
+under `XLA_FLAGS=--xla_force_host_platform_device_count=8` so dirty-
+worker recomputation happens across real worker boundaries.
+"""
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+import jax
+
+from repro.core import build_blocks
+from repro.core.partition import node_random_partition
+from repro.core.updates import (
+    apply_updates_host, sample_deletions, sample_insertions)
+from repro.graphgen import barabasi_albert
+from repro.runtime import build_halo_plan, make_worker_mesh
+from repro.runtime.halo import _pow2_ceil
+
+SCALAR_FIELDS = ("K", "H", "slot_intra", "slot_inter")
+ARRAY_FIELDS = ("send_idx", "recv_pos", "halo_len", "halo_ids",
+                "nbr_local", "pair_elems")
+
+
+def assert_plans_equal(a, b, ctx=""):
+    for f in SCALAR_FIELDS:
+        assert getattr(a, f) == getattr(b, f), (ctx, f)
+    for f in ARRAY_FIELDS:
+        assert (getattr(a, f) == getattr(b, f)).all(), (ctx, f)
+
+
+def _worker_counts(P):
+    ndev = len(jax.devices())
+    return sorted({w for w in (1, 2, P) if w <= ndev and P % w == 0})
+
+
+def _graph(P, seed):
+    edges = barabasi_albert(100 + 10 * P, 3, seed=seed)
+    n = int(edges.max()) + 1
+    assign = node_random_partition(n, P, seed=seed + 1)
+    return build_blocks(edges, n, assign, P=P, deg_slack=48)
+
+
+def _stream(g, seed, windows=4, per=4):
+    """`windows` windows of mixed valid insert/delete updates."""
+    out = []
+    for w in range(windows):
+        s = seed * 1000 + w
+        ups = (sample_insertions(g, 2, "inter", seed=s)
+               + sample_insertions(g, 1, "intra", seed=s + 500)
+               + sample_deletions(g, 2, "inter", seed=s)
+               + sample_deletions(g, 1, "intra", seed=s + 500))
+        window = ups[:per]
+        out.append(window)
+        g = apply_updates_host(g, window)
+    return out
+
+
+def test_pow2_ceil_policy():
+    assert [_pow2_ceil(x) for x in (0, 1, 2, 3, 4, 5, 8, 9)] == \
+        [1, 1, 2, 4, 4, 8, 8, 16]
+
+
+@pytest.mark.parametrize("P", (2, 4))
+def test_incremental_parity_random_streams(P):
+    """The acceptance criterion, deterministically seeded per P/W."""
+    for W in _worker_counts(P):
+        g = _graph(P, seed=3)
+        wm = make_worker_mesh(g, W=W)
+        plan = build_halo_plan(g, wm)
+        for i, window in enumerate(_stream(g, seed=7, windows=5)):
+            g = apply_updates_host(g, window)
+            inc = plan.apply_updates(g, window)
+            fresh = build_halo_plan(g, wm, H_min=plan.H, K_min=plan.K)
+            assert_plans_equal(inc, fresh, ctx=(P, W, i))
+            plan = inc
+
+
+@settings(max_examples=10)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_incremental_parity_hypothesis(seed):
+    """Property form: any sampled stream keeps incremental == from-scratch."""
+    P = 2 + 2 * (seed % 2)  # P in {2, 4}
+    g = _graph(P, seed=seed % 50)
+    wm = make_worker_mesh(g)
+    plan = build_halo_plan(g, wm)
+    for window in _stream(g, seed=seed, windows=3):
+        g = apply_updates_host(g, window)
+        plan2 = plan.apply_updates(g, window)
+        assert_plans_equal(
+            plan2, build_halo_plan(g, wm, H_min=plan.H, K_min=plan.K),
+            ctx=seed)
+        plan = plan2
+
+
+def test_capacity_growth_path():
+    """Flooding cross-block edges overflows H and K; the doubling policy
+    must land the incremental plan exactly on the from-scratch value."""
+    n = 16
+    edges = ([(i, i + 1) for i in range(7)]
+             + [(8 + i, 9 + i) for i in range(7)] + [(0, 8)])
+    assign = np.array([0] * 8 + [1] * 8)
+    g = build_blocks(np.array(edges), n, assign, P=2, Cd=14)
+    wm = make_worker_mesh(g)
+    plan = build_halo_plan(g, wm)
+    H0, K0 = plan.H, plan.K
+
+    orig = np.asarray(g.orig_id)
+    pad_of = {int(orig[i]): i for i in range(g.N) if orig[i] >= 0}
+    ups = [(pad_of[a], pad_of[b], +1)
+           for a in range(8) for b in range(8, 16)
+           if not (np.asarray(g.nbr)[pad_of[a]] == pad_of[b]).any()]
+    grew = False
+    for i in range(0, len(ups), 3):
+        window = ups[i:i + 3]
+        try:
+            g2 = apply_updates_host(g, window)
+        except ValueError:  # degree capacity reached; enough flooding
+            break
+        inc = plan.apply_updates(g2, window)
+        assert_plans_equal(
+            inc, build_halo_plan(g2, wm, H_min=plan.H, K_min=plan.K), ctx=i)
+        grew = grew or (inc.H > plan.H) or (inc.K > plan.K)
+        g, plan = g2, inc
+    if wm.W > 1:  # W = 1 has no halo at all; growth needs real workers
+        assert grew and plan.H > H0
+    assert plan.H == _pow2_ceil(int(plan.halo_len.max())) or \
+        plan.H >= int(plan.halo_len.max())
+
+
+def test_apply_updates_skips_padding_ops_and_empty():
+    g = _graph(2, seed=5)
+    wm = make_worker_mesh(g)
+    plan = build_halo_plan(g, wm)
+    assert plan.apply_updates(g, []) is plan
+    u, v, _ = sample_insertions(g, 1, "inter", seed=0)[0]
+    assert_plans_equal(
+        plan.apply_updates(g, [(u, v, 0)]), plan, ctx="noop")
+
+
+def test_executor_apply_updates_counters_and_parity():
+    """SpmdExecutor.apply_updates keeps mesh results bit-identical and
+    counts incremental maintenance vs full rebuilds."""
+    from repro.core import coreness
+    from repro.runtime import SpmdExecutor
+
+    g = _graph(4, seed=9)
+    ex = SpmdExecutor(g)
+    assert (ex.full_rebuilds, ex.plan_updates) == (0, 0)
+    for window in _stream(g, seed=11, windows=3):
+        g = apply_updates_host(g, window)
+        ex.apply_updates(g, window)
+        got = np.asarray(ex.coreness()[0])
+        want = np.asarray(coreness(g, backend="jnp"))
+        assert (got == want).all()
+    assert ex.plan_updates == 3 and ex.full_rebuilds == 0
+    ex.rebuild(g)
+    assert ex.full_rebuilds == 1
+    assert (np.asarray(ex.coreness()[0])
+            == np.asarray(coreness(g, backend="jnp"))).all()

@@ -125,3 +125,30 @@ def test_property_hash_partition_deterministic(seed):
     perm = np.random.default_rng(seed).permutation(len(e))
     a3 = P_.edge_hash_partition(e[perm], 5, seed=seed)
     assert (a3 == a1[perm]).all()
+
+
+def test_vertex_cut_update_matches_static_greedy_on_concat(graph):
+    """The continuation contract: resuming from the static run's own
+    prefix state reproduces the static greedy on the concatenated edge
+    list bit-for-bit, at every split point."""
+    edges, n = graph
+    full = P_.vertex_cut_greedy(edges, n, 4)
+    for m0 in (0, 1, 50, len(edges) // 2, len(edges) - 3):
+        cont = P_.vertex_cut_update(edges[:m0], full[:m0], edges[m0:], n, 4)
+        assert (cont == full[m0:]).all(), m0
+
+
+def test_incremental_part_vertex_cut_is_true_greedy(graph):
+    """incremental_part(method='vertex_cut') must run the greedy
+    continuation (not DFEP's ub_update): old owners untouched, and the
+    new assignment equals vertex_cut_update on the same state."""
+    from repro.core.partition_dynamic import PartitionState
+    edges, n = graph
+    m0 = 120
+    st0, _ = initial_partition(edges[:m0], n, 4, "vertex_cut")
+    st1, _ = incremental_part(st0, edges[m0:])
+    assert (st1.owner[:m0] == st0.owner).all()
+    want = P_.vertex_cut_update(edges[:m0], st0.owner, edges[m0:], n, 4)
+    assert (st1.owner[m0:] == want).all()
+    ub = P_.ub_update(edges[:m0], st0.owner, edges[m0:], n, 4)
+    assert not (want == ub).all()  # the two heuristics genuinely differ

@@ -137,6 +137,118 @@ def test_stream_spmd_backend_parity():
     assert (np.asarray(g_a.nbr) == np.asarray(g_b.nbr)).all()
 
 
+def _core_by_orig(g, core):
+    """Coreness indexed by original node id — the migration-invariant view."""
+    orig = np.asarray(g.orig_id)
+    core = np.asarray(core)
+    out = np.full(int(orig.max()) + 1, -1, core.dtype)
+    m = orig >= 0
+    out[orig[m]] = core[m]
+    return out
+
+
+def _skewed_graph():
+    """Half the nodes (including the BA hubs) on block 0, with free node
+    capacity everywhere: the §4.2 balance threshold has something to fix."""
+    edges = barabasi_albert(160, 4, seed=7)
+    n = int(edges.max()) + 1
+    assign = np.where(np.arange(n) < n // 2, 0, 1 + np.arange(n) % 3)
+    return build_blocks(edges, n, assign, P=4, Cn=96, deg_slack=48)
+
+
+def _mixed_updates(g):
+    from repro.core.updates import sample_deletions, sample_insertions
+
+    return (sample_insertions(g, 4, "inter", seed=2)
+            + sample_insertions(g, 4, "intra", seed=3)
+            + sample_deletions(g, 4, "inter", seed=4)
+            + sample_deletions(g, 4, "intra", seed=5))
+
+
+def test_stream_spmd_zero_full_rebuilds_in_steady_state():
+    """The tentpole counter assertion: one executor threads the whole
+    stream, every window maintains the halo plan incrementally, and NO
+    full plan rebuild happens without a migration."""
+    g = ba_graph()
+    core0 = coreness(g, backend="jnp")
+    ups = _mixed_updates(g)
+    g2, core2, st = run_stream(_clone(g), core0, ups, R=4,
+                               backend="ell_spmd")
+    assert st.plan_rebuilds == 0
+    assert st.plan_updates > 0
+    assert st.migrations == 0
+    ref_g, ref_core, _ = maintain_batch_host(_clone(g), core0, list(ups))
+    assert (np.asarray(core2) == np.asarray(ref_core)).all()
+    assert (np.asarray(g2.nbr) == np.asarray(ref_g.nbr)).all()
+
+
+def test_stream_threads_a_caller_owned_executor():
+    """Passing `executor=` reuses one executor ACROSS run_stream calls —
+    the whole-stream analogue of the per-window threading."""
+    from repro.runtime import SpmdExecutor
+
+    g = community_graph()
+    core0 = coreness(g, backend="jnp")
+    ex = SpmdExecutor(g)
+    ups1 = [(_pad_id(g, b, 0), _pad_id(g, b, 5), +1) for b in range(P)]
+    g1, core1, st1 = run_stream(_clone(g), core0, ups1, R=P,
+                                backend="ell_spmd", executor=ex)
+    ups2 = [(_pad_id(g, b, 1), _pad_id(g, b, 6), +1) for b in range(P)]
+    g2, core2, st2 = run_stream(g1, core1, ups2, R=P,
+                                backend="ell_spmd", executor=ex)
+    assert ex.full_rebuilds == 0
+    assert ex.plan_updates == st1.plan_updates + st2.plan_updates
+    assert (np.asarray(coreness(g2, backend="jnp"))
+            == np.asarray(core2)).all()
+
+
+@pytest.mark.parametrize("backend", ("jnp", "ell_spmd"))
+def test_stream_migration_keeps_coreness_bit_identical(backend):
+    """The acceptance criterion: a triggered §4.2 migration leaves the
+    final coreness bit-identical (through orig_id) to the unmigrated
+    run, on the jnp path and on the mesh at any device count."""
+    g = _skewed_graph()
+    core0 = coreness(g, backend="jnp")
+    ups = _mixed_updates(g)
+    ref_g, ref_core, ref_st = run_stream(_clone(g), core0, list(ups), R=4,
+                                         backend="jnp")
+    g2, core2, st = run_stream(_clone(g), core0, list(ups), R=4,
+                               backend=backend,
+                               rebalance_threshold=1.2,
+                               rebalance_max_moves=6)
+    assert st.migrations > 0 and st.migrated_vertices > 0
+    assert (_core_by_orig(g2, core2) == _core_by_orig(ref_g, ref_core)).all()
+    # the edge set is preserved too (in original ids)
+    from repro.core import to_networkx_edges
+    assert (to_networkx_edges(g2) == to_networkx_edges(ref_g)).all()
+    if backend == "ell_spmd":
+        # full rebuilds happen exactly at migrations, never in between
+        assert st.plan_rebuilds == st.migrations
+    # §4.2 did its job: the trigger balance is restored below threshold
+    from repro.core.partition_dynamic import block_balance
+    assert block_balance(g2) <= block_balance(ref_g)
+
+
+def test_stream_rebalance_disabled_never_migrates():
+    g = _skewed_graph()
+    core0 = coreness(g, backend="jnp")
+    ups = _mixed_updates(g)[:4]
+    _, _, st = run_stream(_clone(g), core0, ups, R=4, backend="jnp")
+    assert st.migrations == 0 and st.migrated_vertices == 0
+
+
+def test_stream_rejects_executor_on_non_mesh_backend():
+    """executor= without backend='ell_spmd' would silently leave the
+    executor's halo plan stale — must be loud instead."""
+    from repro.runtime import SpmdExecutor
+
+    g = community_graph()
+    core0 = coreness(g, backend="jnp")
+    ex = SpmdExecutor(g)
+    with pytest.raises(ValueError, match="executor"):
+        run_stream(g, core0, [], R=2, backend="jnp", executor=ex)
+
+
 def test_stream_rejects_bad_window():
     g = community_graph()
     core0 = coreness(g, backend="jnp")
