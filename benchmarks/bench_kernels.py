@@ -1,0 +1,125 @@
+"""Kernel-variant and fixpoint-latency sweeps (the BENCH_kernels.json source).
+
+Two measurement surfaces for the device-resident-fixpoint work:
+
+  * `kernels/hindex/*` — the h-index kernel variants at a (N, Cd) grid:
+    the O(Cd log Cd) in-tile sort sweep vs the legacy O(Cd*K) count-matrix
+    kernel (K = Cd), plus the single-superstep latency of each registry
+    backend.  Off-TPU the Pallas rows run in interpret mode — relative
+    variant cost, not hardware speed; parity vs `ref.ell_hindex_ref` is
+    asserted on every row (this file is part of the --smoke gate).
+  * `kernels/coreness/*` — the full min-H fixpoint as ONE fused
+    `lax.while_loop` (`ops.coreness_blocks`) vs a host-driven replica of
+    the pre-refactor loop (one `device_get` convergence check per
+    superstep).  The derived field carries the superstep count so
+    us/superstep is recoverable from the JSON trajectory.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import build_blocks, build_ell_random
+from repro.core.partition import node_random_partition
+from repro.graphgen import barabasi_albert
+from repro.kernels import ops, ref
+
+from .common import row, timeit_us
+
+
+def _timed(fn, reps: int) -> float:
+    out = fn()            # warmup / compile
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / max(1, reps) * 1e6
+
+
+def _hostloop_coreness(g, backend: str):
+    """Pre-refactor fixpoint: one kernel launch + one host sync/superstep."""
+    est = jnp.where(g.node_mask, g.deg, 0).astype(jnp.int32)
+    adj = ops.dense_adj(g, backend)
+    steps = 0
+    while True:
+        h = ops.hindex_blocks(g, est, backend=backend, adj=adj)
+        new = jnp.where(g.node_mask, jnp.minimum(est, h), est)
+        steps += 1
+        if bool(jax.device_get(jnp.all(new == est))):
+            break
+        est = new
+    return est, steps
+
+
+def run(seed: int = 0, smoke: bool = False) -> List[Tuple[str, float, str]]:
+    rows = []
+    reps = 3 if smoke else 10
+
+    # ---- kernel-variant sweep: sort vs count h-index ------------------
+    shapes = [(512, 256)] if smoke else [(512, 256), (2048, 256), (2048, 512)]
+    for N, Cd in shapes:
+        g = build_ell_random(N, Cd=Cd, seed=seed, m_factor=Cd / 3)
+        est = jnp.asarray(g.deg, jnp.int32)
+        want = np.asarray(ref.ell_hindex_ref(g.nbr, est))
+        K = ops.degree_bound(g)
+        us_by = {}
+        for variant in ("sort", "count"):
+            got = ops.hindex_ell(g.nbr, est, variant=variant)
+            np.testing.assert_array_equal(np.asarray(got), want)
+            us_by[variant] = _timed(
+                lambda v=variant: ops.hindex_ell(g.nbr, est, variant=v), reps)
+        for variant, us in us_by.items():
+            rows.append(row(
+                f"kernels/hindex/N{g.N}/Cd{Cd}/{variant}", us,
+                f"K={K};sort_speedup={us_by['count'] / max(us_by['sort'], 1e-9):.1f}x"))
+        # degree-bucketed K: same kernel, fewer columns swept
+        got = ops.hindex_ell(g.nbr, est, K=K)
+        np.testing.assert_array_equal(np.asarray(got), want)
+        rows.append(row(
+            f"kernels/hindex/N{g.N}/Cd{Cd}/sort_degK",
+            _timed(lambda: ops.hindex_ell(g.nbr, est, K=K), reps),
+            f"K={K}"))
+
+    # ---- single-superstep latency per backend -------------------------
+    n = 240 if smoke else 1000
+    edges = barabasi_albert(n, 4, seed=seed)
+    nn = int(edges.max()) + 1
+    g = build_blocks(edges, nn, node_random_partition(nn, 8, seed=seed),
+                     P=8, deg_slack=24)
+    est = jnp.where(g.node_mask, g.deg, 0).astype(jnp.int32)
+    want = np.asarray(ref.ell_hindex_ref(g.nbr, est))
+    for b in ("jnp", "dense", "ell"):
+        got = ops.hindex_blocks(g, est, backend=b)
+        np.testing.assert_array_equal(np.asarray(got).astype(want.dtype), want)
+        us = _timed(lambda bb=b: ops.hindex_blocks(g, est, backend=bb), reps)
+        rows.append(row(f"kernels/superstep/N{g.N}/{b}", us, "parity=ok"))
+
+    # ---- fused vs host-synced fixpoint --------------------------------
+    for b in ("jnp", "dense", "ell"):
+        core_h, steps_h = _hostloop_coreness(g, b)
+        t_host = timeit_us(lambda bb=b: jax.block_until_ready(
+            _hostloop_coreness(g, bb)[0]), n=reps)
+        def fused(bb=b):
+            return ops.coreness_blocks(g, backend=bb, with_steps=True)
+
+        core_f, steps_f = fused()
+        np.testing.assert_array_equal(np.asarray(core_h), np.asarray(core_f))
+        assert int(steps_f) == steps_h, (b, int(steps_f), steps_h)
+        t_fused = _timed(lambda: fused()[0], reps)
+        rows.append(row(
+            f"kernels/coreness/N{g.N}/{b}/fused", t_fused,
+            f"steps={int(steps_f)};"
+            f"hostloop_speedup={t_host / max(t_fused, 1e-9):.1f}x"))
+        rows.append(row(
+            f"kernels/coreness/N{g.N}/{b}/hostloop", t_host,
+            f"steps={steps_h}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import print_rows
+    print_rows(run())

@@ -1,0 +1,87 @@
+"""Soft perf-regression check over the BENCH_*.json trajectory files.
+
+Compares a fresh benchmark run (``--fresh`` dir, written by
+``benchmarks.run --out-dir``) against the committed baselines
+(``--baseline`` dir, normally the repo root) row-by-row and WARNS — never
+fails — when a row's ``us_per_call`` grew by more than ``--threshold``
+(default 2x).  Smoke timings on shared CI runners are noisy; the check is
+a tripwire for order-of-magnitude regressions (a fixpoint falling back to
+per-superstep host syncs, a kernel silently hitting a slow path), not a
+gate.  Rows faster than ``--floor-us`` in the baseline are skipped (pure
+noise), as are rows missing on either side (sweeps legitimately change).
+
+Exit code is always 0; under GitHub Actions warnings surface as
+``::warning`` annotations.
+
+Usage: python -m benchmarks.check_regression [--baseline .] [--fresh .]
+       [--threshold 2.0] [--floor-us 200]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import sys
+
+
+def _load_rows(path: pathlib.Path):
+    data = json.loads(path.read_text())
+    return {
+        r["name"]: r["us_per_call"]
+        for r in data.get("rows", [])
+        if r.get("us_per_call") is not None
+    }
+
+
+def _warn(msg: str) -> None:
+    if os.environ.get("GITHUB_ACTIONS"):
+        print(f"::warning title=bench regression::{msg}")
+    else:
+        print(f"WARNING: {msg}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default=".",
+                    help="dir holding the committed BENCH_*.json baselines")
+    ap.add_argument("--fresh", default=".",
+                    help="dir holding the freshly produced BENCH_*.json")
+    ap.add_argument("--threshold", type=float, default=2.0,
+                    help="warn when fresh/baseline exceeds this ratio")
+    ap.add_argument("--floor-us", type=float, default=200.0,
+                    help="ignore rows whose baseline is below this (noise)")
+    args = ap.parse_args(argv)
+
+    base_dir = pathlib.Path(args.baseline)
+    fresh_dir = pathlib.Path(args.fresh)
+    fresh_files = sorted(fresh_dir.glob("BENCH_*.json"))
+    if not fresh_files:
+        _warn(f"no BENCH_*.json found under {fresh_dir} — nothing to check")
+        return 0
+
+    compared = regressed = 0
+    for fresh_path in fresh_files:
+        base_path = base_dir / fresh_path.name
+        if not base_path.exists() or base_path.resolve() == fresh_path.resolve():
+            print(f"{fresh_path.name}: no distinct baseline, skipped")
+            continue
+        base = _load_rows(base_path)
+        fresh = _load_rows(fresh_path)
+        for name in sorted(set(base) & set(fresh)):
+            if base[name] < args.floor_us:
+                continue
+            compared += 1
+            ratio = fresh[name] / base[name]
+            if ratio > args.threshold:
+                regressed += 1
+                _warn(
+                    f"{name}: {base[name]:.0f}us -> {fresh[name]:.0f}us "
+                    f"({ratio:.1f}x > {args.threshold:.1f}x baseline)")
+    print(f"check_regression: {compared} rows compared, "
+          f"{regressed} above {args.threshold:.1f}x (soft check, exit 0)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

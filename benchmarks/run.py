@@ -9,14 +9,23 @@ Prints ``name,us_per_call,derived`` CSV rows.
   kcore_static — static decomposition time + supersteps        (§4.1 step 1)
   backends — jnp vs dense vs ELL registry sweep incl. the >4 GiB dense-
              infeasible N (EXPERIMENTS.md §Backends)
+  kernels  — h-index kernel variants (sort vs count) + fused-vs-host-loop
+             fixpoint latency (EXPERIMENTS.md §Kernels)
   runtime  — mesh (ell_spmd) coreness parity/time + metered vs executed
              W2W accounting (EXPERIMENTS.md §Runtime)
   stream   — incremental vs full halo-plan maintenance, executor-reuse
              stream pass, §4.2 live rebalancing (EXPERIMENTS.md §Stream)
   roofline — three-term roofline per (arch × shape) from the dry-run JSONs
 
+The `kernels` and `stream` rows are additionally written to
+``BENCH_kernels.json`` / ``BENCH_stream.json`` under --out-dir: the
+machine-readable perf trajectory (committed baselines at the repo root,
+fresh points uploaded as CI artifacts and soft-checked by
+``benchmarks.check_regression``).
+
 Usage: PYTHONPATH=src python -m benchmarks.run [--full] [--updates N]
        [--backends jnp,dense,ell] [--batch-sizes 1,4,8] [--smoke]
+       [--out-dir DIR]
 
 --smoke is the CI gate: tiny graphs, every backend, a few updates — fails
 fast on kernel parity regressions without the full table runtime.
@@ -24,8 +33,42 @@ fast on kernel parity regressions without the full table runtime.
 from __future__ import annotations
 
 import argparse
+import json
+import math
+import pathlib
+import platform
 import sys
 import traceback
+
+#: benches whose rows feed the machine-readable perf trajectory
+JSON_BENCHES = ("kernels", "stream")
+
+
+def write_bench_json(out_dir: str, bench: str, rows) -> pathlib.Path:
+    """Write one bench's rows as BENCH_<name>.json (NaN -> null)."""
+    import jax
+
+    payload = {
+        "bench": bench,
+        "schema": ["name", "us_per_call", "derived"],
+        "platform": {
+            "jax_backend": jax.devices()[0].platform,
+            "device_count": len(jax.devices()),
+            "python": platform.python_version(),
+        },
+        "rows": [
+            {
+                "name": name,
+                "us_per_call": round(us, 1) if math.isfinite(us) else None,
+                "derived": derived,
+            }
+            for name, us, derived in rows
+        ],
+    }
+    path = pathlib.Path(out_dir) / f"BENCH_{bench}.json"
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(payload, indent=2, allow_nan=False) + "\n")
+    return path
 
 
 def main() -> None:
@@ -42,10 +85,12 @@ def main() -> None:
                     help="tiny CI pass: backend parity + a few updates")
     ap.add_argument("--only", default=None,
                     help="comma list: table2,fig7,partitioning,static,"
-                         "backends,runtime,stream,roofline")
+                         "backends,kernels,runtime,stream,roofline")
+    ap.add_argument("--out-dir", default=".",
+                    help="directory for the BENCH_*.json trajectory files")
     args = ap.parse_args()
 
-    from . import (bench_backends, bench_kcore_maintenance,
+    from . import (bench_backends, bench_kcore_maintenance, bench_kernels,
                    bench_vs_naive_kcore, bench_partitioning,
                    bench_runtime, bench_static_kcore, bench_stream,
                    roofline)
@@ -76,6 +121,8 @@ def main() -> None:
             full=args.full, seed=args.seed, backends=backends),
         "backends": lambda: bench_backends.run(
             seed=args.seed, smoke=args.smoke),
+        "kernels": lambda: bench_kernels.run(
+            seed=args.seed, smoke=args.smoke),
         "runtime": lambda: bench_runtime.run(
             seed=args.seed, smoke=args.smoke),
         "stream": lambda: bench_stream.run(
@@ -103,9 +150,13 @@ def main() -> None:
         if name not in only:
             continue
         try:
-            for r in fn():
+            rows = list(fn())
+            for r in rows:
                 print(f"{r[0]},{r[1]:.1f},{r[2]}")
             sys.stdout.flush()
+            if name in JSON_BENCHES:
+                path = write_bench_json(args.out_dir, name, rows)
+                print(f"# wrote {path}", file=sys.stderr)
         except Exception:
             failed += 1
             print(f"{name},nan,ERROR", flush=True)

@@ -172,8 +172,16 @@ class BladygEngine:
             cond, body, (wstate, mstate, directive, jnp.bool_(False), jnp.int32(0))
         )
         stats = self._meter(summary_shape, directive, w2w)
-        for step in range(int(jax.device_get(n))):
-            self.traces.append(SuperstepTrace(step, program.modes, stats))
+        # ONE host transfer for the whole run: the superstep count rides the
+        # same device_get that blocks on the final state; the traces are then
+        # reconstructed in a single bulk extend (per-superstep stats are
+        # static, so no per-step host work remains).  wstate/mstate stay on
+        # device for the caller.
+        (n_steps,) = jax.device_get((n,))
+        self.traces.extend(
+            SuperstepTrace(step, program.modes, stats)
+            for step in range(int(n_steps))
+        )
         return wstate, mstate
 
     @staticmethod

@@ -66,31 +66,34 @@ def coreness_step(
 
 
 def coreness(
-    g: GraphBlocks, max_steps: int = 10_000, backend: str = "auto"
+    g: GraphBlocks, max_steps: int = 10_000, backend: str = "auto",
+    executor=None,
 ) -> jax.Array:
     """Coreness of every node (0 on padding rows), via the chosen backend.
 
-    The jnp path is a single fused `lax.while_loop`; the Pallas paths
-    (dense/ell) iterate the kernelized h-index host-side (one kernel launch
-    per superstep).  All backends return identical integers.
+    Every backend runs the whole min-H fixpoint as a single fused
+    `lax.while_loop` (Pallas kernels inside the body on dense/ell, the
+    shard_map'd halo loop on ell_spmd) — zero per-superstep host syncs.
+    All backends return identical integers.  On the mesh backend pass a
+    long-lived `SpmdExecutor` via `executor=` to skip the per-call halo
+    plan build.
     """
-    return ops.coreness_blocks(g, backend=backend, max_steps=max_steps)
+    return ops.coreness_blocks(g, backend=backend, max_steps=max_steps,
+                               executor=executor)
 
 
 def coreness_with_stats(
     g: GraphBlocks, max_steps: int = 10_000, backend: str = "jnp"
 ):
-    """Python-loop variant that reports superstep count (for benchmarks)."""
-    est = jnp.where(g.node_mask, g.deg, 0).astype(jnp.int32)
-    step_fn = jax.jit(coreness_step, static_argnames=("backend",))
-    steps = 0
-    while steps < max_steps:
-        est2, changed = step_fn(g, est, g.node_mask, backend=backend)
-        steps += 1
-        if not bool(changed):
-            break
-        est = est2
-    return est, steps
+    """Coreness plus the superstep count (host int, for benchmarks).
+
+    Same fused fixpoint as `coreness`; the step count comes back as a
+    device scalar and is fetched in one transfer at the end — the old
+    host-driven loop (one transfer per superstep) is gone.
+    """
+    est, steps = ops.coreness_blocks(
+        g, backend=backend, max_steps=max_steps, with_steps=True)
+    return est, int(jax.device_get(steps))
 
 
 def max_coreness(g: GraphBlocks) -> int:

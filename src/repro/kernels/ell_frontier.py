@@ -14,10 +14,14 @@ dense kernel, `eligible` here carries a per-frontier column axis — batched
 maintenance stacks updates with *different* k values, so each column has its
 own k-level eligibility mask.
 
-Grid: row tiles i; per tile a `fori_loop` over the Cd neighbor slots gathers
-frontier rows (`jnp.take`, see the lowering note in ell_hindex.py) and ORs
-them into a (T, R) register accumulator; the eligibility/visited epilogue is
-fused (no HBM round-trip).  Validated in interpret mode against
+Grid: row tiles i; per tile a `fori_loop` over CHUNKS of `chunk` neighbor
+slots gathers `T*chunk` frontier rows at once (`jnp.take`, see the lowering
+note in ell_hindex.py) and ORs the chunk-reduced (T, R) hit mask into a
+register accumulator — Cd/chunk gather launches instead of Cd single-slot
+gathers, amortizing the per-gather latency.  Like the h-index kernel, a
+max-degree column bound K < Cd (left-filled rows, see `ops.degree_bound`)
+restricts the sweep to the first K slots.  The eligibility/visited epilogue
+is fused (no HBM round-trip).  Validated in interpret mode against
 `ref.ell_frontier_hop_ref`.
 """
 from __future__ import annotations
@@ -29,52 +33,67 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from ._compat import CompilerParams as _CompilerParams
 
+#: neighbor slots gathered per loop iteration (divides 128, so any padded
+#: column count is a multiple of it)
+CHUNK = 8
 
-def _ell_frontier_kernel(nbr_ref, f_ref, elig_ref, vis_ref, out_ref, *, Cd: int, T: int):
-    nbr = nbr_ref[...]  # (T, Cd) int32, -1 padded
+
+def _ell_frontier_kernel(
+    nbr_ref, f_ref, elig_ref, vis_ref, out_ref, *, C: int, T: int, chunk: int
+):
+    nbr = nbr_ref[...]  # (T, C) int32, -1 padded
     f_full = f_ref[...]  # (N, R) int8
+    R = f_full.shape[1]
 
     def body(j, acc):
-        idx = jax.lax.dynamic_slice(nbr, (0, j), (T, 1))  # (T, 1)
-        rows = jnp.take(f_full, jnp.clip(idx[:, 0], 0), axis=0)  # (T, R)
-        return acc | ((rows > 0) & (idx >= 0))  # (T,1) mask broadcasts over R
+        idx = jax.lax.dynamic_slice(nbr, (0, j * chunk), (T, chunk))  # (T, c)
+        rows = jnp.take(f_full, jnp.clip(idx, 0).reshape(-1), axis=0)
+        rows = rows.reshape(T, chunk, R)  # (T, c, R)
+        hit = jnp.any((rows > 0) & (idx >= 0)[:, :, None], axis=1)  # (T, R)
+        return acc | hit
 
-    R = f_full.shape[1]
-    hit = jax.lax.fori_loop(0, Cd, body, jnp.zeros((T, R), jnp.bool_))
+    hit = jax.lax.fori_loop(0, C // chunk, body, jnp.zeros((T, R), jnp.bool_))
     out_ref[...] = (
         hit & (elig_ref[...] > 0) & ~(vis_ref[...] > 0)
     ).astype(jnp.int8)
 
 
-@functools.partial(jax.jit, static_argnames=("T", "interpret"))
+@functools.partial(jax.jit, static_argnames=("K", "T", "interpret", "chunk"))
 def frontier_step_ell(
     nbr: jax.Array,
     f: jax.Array,
     eligible: jax.Array,
     visited: jax.Array,
+    K: int,
     T: int = 256,
     interpret: bool = True,
+    chunk: int = CHUNK,
 ) -> jax.Array:
     """One masked BFS hop for R stacked frontiers over the ELL adjacency.
 
     nbr: (N, Cd) int32 (-1 padded); f: (N, R) 0/1; eligible: (N, R) 0/1 int8
-    (per-column k-level masks); visited: (N, R) 0/1 int8.  Returns the next
-    frontier (N, R) int8.  N % T == 0, Cd % 128 == 0, R % 128 == 0 (pad via
-    the ops.py wrapper).
+    (per-column k-level masks); visited: (N, R) 0/1 int8.  K is the column
+    bound: exact iff valid slots lie in the first K columns (K >= Cd always
+    works; K < Cd needs left-filled rows — the `GraphBlocks` invariant).
+    Returns the next frontier (N, R) int8.  N % T == 0, Cd % 128 == 0,
+    K % 128 == 0, R % 128 == 0 (pad via the ops.py wrapper).
     """
     N, Cd = nbr.shape
     R = f.shape[1]
     assert f.shape == (N, R) and visited.shape == (N, R), (f.shape, visited.shape)
     assert eligible.shape == (N, R), eligible.shape
     assert N % T == 0 and Cd % 128 == 0 and R % 128 == 0, (N, T, Cd, R)
+    assert K % 128 == 0, K
+    C = min(Cd, K)
+    assert C % chunk == 0, (C, chunk)
     ni = N // T
 
-    kernel = functools.partial(_ell_frontier_kernel, Cd=Cd, T=T)
+    kernel = functools.partial(_ell_frontier_kernel, C=C, T=T, chunk=chunk)
     out = pl.pallas_call(
         kernel,
         grid=(ni,),
         in_specs=[
-            pl.BlockSpec((T, Cd), lambda i: (i, 0)),  # neighbor-list row tile
+            pl.BlockSpec((T, C), lambda i: (i, 0)),  # neighbor-list row tile
             pl.BlockSpec((N, R), lambda i: (0, 0)),   # full frontier matrix
             pl.BlockSpec((T, R), lambda i: (i, 0)),   # eligibility tile
             pl.BlockSpec((T, R), lambda i: (i, 0)),   # visited tile
@@ -85,5 +104,8 @@ def frontier_step_ell(
             dimension_semantics=("arbitrary",)
         ),
         interpret=interpret,
-    )(nbr, f.astype(jnp.int8), eligible.astype(jnp.int8), visited.astype(jnp.int8))
+    )(
+        nbr[:, :C], f.astype(jnp.int8), eligible.astype(jnp.int8),
+        visited.astype(jnp.int8),
+    )
     return out

@@ -8,19 +8,29 @@ precisely because no worker can hold a dense view).  This kernel consumes the
     nbr[N, Cd] int32   padded neighbor ids (-1 = empty slot)
     est[N]     int32   current coreness estimates
 
-Per row tile of T nodes (grid axis i):
+Per row tile of T nodes (grid axis i), two interchangeable variants:
 
-    1. gather   vals[t, j] = est[nbr[t, j]]        (PAD slots -> -1)
-    2. count    cnt[t, k]  = #{j : vals[t, j] >= k},  k = 1..K
-    3. h-index  h[t] = sum_k (cnt[t, k] >= k)       (prefix-monotone)
+  "sort" (default) — the O(Cd log Cd) path:
+    1. gather   vals[t, j] = est[nbr[t, j]]          (PAD slots -> -1)
+    2. sort     each row descending (`jax.lax.sort`, bitonic on TPU)
+    3. h-index  h[t] = sum_k (vals_desc[t, k] >= k+1)  (position compare)
 
-Step 2 runs as a `fori_loop` over the Cd neighbor slots with a (T, K)
-VPU-shaped compare+accumulate per slot — the "in-register h-index sweep":
-the counts never leave the tile.  Because h(u) <= deg(u) <= Cd, thresholds
-K = Cd (padded to a lane multiple) are always sufficient, so K is static and
-the kernel is jit-safe with no data-dependent bound.
+  "count" — the original O(Cd * K) threshold-count formulation, kept for
+    the kernel-variant benchmark sweep (`benchmarks/bench_kernels.py`):
+    a `fori_loop` over the Cd neighbor slots accumulates a (T, K) count
+    matrix cnt[t, k] = #{j : vals[t, j] >= k+1}, then
+    h[t] = sum_k (cnt[t, k] >= k+1).  With K padded to Cd this is O(Cd^2)
+    work per node — the asymptotic gap the sort variant removes.
 
-Memory: O(N*Cd) for the neighbor lists + O(N) for estimates, vs O(N^2) for
+Threshold/sort bound K: because h(u) <= deg(u) <= Cd, any K >= max degree
+is exact *when the rows are left-filled* (valid slots before PAD slots —
+the `GraphBlocks` invariant: `build_blocks` fills sequentially,
+`insert_edge` appends at deg[u], `delete_edge` swaps-with-last).  Callers
+that can bound the max degree (see `ops.degree_bound`) pass K < Cd and the
+kernel reads/sorts only the first K neighbor columns; K = Cd is always
+safe and assumes nothing about slot order.
+
+Memory: O(N*K) for the neighbor lists + O(N) for estimates, vs O(N^2) for
 the dense path.  The full `est` vector rides along in VMEM ((1, N) int32 —
 4 bytes/node, ~200 KB at N=50k); at multi-million-N it would be chunked via
 HBM DMA, which is the planned multi-device halo-exchange extension.
@@ -38,52 +48,75 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from ._compat import CompilerParams as _CompilerParams
 
+VARIANTS = ("sort", "count")
 
-def _ell_hindex_kernel(nbr_ref, est_ref, out_ref, *, K: int, Cd: int, T: int):
-    nbr = nbr_ref[...]  # (T, Cd) int32, -1 padded
-    est_row = est_ref[...]  # (1, N) int32
-    # 1. gather neighbor estimates; empty slots contribute -1 (< every k)
-    vals = jnp.where(nbr >= 0, jnp.take(est_row[0], jnp.clip(nbr, 0), axis=0), -1)
+
+def _gather_vals(nbr, est_row):
+    """vals[t, j] = est[nbr[t, j]]; empty slots contribute -1 (< every k)."""
+    return jnp.where(nbr >= 0, jnp.take(est_row[0], jnp.clip(nbr, 0), axis=0), -1)
+
+
+def _ell_hindex_sort_kernel(nbr_ref, est_ref, out_ref, *, T: int):
+    nbr = nbr_ref[...]  # (T, C) int32, -1 padded
+    vals = _gather_vals(nbr, est_ref[...])
+    # descending in-tile sort: h = sum_k [vals_desc[k] >= k+1] — the
+    # indicator is prefix-monotone, so the sum equals the h-index.
+    s = -jnp.sort(-vals, axis=1)
+    ranks = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1) + 1
+    out_ref[...] = jnp.sum((s >= ranks).astype(jnp.int32), axis=1, keepdims=True)
+
+
+def _ell_hindex_count_kernel(nbr_ref, est_ref, out_ref, *, K: int, C: int, T: int):
+    nbr = nbr_ref[...]  # (T, C) int32, -1 padded
+    vals = _gather_vals(nbr, est_ref[...])
     ks = jax.lax.broadcasted_iota(jnp.int32, (T, K), 1) + 1
 
-    # 2. threshold counts, one neighbor slot per iteration (stays in registers)
+    # threshold counts, one neighbor slot per iteration (stays in registers)
     def body(j, cnt):
         col = jax.lax.dynamic_slice(vals, (0, j), (T, 1))  # (T, 1)
         return cnt + (col >= ks).astype(jnp.int32)
 
-    cnt = jax.lax.fori_loop(0, Cd, body, jnp.zeros((T, K), jnp.int32))
-
-    # 3. cnt[:, k] is non-increasing in k -> the indicator is prefix-monotone
-    #    and its sum equals the h-index.
+    cnt = jax.lax.fori_loop(0, C, body, jnp.zeros((T, K), jnp.int32))
+    # cnt[:, k] is non-increasing in k -> prefix-monotone indicator
     out_ref[...] = jnp.sum((cnt >= ks).astype(jnp.int32), axis=1, keepdims=True)
 
 
-@functools.partial(jax.jit, static_argnames=("K", "T", "interpret"))
+@functools.partial(jax.jit, static_argnames=("K", "T", "interpret", "variant"))
 def hindex_ell(
     nbr: jax.Array,
     est: jax.Array,
     K: int,
     T: int = 256,
     interpret: bool = True,
+    variant: str = "sort",
 ) -> jax.Array:
     """h-index of every node from the ELL adjacency.
 
-    nbr: (N, Cd) int32 (-1 padded), est: (N,) int32, K: threshold bound —
-    exact iff K >= Cd (h <= deg <= Cd always).  N must be a multiple of T and
-    Cd a multiple of 128 (pad via the ops.py wrapper).
+    nbr: (N, Cd) int32 (-1 padded), est: (N,) int32, K: threshold/sort
+    bound — exact iff every row's valid slots lie in the first K columns
+    and h <= K (always true for K >= Cd; for max-degree-bounded K < Cd the
+    rows must be left-filled, the `GraphBlocks` invariant).  When K < Cd
+    only the first K neighbor columns are read.  N must be a multiple of T
+    and Cd, K multiples of 128 (pad via the ops.py wrapper).
     """
     N, Cd = nbr.shape
     assert est.shape == (N,), (est.shape, N)
     assert N % T == 0, (N, T)
     assert Cd % 128 == 0 and K % 128 == 0, (Cd, K)
+    if variant not in VARIANTS:
+        raise ValueError(f"unknown variant {variant!r}; expected {VARIANTS}")
+    C = min(Cd, K)  # columns actually read/sorted
     ni = N // T
 
-    kernel = functools.partial(_ell_hindex_kernel, K=K, Cd=Cd, T=T)
+    if variant == "sort":
+        kernel = functools.partial(_ell_hindex_sort_kernel, T=T)
+    else:
+        kernel = functools.partial(_ell_hindex_count_kernel, K=K, C=C, T=T)
     out = pl.pallas_call(
         kernel,
         grid=(ni,),
         in_specs=[
-            pl.BlockSpec((T, Cd), lambda i: (i, 0)),  # neighbor-list row tile
+            pl.BlockSpec((T, C), lambda i: (i, 0)),  # neighbor-list row tile
             pl.BlockSpec((1, N), lambda i: (0, 0)),   # full estimate vector
         ],
         out_specs=pl.BlockSpec((T, 1), lambda i: (i, 0)),
@@ -92,5 +125,5 @@ def hindex_ell(
             dimension_semantics=("arbitrary",)
         ),
         interpret=interpret,
-    )(nbr, est[None, :])
+    )(nbr[:, :C], est[None, :])
     return out[:, 0]

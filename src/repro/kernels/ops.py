@@ -19,7 +19,10 @@ A fourth, explicit-only backend executes over the device mesh:
               real halo exchange (all-to-all per the precomputed
               `HaloPlan`).  Never chosen by "auto"; host-boundary only —
               the halo plan derives from concrete adjacency, so calls
-              under an outer jit trace raise.
+              under an outer jit trace raise.  Loops should build ONE
+              `SpmdExecutor` and thread it through the `executor=`
+              parameter of the dispatch entry points; without it each call
+              rebuilds the halo plan from scratch.
 
 `backend="auto"` resolves per call: jnp off-TPU (Pallas would run in the
 interpreter), dense for blocks small enough to densify profitably
@@ -27,6 +30,15 @@ interpreter), dense for blocks small enough to densify profitably
 the benchmarks call the primitives *only* through this layer — adding a
 backend (the shard_map multi-device path arrived exactly this way) is a
 registry entry, not a core-algorithm change.
+
+Fixpoints are device-resident: `coreness_blocks` fuses the whole min-H
+iteration into one jitted `lax.while_loop` on every backend (Pallas calls
+inside the loop body on dense/ell), so a fixpoint costs ZERO per-superstep
+host transfers and returns its superstep count as a device scalar
+(`with_steps=True`).  The only host sync is the once-per-fixpoint
+`degree_bound` read that buckets the kernels' threshold/sort bound K to a
+power of two — the bucketing keeps the per-(shape, K) compiled caches
+hitting while the bound tracks the graph instead of the padded Cd.
 
 The GraphBlocks-level entry points (`hindex_blocks`, `frontier_blocks`,
 `coreness_blocks`) duck-type on `.nbr`/`.deg`/`.node_mask`/`.N`/`.Cd` so this
@@ -38,7 +50,7 @@ their historical adjacency-matrix signatures for the kernel sweep tests.
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -63,6 +75,14 @@ def _on_tpu() -> bool:
 
 def _pad_to(x: int, mult: int) -> int:
     return -(-x // mult) * mult
+
+
+def _pow2_bucket(x: int, floor: int = 128) -> int:
+    """Smallest power of two >= x, floored at `floor` (a lane multiple)."""
+    k = floor
+    while k < x:
+        k *= 2
+    return k
 
 
 def _tile_dims(N: int, T: int) -> tuple:
@@ -94,9 +114,32 @@ def dense_bytes(N: int, T: int = 256) -> int:
     return Np * Np * 2
 
 
+def degree_bound(g) -> int:
+    """pow2-bucketed max-degree threshold bound for the h-index kernels.
+
+    ONE host sync per call (read at the top of a fixpoint, never inside) —
+    h(u) <= deg(u), so any bound >= max degree is exact, and the power-of-
+    two bucketing means maintenance streams that nudge the max degree keep
+    hitting the same compiled kernels.  Under a jit trace (where the
+    degrees are abstract) this falls back to the static padded-Cd bound,
+    which is always safe and costs no transfer.
+    """
+    Cdp = max(128, _pad_to(g.Cd, 128))
+    if isinstance(g.deg, jax.core.Tracer) or g.N == 0:
+        return Cdp
+    d = int(jax.device_get(jnp.max(g.deg)))
+    return min(Cdp, _pow2_bucket(max(1, d)))
+
+
 # ---------------------------------------------------------------------------
 # Dense-path wrappers (historical adjacency-matrix API, kept for the sweeps).
 # ---------------------------------------------------------------------------
+
+
+def _pad_dense_adj(adj: jax.Array, N: int, Np: int) -> jax.Array:
+    """Pad a dense adjacency to the tile-aligned bf16 form the kernels eat."""
+    return jnp.zeros((Np, Np), jnp.bfloat16).at[:N, :N].set(
+        adj.astype(jnp.bfloat16))
 
 
 def hindex(
@@ -106,15 +149,20 @@ def hindex(
     T: int = 256,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
-    """h-index per node via the dense-tile kernel (pads N, K as needed)."""
+    """h-index per node via the dense-tile kernel (pads N, K as needed).
+
+    K=None uses the static node-count bound (h <= deg < N) — jit-safe and
+    free of host syncs; hot loops should pass the graph's degree bound
+    (`degree_bound`) for a tighter count matrix.
+    """
     N = adj.shape[0]
     if K is None:
-        K = int(jax.device_get(jnp.max(est))) + 1
+        K = max(1, N)  # h <= deg <= N-1: static, no hidden device_get
     Kp = max(128, _pad_to(K, 128))
     Tp, Np = _tile_dims(N, T)
     if interpret is None:
         interpret = not _on_tpu()
-    adj_p = jnp.zeros((Np, Np), jnp.bfloat16).at[:N, :N].set(adj.astype(jnp.bfloat16))
+    adj_p = _pad_dense_adj(adj, N, Np)
     est_p = jnp.full((Np,), -1, jnp.int32).at[:N].set(est.astype(jnp.int32))
     h = _hindex_pallas(adj_p, est_p, K=Kp, T=Tp, interpret=interpret)
     return h[:N]
@@ -134,7 +182,7 @@ def frontier_step(
     Tp, Np = _tile_dims(N, T)
     if interpret is None:
         interpret = not _on_tpu()
-    adj_p = jnp.zeros((Np, Np), jnp.bfloat16).at[:N, :N].set(adj.astype(jnp.bfloat16))
+    adj_p = _pad_dense_adj(adj, N, Np)
     f_p = jnp.zeros((Np, Rp), jnp.bfloat16).at[:N, :R].set(f.astype(jnp.bfloat16))
     e_p = jnp.zeros((Np,), jnp.int8).at[:N].set(eligible.astype(jnp.int8))
     v_p = jnp.zeros((Np, Rp), jnp.int8).at[:N, :R].set(visited.astype(jnp.int8))
@@ -142,27 +190,80 @@ def frontier_step(
     return nxt[:N, :R]
 
 
+@functools.partial(
+    jax.jit,
+    static_argnames=("kind", "K", "T", "interpret", "variant", "max_steps"))
+def _coreness_fused(mat_p, est0_p, mask_p, kind, K, T, interpret, variant,
+                    max_steps):
+    """Fused min-H fixpoint: the backend kernel inside ONE while_loop.
+
+    mat_p is the padded bf16 adjacency (kind="dense") or the padded ELL
+    neighbor lists (kind="ell") — the only thing the two kernel paths
+    disagree on; everything else (clamp, convergence, step counting) is
+    shared here so the fixpoint semantics cannot diverge per backend.
+    """
+
+    def h_of(est):
+        if kind == "dense":
+            return _hindex_pallas(mat_p, est, K=K, T=T, interpret=interpret)
+        return _hindex_ell_pallas(
+            mat_p, est, K=K, T=T, interpret=interpret, variant=variant)
+
+    def cond(c):
+        _, changed, it = c
+        return changed & (it < max_steps)
+
+    def body(c):
+        est, _, it = c
+        new = jnp.where(mask_p, jnp.minimum(est, h_of(est)), est)
+        return new, jnp.any(new != est), it + 1
+
+    est, _, steps = jax.lax.while_loop(
+        cond, body, (est0_p, jnp.bool_(True), jnp.int32(0)))
+    return est, steps
+
+
+def _run_fused_coreness(mat, est0, mask, N, kind, K, T, interpret, variant,
+                        max_steps):
+    """Pad once (host boundary), run the fused fixpoint: (est[:N], steps)."""
+    Tp, Np = _tile_dims(N, T)
+    est0_p = jnp.zeros((Np,), jnp.int32).at[:N].set(est0)
+    mask_p = jnp.zeros((Np,), bool).at[:N].set(mask)
+    if kind == "dense":
+        mat_p, Kk = _pad_dense_adj(mat, N, Np), K
+    else:
+        mat_p, Kk, Tp, Np = _pad_ell(mat, K, T)
+    est_p, steps = _coreness_fused(
+        mat_p, est0_p, mask_p, kind=kind, K=Kk, T=Tp, interpret=interpret,
+        variant=variant, max_steps=max_steps)
+    return est_p[:N], steps
+
+
 def coreness_dense(
     adj: jax.Array,
     T: int = 256,
     max_steps: int = 10_000,
     interpret: Optional[bool] = None,
-) -> jax.Array:
+    with_steps: bool = False,
+) -> Union[jax.Array, Tuple[jax.Array, jax.Array]]:
     """Full coreness via the kernelized min-H iteration (dense path).
 
     Matches `ref.coreness_dense_ref` and `core.kcore.coreness` exactly.
+    The whole fixpoint is ONE jitted `lax.while_loop` (zero per-superstep
+    host transfers); the only sync is the once-per-call degree-bound read
+    for the threshold count K (pow2-bucketed for compile-cache stability).
+    `with_steps=True` additionally returns the superstep count as a device
+    scalar.
     """
     N = adj.shape[0]
     deg = jnp.sum(adj > 0, axis=1).astype(jnp.int32)
-    K = int(jax.device_get(jnp.max(deg))) + 1 if N else 1
-    est = deg
-    for _ in range(max_steps):
-        h = hindex(adj, est, K=K, T=T, interpret=interpret)
-        new = jnp.minimum(est, h)
-        if bool(jax.device_get(jnp.all(new == est))):
-            break
-        est = new
-    return est
+    K = _pow2_bucket(int(jax.device_get(jnp.max(deg))) + 1 if N else 1)
+    if interpret is None:
+        interpret = not _on_tpu()
+    est, steps = _run_fused_coreness(
+        adj, deg, jnp.ones((N,), bool), N, "dense", K, T, interpret, "sort",
+        max_steps)
+    return (est, steps) if with_steps else est
 
 
 # ---------------------------------------------------------------------------
@@ -170,21 +271,46 @@ def coreness_dense(
 # ---------------------------------------------------------------------------
 
 
+def _pad_ell(nbr: jax.Array, K: Optional[int], T: int):
+    """Pad an ELL adjacency for the kernels: (nbr_p, Ck, Tp, Np).
+
+    K=None keeps the always-safe padded-Cd column bound; a max-degree K
+    (left-filled rows, see `degree_bound`) shrinks the columns the kernels
+    read and sort to min(Cd, K) — the pow2 bucketing upstream keeps Ck
+    stable across maintenance streams.
+    """
+    N, Cd = nbr.shape
+    Cdp = max(128, _pad_to(Cd, 128))
+    Ck = Cdp if K is None else min(Cdp, max(128, _pad_to(K, 128)))
+    Tp, Np = _tile_dims(N, T)
+    Cc = min(Cd, Ck)  # source columns that can hold valid slots
+    nbr_p = jnp.full((Np, Ck), -1, jnp.int32).at[:N, :Cc].set(
+        nbr[:, :Cc].astype(jnp.int32))
+    return nbr_p, Ck, Tp, Np
+
+
 def hindex_ell(
     nbr: jax.Array,
     est: jax.Array,
     T: int = 256,
     interpret: Optional[bool] = None,
+    K: Optional[int] = None,
+    variant: str = "sort",
 ) -> jax.Array:
-    """h-index per node via the ELL block-sparse kernel — O(N*Cd) memory."""
+    """h-index per node via the ELL block-sparse kernel — O(N*Cd) memory.
+
+    `variant` selects the O(Cd log Cd) in-tile sort sweep ("sort", the
+    default) or the legacy O(Cd*K) count-matrix kernel ("count", kept for
+    the variant benchmark).  K (optional) is the max-degree column bound;
+    exactness for K < Cd requires left-filled rows (`GraphBlocks`).
+    """
     N, Cd = nbr.shape
-    Cdp = max(128, _pad_to(Cd, 128))
-    Tp, Np = _tile_dims(N, T)
     if interpret is None:
         interpret = not _on_tpu()
-    nbr_p = jnp.full((Np, Cdp), -1, jnp.int32).at[:N, :Cd].set(nbr.astype(jnp.int32))
+    nbr_p, Ck, Tp, Np = _pad_ell(nbr, K, T)
     est_p = jnp.full((Np,), -1, jnp.int32).at[:N].set(est.astype(jnp.int32))
-    h = _hindex_ell_pallas(nbr_p, est_p, K=Cdp, T=Tp, interpret=interpret)
+    h = _hindex_ell_pallas(
+        nbr_p, est_p, K=Ck, T=Tp, interpret=interpret, variant=variant)
     return h[:N]
 
 
@@ -195,20 +321,23 @@ def frontier_step_ell(
     visited: jax.Array,
     T: int = 256,
     interpret: Optional[bool] = None,
+    K: Optional[int] = None,
 ) -> jax.Array:
-    """Masked BFS hop over the ELL adjacency; eligible is (N, R) per-column."""
+    """Masked BFS hop over the ELL adjacency; eligible is (N, R) per-column.
+
+    K (optional) bounds the neighbor columns swept, like `hindex_ell`.
+    """
     N, Cd = nbr.shape
     R = f.shape[1]
-    Cdp = max(128, _pad_to(Cd, 128))
     Rp = max(128, _pad_to(R, 128))
-    Tp, Np = _tile_dims(N, T)
     if interpret is None:
         interpret = not _on_tpu()
-    nbr_p = jnp.full((Np, Cdp), -1, jnp.int32).at[:N, :Cd].set(nbr.astype(jnp.int32))
+    nbr_p, Ck, Tp, Np = _pad_ell(nbr, K, T)
     f_p = jnp.zeros((Np, Rp), jnp.int8).at[:N, :R].set(f.astype(jnp.int8))
     e_p = jnp.zeros((Np, Rp), jnp.int8).at[:N, :R].set(eligible.astype(jnp.int8))
     v_p = jnp.zeros((Np, Rp), jnp.int8).at[:N, :R].set(visited.astype(jnp.int8))
-    nxt = _frontier_ell_pallas(nbr_p, f_p, e_p, v_p, T=Tp, interpret=interpret)
+    nxt = _frontier_ell_pallas(nbr_p, f_p, e_p, v_p, K=Ck, T=Tp,
+                               interpret=interpret)
     return nxt[:N, :R]
 
 
@@ -223,26 +352,31 @@ def hindex_blocks(
     backend: str = "auto",
     interpret: Optional[bool] = None,
     adj: Optional[jax.Array] = None,
+    executor=None,
+    K: Optional[int] = None,
 ) -> jax.Array:
     """h-index of neighbor estimates for every node, via the chosen backend.
 
     All backends are exact and identical (h <= deg <= Cd, so the static
-    threshold bound K = Cd keeps the kernel paths jit-safe).  Loops that
-    call the dense backend repeatedly should densify once and pass `adj`
-    (see `dense_adj`) instead of paying the O(N^2) scatter per call.
+    threshold bound K = Cd keeps the kernel paths jit-safe; fixpoints pass
+    the tighter `degree_bound` via K).  Loops that call the dense backend
+    repeatedly should densify once and pass `adj` (see `dense_adj`); loops
+    on the mesh backend should build one `SpmdExecutor` and pass it via
+    `executor=` instead of paying a halo-plan rebuild per call.
     """
     b = resolve_backend(backend, g.N)
     if b == "jnp":
         return ref.ell_hindex_ref(g.nbr, est).astype(jnp.int32)
     if b == "ell":
-        return hindex_ell(g.nbr, est, interpret=interpret)
+        return hindex_ell(g.nbr, est, interpret=interpret, K=K)
     if b == "ell_spmd":
         from ..runtime.spmd import hindex_spmd  # lazy: no import cycle
 
-        return hindex_spmd(g, est)
+        return hindex_spmd(g, est, executor=executor)
     if adj is None:
         adj = ref.ell_to_dense(g.nbr, g.N)
-    return hindex(adj, est, K=g.Cd + 1, interpret=interpret)
+    return hindex(adj, est, K=g.Cd + 1 if K is None else K,
+                  interpret=interpret)
 
 
 def _eligible_cols(eligible: jax.Array, R: int) -> jax.Array:
@@ -267,12 +401,15 @@ def frontier_blocks(
     backend: str = "auto",
     interpret: Optional[bool] = None,
     adj: Optional[jax.Array] = None,
+    executor=None,
+    K: Optional[int] = None,
 ) -> jax.Array:
     """One masked BFS hop for R stacked frontiers, via the chosen backend.
 
     f, visited: (N, R) bool; eligible: (N,) shared or (N, R) per-column.
     Returns the next frontier as (N, R) bool.  As with `hindex_blocks`,
-    pass a precomputed `adj` when looping over dense-backend hops.
+    pass a precomputed `adj` when looping over dense-backend hops and a
+    long-lived `executor` when looping on the mesh backend.
     """
     R = f.shape[1]
     elig = _eligible_cols(eligible, R)
@@ -280,11 +417,12 @@ def frontier_blocks(
     if b == "jnp":
         return ref.ell_frontier_hop_ref(g.nbr, f, elig, visited)
     if b == "ell":
-        return frontier_step_ell(g.nbr, f, elig, visited, interpret=interpret) > 0
+        return frontier_step_ell(
+            g.nbr, f, elig, visited, interpret=interpret, K=K) > 0
     if b == "ell_spmd":
         from ..runtime.spmd import frontier_spmd  # lazy: no import cycle
 
-        return frontier_spmd(g, f, elig, visited)
+        return frontier_spmd(g, f, elig, visited, executor=executor)
     # dense kernel takes a shared (N,) eligibility; fold the per-column mask
     # into `visited` (a node ineligible for column r can never enter it).
     if adj is None:
@@ -295,7 +433,7 @@ def frontier_blocks(
 
 
 @functools.partial(jax.jit, static_argnames=("max_steps",))
-def _coreness_blocks_jnp(g, max_steps: int = 10_000) -> jax.Array:
+def _coreness_blocks_jnp(g, max_steps: int = 10_000):
     est0 = jnp.where(g.node_mask, g.deg, 0).astype(jnp.int32)
 
     def cond(c):
@@ -308,8 +446,9 @@ def _coreness_blocks_jnp(g, max_steps: int = 10_000) -> jax.Array:
         new = jnp.where(g.node_mask, jnp.minimum(est, h), est)
         return new, jnp.any(new != est), it + 1
 
-    est, _, _ = jax.lax.while_loop(cond, body, (est0, jnp.bool_(True), 0))
-    return est
+    est, _, steps = jax.lax.while_loop(
+        cond, body, (est0, jnp.bool_(True), jnp.int32(0)))
+    return est, steps
 
 
 def coreness_blocks(
@@ -317,24 +456,34 @@ def coreness_blocks(
     backend: str = "auto",
     max_steps: int = 10_000,
     interpret: Optional[bool] = None,
-) -> jax.Array:
-    """Full min-H coreness of every node (0 on padding rows), any backend."""
+    executor=None,
+    with_steps: bool = False,
+    variant: str = "sort",
+) -> Union[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Full min-H coreness of every node (0 on padding rows), any backend.
+
+    Every backend runs the whole fixpoint device-resident — one jitted
+    `lax.while_loop` (with the Pallas kernel in the body on dense/ell, or
+    the shard_map'd halo-exchange loop on ell_spmd) — so there are ZERO
+    per-superstep host transfers; the only sync is the once-per-call
+    `degree_bound` read on the kernel paths.  `with_steps=True` returns
+    (coreness, supersteps) with the count as a device scalar.
+    """
     b = resolve_backend(backend, g.N)
     if b == "jnp":
-        return _coreness_blocks_jnp(g, max_steps)
+        est, steps = _coreness_blocks_jnp(g, max_steps)
+        return (est, steps) if with_steps else est
     if b == "ell_spmd":
-        from ..runtime.spmd import coreness_spmd  # lazy: no import cycle
+        from ..runtime.spmd import SpmdExecutor  # lazy: no import cycle
 
-        return coreness_spmd(g, max_steps=max_steps)
-    est = jnp.where(g.node_mask, g.deg, 0).astype(jnp.int32)
-    adj = ref.ell_to_dense(g.nbr, g.N) if b == "dense" else None
-    for _ in range(max_steps):
-        if b == "dense":
-            h = hindex(adj, est, K=g.Cd + 1, interpret=interpret)
-        else:
-            h = hindex_ell(g.nbr, est, interpret=interpret)
-        new = jnp.where(g.node_mask, jnp.minimum(est, h), est)
-        if bool(jax.device_get(jnp.all(new == est))):
-            break
-        est = new
-    return est
+        ex = executor if executor is not None else SpmdExecutor(g)
+        est, steps = ex.coreness(max_steps=max_steps)
+        return (est, steps) if with_steps else est
+    if interpret is None:
+        interpret = not _on_tpu()
+    K = degree_bound(g)  # the single host sync of the whole fixpoint
+    est0 = jnp.where(g.node_mask, g.deg, 0).astype(jnp.int32)
+    mat = ref.ell_to_dense(g.nbr, g.N) if b == "dense" else g.nbr
+    est, steps = _run_fused_coreness(
+        mat, est0, g.node_mask, g.N, b, K, 256, interpret, variant, max_steps)
+    return (est, steps) if with_steps else est

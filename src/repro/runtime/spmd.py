@@ -307,6 +307,15 @@ class SpmdProgram:
     #: value PAD / dump slots read as (must match the field dtype)
     halo_fill = -1
 
+    #: True iff worker_local AND master_compute are jit-pure with
+    #: structure-stable state (mstate/directive pytrees keep their shape
+    #: across supersteps) — `SpmdEngine.run_spmd` then fuses the whole
+    #: superstep loop into one on-device `lax.while_loop` (W2M as a real
+    #: all-gather, the halt decision never leaving the mesh).  Programs
+    #: with host-side master logic keep the default (one halt transfer per
+    #: superstep).
+    fusable = False
+
     def halo_field(self, wstate) -> jax.Array:
         """The (S, ...) per-node array whose values neighbors read (W2W)."""
         return wstate
@@ -329,6 +338,7 @@ class SpmdCorenessProgram(SpmdProgram):
     the replicated M2W directive."""
 
     halo_fill = -1
+    fusable = True  # pure worker/master ops: the loop runs on-device
 
     # stateless: any two instances are interchangeable, so they share the
     # engine's compiled-step cache entry
@@ -392,6 +402,71 @@ class SpmdEngine:
         self._step_cache[key] = fn
         return fn
 
+    def _fused_fn(self, program: SpmdProgram):
+        """Whole superstep loop as ONE shard_map'd `lax.while_loop`.
+
+        The W2M summary becomes a real all-gather, masterCompute runs
+        replicated on every worker, and the halt flag never reaches the
+        host — the superstep count comes back as a device scalar.
+        `max_supersteps` is an operand (like `_compiled_coreness`), so
+        varying the cap never recompiles.
+        """
+        ex = self.ex
+        H = ex.plan.H
+        B, Cn = ex.wm.B, ex.wm.Cn
+        Cd = ex.plan.nbr_local.shape[1]
+        key = ("fused", ex.wm.mesh, H, B, Cn, Cd, program)
+        cached = self._step_cache.get(key)
+        if cached is not None:
+            return cached
+
+        def local(wstate, deg, mask, mstate, directive, max_supersteps,
+                  nbrl, send, recv):
+            ctx = LocalCtx(deg=deg, node_mask=mask, B=B, Cn=Cn, Cd=Cd)
+
+            def cond(c):
+                _, _, _, halt, it = c
+                return (~halt) & (it < max_supersteps)
+
+            def body(c):
+                wstate, mstate, d, _, it = c
+                field = program.halo_field(wstate)
+                nb_vals = _exchange_gather(
+                    field, nbrl, send, recv, H,
+                    jnp.asarray(program.halo_fill, field.dtype))
+                wstate2, summary = program.worker_local(
+                    ctx, wstate, nb_vals, d)
+                full = jax.lax.all_gather(summary, AXIS, axis=0, tiled=True)
+                mstate2, d2, halt = program.master_compute(mstate, full)
+                if d2 is None:  # trace-time: keep carrying the placeholder
+                    d2 = d
+                return wstate2, mstate2, d2, halt, it + 1
+
+            wstate, mstate, _, _, n = jax.lax.while_loop(
+                cond, body,
+                (wstate, mstate, directive, jnp.bool_(False), jnp.int32(0)))
+            return wstate, mstate, n
+
+        fn = _smap(local, ex.wm.mesh, 3, 3, (P_(AXIS), P_(), P_()))
+        self._step_cache[key] = fn
+        return fn
+
+    def _summary_shape(self, program: SpmdProgram, wstate, directive):
+        """Abstract-eval the gathered W2M summary (coordinator granularity:
+        leading axis P) for post-loop trace reconstruction."""
+        Cd = self.ex.plan.nbr_local.shape[1]
+        field_s = jax.eval_shape(program.halo_field, wstate)
+        nb_s = jax.ShapeDtypeStruct(
+            (self.g.N, Cd) + tuple(field_s.shape[1:]), field_s.dtype)
+        # ctx rides in by closure: its B/Cn/Cd ints must stay concrete
+        # (eval_shape would abstract NamedTuple leaves into tracers)
+        ctx = LocalCtx(deg=self.ex.deg, node_mask=self.ex.node_mask,
+                       B=self.g.P, Cn=self.ex.wm.Cn, Cd=Cd)
+        _, summary_s = jax.eval_shape(
+            lambda w, nb, d: program.worker_local(ctx, w, nb, d),
+            wstate, nb_s, directive)
+        return summary_s
+
     def run_spmd(
         self,
         program: SpmdProgram,
@@ -399,19 +474,43 @@ class SpmdEngine:
         mstate: Any,
         directive: Any = None,
         max_supersteps: int = 10_000,
+        fuse: Optional[bool] = None,
     ) -> Tuple[Any, Any]:
         """Execute the program; worker steps run sharded on the mesh.
 
-        The trace's W2W numbers are the executed halo plan's slot counts
+        `fuse=None` follows `program.fusable`: fusable programs run the
+        whole loop device-resident (zero per-superstep host transfers —
+        the halt flag is a mesh-side psum/all-gather decision and the
+        superstep count comes back once, with the final state); other
+        programs fall back to the host-driven loop below.  Either way the
+        trace's W2W numbers are the executed halo plan's slot counts
         (block granularity — identical accounting to the paper's one
         worker per block, independent of the device fold).
         """
         from ..core.engine import BladygEngine, Mode, SuperstepTrace
 
-        step = self._step_fn(program)
         w2w = self.ex.plan.slot_counts()
         modes = getattr(program, "modes",
                         Mode.LOCAL | Mode.M2W | Mode.W2M | Mode.W2W)
+        if fuse is None:
+            fuse = getattr(program, "fusable", False)
+        if fuse:
+            d0 = directive if directive is not None else jnp.int32(0)
+            fn = self._fused_fn(program)
+            wstate, mstate, n = fn(
+                wstate, self.ex.deg, self.ex.node_mask, mstate, d0,
+                jnp.int32(max_supersteps), *self.ex._tables)
+            # per-superstep message sizes are static: reconstruct the trace
+            # in one bulk extend, metering the *initial* directive (as
+            # BladygEngine.run_jit does) and the abstract summary shape.
+            stats = BladygEngine._meter(
+                self._summary_shape(program, wstate, d0), directive, w2w)
+            (n_steps,) = jax.device_get((n,))
+            self.traces.extend(
+                SuperstepTrace(s, modes, stats) for s in range(int(n_steps)))
+            return wstate, mstate
+
+        step = self._step_fn(program)
         it = 0
         while it < max_supersteps:
             # None directives still need an array through shard_map; the

@@ -26,6 +26,13 @@ into the block-local batch if its candidate set is disjoint from every
 `core.kcore_dynamic.maintain_batch` — so the final coreness is
 bit-identical to processing the stream one update at a time.
 
+The routing verdict itself is computed ON DEVICE (`_route_window`, one
+jitted function per window): the candidate-overlap matrix, the spill
+test, and the accept/escalate scan all run where the candidate matrix
+already lives, and only compact (R,)-masks plus per-block counts cross
+to the host — queue management (window slicing, escalation dispatch,
+migration bookkeeping) is all that remains host-side.
+
 Two runtime-maintenance loops close over the stream:
 
   * **Executor reuse** — under `backend="ell_spmd"` ONE `SpmdExecutor`
@@ -47,9 +54,11 @@ Two runtime-maintenance loops close over the stream:
 """
 from __future__ import annotations
 
+from functools import partial
 from itertools import islice
 from typing import Dict, Iterable, Iterator, List, NamedTuple, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -115,6 +124,61 @@ def route_updates(
     return per_block, cross
 
 
+class RouteMasks(NamedTuple):
+    """Compact device-side routing verdict for one update window.
+
+    accept/cross/spill/conflict partition the valid columns: each column
+    lands in exactly ONE mask, by escalation precedence (cross-block wins
+    over spill wins over conflict) — `spill`/`conflict` are escalation
+    *reasons*, not the raw conditions (a cross-block column whose
+    candidates also spill appears only in `cross`).
+    """
+
+    accept: jax.Array        # (R,) bool — block-local, no spill, no conflict
+    cross: jax.Array         # (R,) bool — endpoints in two blocks
+    spill: jax.Array         # (R,) bool — intra-block, candidates left the
+                             #             owner block
+    conflict: jax.Array      # (R,) bool — intra-block, no spill, overlapped
+                             #             an earlier window column
+    cand_ins: jax.Array      # (N,) bool — union candidates of accepted inserts
+    cand_del: jax.Array      # (N,) bool — union candidates of accepted deletes
+    per_block: jax.Array     # (P,) int32 — accepted updates per owner block
+
+
+@partial(jax.jit, static_argnames=("Cn",))
+def _route_window(cand, us, vs, ops_, valid, Cn: int) -> RouteMasks:
+    """Device-side window routing: ONE fused kernel instead of the old host
+    numpy pass (the O(N*R^2) `cand.T @ cand` overlap matmul, the spill
+    matrix, and the accept/escalate scan).
+
+    Escalation reasons replicate the host rule exactly: cross-block wins
+    over spill wins over conflict, and a column conflicts iff its candidate
+    set overlaps ANY earlier valid column (accepted or escalated) — the
+    same commutation argument as `kcore_dynamic._independent_prefix`.
+    Only the (R,)/(P,) compact outputs ever reach the host; the (N, R)
+    candidate matrix stays on device.
+    """
+    N, R = cand.shape
+    owner = us // Cn                                   # (R,) owning blocks
+    intra = owner == (vs // Cn)
+    block_of = jnp.arange(N, dtype=us.dtype) // Cn
+    candv = cand & valid[None, :]
+    spill = jnp.any(candv & (block_of[:, None] != owner[None, :]), axis=0)
+    overlap = jnp.matmul(candv.T.astype(jnp.int32), candv.astype(jnp.int32))
+    earlier = jnp.tril(jnp.ones((R, R), bool), k=-1)   # strictly lower
+    conflict = jnp.any((overlap > 0) & earlier, axis=1)
+    accept = valid & intra & ~spill & ~conflict
+    cross = valid & ~intra
+    esc_spill = valid & intra & spill
+    esc_conflict = valid & intra & ~spill & conflict
+    cand_ins = jnp.any(candv & (accept & (ops_ > 0))[None, :], axis=1)
+    cand_del = jnp.any(candv & (accept & (ops_ < 0))[None, :], axis=1)
+    per_block = jnp.zeros(N // Cn, jnp.int32).at[owner].add(
+        accept.astype(jnp.int32))
+    return RouteMasks(accept, cross, esc_spill, esc_conflict,
+                      cand_ins, cand_del, per_block)
+
+
 def _iter_windows(updates, R: int) -> Iterator[list]:
     it = iter(updates)
     while True:
@@ -176,9 +240,6 @@ def run_stream(
     esc_cross = esc_spill = esc_conflict = 0
     per_block = np.zeros(g.P, np.int64)
     migrations = migrated = 0
-    # invariant across windows AND migrations: block_of[i] = i // Cn is
-    # pure position arithmetic, untouched by the node-axis permutation
-    block_of = _owner_blocks(g, np.arange(g.N))
     remap: Optional[np.ndarray] = None  # pre-stream ids -> current ids
 
     for window in _iter_windows(updates, R):
@@ -205,60 +266,42 @@ def run_stream(
             cand, steps = kd._batch_candidates(
                 g, core, jnp.asarray(us), jnp.asarray(vs),
                 jnp.asarray(valid), backend=backend)
-        tot["bfs"] += int(steps)
-        cand_np = np.asarray(cand)
 
-        # routing decisions, host-side (same rule as `route_updates`);
-        # spill = candidate mass outside the owner block, one matrix
-        # expression over the (N, n) candidate columns
-        owner_u = _owner_blocks(g, us[:n])
-        intra = owner_u == _owner_blocks(g, vs[:n])
-        spill = (cand_np[:, :n]
-                 & (block_of[:, None] != owner_u[None, :])).any(axis=0)
-        overlap = cand_np.T.astype(np.int64) @ cand_np.astype(np.int64)
+        # routing on device: the (N, R) candidate matrix never reaches the
+        # host — ONE transfer per window pulls the compact (R,)/(P,)
+        # verdict (bundled with the superstep counter).
+        route = _route_window(
+            jnp.asarray(cand), jnp.asarray(us), jnp.asarray(vs),
+            jnp.asarray(ops_), jnp.asarray(valid), Cn=g.Cn)
+        steps_h, accept, cross, spl, conf, nblk = jax.device_get(
+            (steps, route.accept, route.cross, route.spill, route.conflict,
+             route.per_block))
+        tot["bfs"] += int(steps_h)
+        esc_cross += int(cross.sum())
+        esc_spill += int(spl.sum())
+        esc_conflict += int(conf.sum())
 
-        accepted: List[int] = []
-        escalated: List[int] = []
-        for r in range(n):
-            conflicts = bool(overlap[r, :r].any())
-            if intra[r] and not spill[r] and not conflicts:
-                accepted.append(r)
-                continue
-            escalated.append(r)
-            if not intra[r]:
-                esc_cross += 1
-            elif spill[r]:
-                esc_spill += 1
-            else:
-                esc_conflict += 1
-
-        if accepted:
-            acc = np.asarray(accepted)
-            ins_cols = acc[ops_[acc] > 0]
-            del_cols = acc[ops_[acc] < 0]
-            cand_ins = jnp.asarray(cand_np[:, ins_cols].any(axis=1))
-            cand_del = jnp.asarray(cand_np[:, del_cols].any(axis=1))
-            us_a = np.zeros(R, np.int32)
-            vs_a = np.zeros(R, np.int32)
-            ops_a = np.zeros(R, np.int32)
-            us_a[:len(acc)] = us[acc]
-            vs_a[:len(acc)] = vs[acc]
-            ops_a[:len(acc)] = ops_[acc]
+        if accept.any():
+            # accepted updates stay at their window position; op=0 turns the
+            # non-accepted columns into no-ops for the fixed-width apply
+            us_a = np.where(accept, us, 0).astype(np.int32)
+            vs_a = np.where(accept, vs, 0).astype(np.int32)
+            ops_a = np.where(accept, ops_, 0).astype(np.int32)
             if spmd:
                 g, core, rec = kd._apply_and_recompute_spmd(
-                    g, core, us_a, vs_a, ops_a, cand_ins, cand_del, W=W,
-                    ex=ex)
+                    g, core, us_a, vs_a, ops_a, route.cand_ins,
+                    route.cand_del, W=W, ex=ex)
             else:
                 g, core, rec = kd._apply_and_recompute(
                     g, core,
                     jnp.asarray(us_a), jnp.asarray(vs_a), jnp.asarray(ops_a),
-                    cand_ins, cand_del, backend=backend)
+                    route.cand_ins, route.cand_del, backend=backend)
             tot["rec"] += int(rec)
-            n_local += len(accepted)
-            np.add.at(per_block, owner_u[acc], 1)
+            n_local += int(accept.sum())
+            per_block += nblk.astype(np.int64)
 
         # coordinator path, original stream order within the window
-        for r in escalated:
+        for r in np.flatnonzero(cross | spl | conf):
             g, core = kd._maintain_one(g, core, window[r], tot, backend,
                                        W=W, ex=ex)
 

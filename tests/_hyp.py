@@ -27,6 +27,13 @@ except ModuleNotFoundError:
             )
 
         @staticmethod
+        def sampled_from(options):
+            options = list(options)
+            return _Strategy(
+                lambda rng: options[int(rng.integers(0, len(options)))]
+            )
+
+        @staticmethod
         def lists(elements, min_size=0, max_size=10):
             def sample(rng):
                 size = int(rng.integers(min_size, max_size + 1))
