@@ -1,0 +1,98 @@
+"""BlockProgram workloads: superstep counts + wall-clock per backend.
+
+The framework claim of ISSUE 5 measured: connected components, PageRank,
+and triangle counting all run through ONE fused runner
+(`ops.run_block_program`) on every registry backend.  Rows:
+
+  workloads/<wl>/<graph>/<backend>  — us/call for a full fused run, with
+      derived = "steps=<supersteps> n=<padded nodes>"; the superstep
+      count rides back as a device scalar (the fused loop performs zero
+      per-superstep host transfers, so us/call IS the end-to-end fixpoint
+      latency, not a loop of kernel launches).
+
+Two bench graphs bracket the superstep regimes: a Barabási–Albert graph
+(small diameter — label propagation converges in a few supersteps) and a
+grid (huge diameter — CC walks it, the stress case for fused-loop
+overhead).  PageRank runs the tolerance-halt variant; triangle counting
+is always exactly one superstep, so its row isolates the per-superstep
+combine cost.  The jnp rows are the honest CPU numbers; on the CI
+container the Pallas backends run in interpret mode (feasibility, not
+speed — same caveat as §Backends).
+
+Parity is asserted across backends on every run — this bench doubles as
+a smoke gate, like bench_runtime.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+import jax
+
+from repro.core import build_blocks, connected_components, pagerank, \
+    triangle_counts, triangle_total
+from repro.core.partition import node_random_partition
+from repro.graphgen import barabasi_albert, grid_like
+
+from .common import row, timeit_us
+
+
+def _graphs(smoke: bool, seed: int):
+    nb = 300 if smoke else 3000
+    ng = 256 if smoke else 2500
+    out = []
+    for name, edges in (("ba", barabasi_albert(nb, 4, seed=seed)),
+                        ("grid", grid_like(ng, seed=seed))):
+        n = int(edges.max()) + 1
+        P = 4
+        g = build_blocks(edges, n, node_random_partition(n, P, seed=seed),
+                         P=P, deg_slack=24)
+        out.append((name, g))
+    return out
+
+
+def run(seed: int = 0, smoke: bool = False) -> List[Tuple[str, float, str]]:
+    rows = []
+    reps = 2 if smoke else 5
+    backends = ("jnp", "ell") if smoke else ("jnp", "dense", "ell")
+
+    for gname, g in _graphs(smoke, seed):
+        want_cc = want_tri = want_pr = None
+        for b in backends:
+            # connected components (min-label fixpoint)
+            labels, steps = connected_components(g, backend=b,
+                                                 with_steps=True)
+            labels = np.asarray(labels)
+            if want_cc is None:
+                want_cc = labels
+            assert (labels == want_cc).all(), f"cc parity {gname}/{b}"
+            us = timeit_us(lambda: jax.block_until_ready(
+                connected_components(g, backend=b)), n=reps)
+            rows.append(row(f"workloads/cc/{gname}/{b}", us,
+                            f"steps={int(steps)} n={g.N}"))
+
+            # PageRank (tolerance halt)
+            pr, steps = pagerank(g, tol=1e-6, max_steps=500, backend=b,
+                                 with_steps=True)
+            pr = np.asarray(pr)
+            if want_pr is None:
+                want_pr = pr
+            assert np.allclose(pr, want_pr, atol=1e-5), \
+                f"pagerank parity {gname}/{b}"
+            us = timeit_us(lambda: jax.block_until_ready(
+                pagerank(g, tol=1e-6, max_steps=500, backend=b)), n=reps)
+            rows.append(row(f"workloads/pagerank/{gname}/{b}", us,
+                            f"steps={int(steps)} n={g.N}"))
+
+            # triangle counting (single combine superstep)
+            tri, steps = triangle_counts(g, backend=b, with_steps=True)
+            tri = np.asarray(tri)
+            if want_tri is None:
+                want_tri = tri
+            assert (tri == want_tri).all(), f"triangles parity {gname}/{b}"
+            us = timeit_us(lambda: jax.block_until_ready(
+                triangle_counts(g, backend=b)), n=reps)
+            rows.append(row(
+                f"workloads/triangles/{gname}/{b}", us,
+                f"steps={int(steps)} total={int(triangle_total(tri))}"))
+    return rows

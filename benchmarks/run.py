@@ -15,13 +15,15 @@ Prints ``name,us_per_call,derived`` CSV rows.
              W2W accounting (EXPERIMENTS.md §Runtime)
   stream   — incremental vs full halo-plan maintenance, executor-reuse
              stream pass, §4.2 live rebalancing (EXPERIMENTS.md §Stream)
+  workloads — BlockProgram workload sweep: CC / PageRank / triangles per
+             backend, superstep counts + parity (EXPERIMENTS.md §Workloads)
   roofline — three-term roofline per (arch × shape) from the dry-run JSONs
 
-The `kernels` and `stream` rows are additionally written to
-``BENCH_kernels.json`` / ``BENCH_stream.json`` under --out-dir: the
-machine-readable perf trajectory (committed baselines at the repo root,
-fresh points uploaded as CI artifacts and soft-checked by
-``benchmarks.check_regression``).
+The `kernels`, `stream`, and `workloads` rows are additionally written to
+``BENCH_kernels.json`` / ``BENCH_stream.json`` / ``BENCH_workloads.json``
+under --out-dir: the machine-readable perf trajectory (committed
+baselines at the repo root, fresh points uploaded as CI artifacts and
+soft-checked by ``benchmarks.check_regression``).
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--full] [--updates N]
        [--backends jnp,dense,ell] [--batch-sizes 1,4,8] [--smoke]
@@ -41,7 +43,7 @@ import sys
 import traceback
 
 #: benches whose rows feed the machine-readable perf trajectory
-JSON_BENCHES = ("kernels", "stream")
+JSON_BENCHES = ("kernels", "stream", "workloads")
 
 
 def write_bench_json(out_dir: str, bench: str, rows) -> pathlib.Path:
@@ -85,7 +87,8 @@ def main() -> None:
                     help="tiny CI pass: backend parity + a few updates")
     ap.add_argument("--only", default=None,
                     help="comma list: table2,fig7,partitioning,static,"
-                         "backends,kernels,runtime,stream,roofline")
+                         "backends,kernels,runtime,stream,workloads,"
+                         "roofline")
     ap.add_argument("--out-dir", default=".",
                     help="directory for the BENCH_*.json trajectory files")
     args = ap.parse_args()
@@ -93,7 +96,7 @@ def main() -> None:
     from . import (bench_backends, bench_kcore_maintenance, bench_kernels,
                    bench_vs_naive_kcore, bench_partitioning,
                    bench_runtime, bench_static_kcore, bench_stream,
-                   roofline)
+                   bench_workloads, roofline)
 
     backends = tuple(b for b in args.backends.split(",") if b)
     batch_sizes = tuple(int(r) for r in args.batch_sizes.split(",") if r)
@@ -126,6 +129,8 @@ def main() -> None:
         "runtime": lambda: bench_runtime.run(
             seed=args.seed, smoke=args.smoke),
         "stream": lambda: bench_stream.run(
+            seed=args.seed, smoke=args.smoke),
+        "workloads": lambda: bench_workloads.run(
             seed=args.seed, smoke=args.smoke),
         "roofline": lambda: roofline.run(full=args.full, seed=args.seed),
     }

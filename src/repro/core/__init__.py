@@ -3,7 +3,14 @@ from .graph import (
     GraphBlocks, build_blocks, build_ell_random, insert_edge, delete_edge,
     migrate_vertices, to_networkx_edges, halo_slot_counts, halo_pair_counts,
 )
-from .engine import BladygEngine, BladygProgram, Mode, MessageStats
+from .engine import (
+    BladygEngine, BladygProgram, BlockCtx, BlockProgram, Mode, MessageStats,
+)
+from .algorithms import (
+    ConnectedComponentsProgram, CorenessBlockProgram, PageRankProgram,
+    TriangleCountProgram, connected_components, merge_labels, pagerank,
+    triangle_counts, triangle_total,
+)
 from .kcore import (
     coreness, coreness_with_stats, coreness_via_engine, coreness_via_spmd,
     hindex_rows, CorenessProgram,
@@ -26,7 +33,10 @@ __all__ = [
     "GraphBlocks", "build_blocks", "build_ell_random", "insert_edge", "delete_edge",
     "migrate_vertices", "to_networkx_edges", "halo_slot_counts",
     "halo_pair_counts",
-    "BladygEngine", "BladygProgram",
+    "BladygEngine", "BladygProgram", "BlockCtx", "BlockProgram",
+    "ConnectedComponentsProgram", "CorenessBlockProgram", "PageRankProgram",
+    "TriangleCountProgram", "connected_components", "merge_labels",
+    "pagerank", "triangle_counts", "triangle_total",
     "Mode", "MessageStats", "coreness", "coreness_with_stats",
     "coreness_via_engine", "coreness_via_spmd", "hindex_rows",
     "CorenessProgram",

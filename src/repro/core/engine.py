@@ -18,6 +18,23 @@ a sequence of worker/master operations + output.  `BladygEngine.run`
 executes that sequence; `run_jit` fuses it into a single `lax.while_loop`
 when both operations are jittable.
 
+Two program notions live here:
+
+  `BladygProgram`  — the free-form worker/master contract (any pytree
+                     state, any collective inside workerCompute).  Coreness
+                     uses it for the paper's message-accounting runs.
+  `BlockProgram`   — the *structured* superstep contract every workload in
+                     `core.algorithms` is written against: init state →
+                     per-node halo field → named neighbor combine →
+                     block-local update → halt reduction.  Because the
+                     neighbor access is declared (not hidden inside
+                     workerCompute), one runner per backend executes any
+                     BlockProgram: `kernels.ops.run_block_program` fuses
+                     the whole fixpoint into a single `lax.while_loop` on
+                     the jnp/dense/ell backends and routes `ell_spmd`
+                     through the worker mesh with a real halo exchange
+                     (`runtime.spmd.SpmdBlockProgram`).
+
 The engine also meters messages per mode — this is how the benchmarks
 reproduce the paper's inter- vs intra-partition accounting.  The W2W
 numbers here are *declared* (shape-reconstructed) because the halo gather
@@ -36,6 +53,7 @@ from typing import Any, Callable, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..kernels.ops import BlockCtx  # noqa: F401  (re-export: contract type)
 from .graph import GraphBlocks
 
 
@@ -98,6 +116,93 @@ class BladygProgram:
     ) -> Tuple[Any, Any, jax.Array]:
         """(master state, summaries) -> (master state', directive, halt)."""
         raise NotImplementedError
+
+
+class BlockProgram:
+    """The structured BLADYG superstep contract (tentpole abstraction).
+
+    A BlockProgram factors one superstep into four declared phases, which
+    is exactly what lets a single runner execute it on every backend of
+    the kernel registry:
+
+      1. **init state**     — `init(g)`: whole-graph worker state (a
+         pytree whose array leaves all carry the leading node axis, so
+         the state shards over the `workers` mesh axis unchanged).
+      2. **halo exchange**  — `halo_field(state)`: the (n, ...) per-node
+         values neighbors read this superstep, plus `halo_fill`, the
+         value PAD neighbor slots (and, on the mesh, halo dump slots)
+         read as.  This *declares* the W2W payload instead of hiding it
+         inside workerCompute.
+      3. **kernel step**    — `combine` names the neighbor reduction
+         (see `kernels.ops.COMBINES`: "min" | "sum" | "hindex" |
+         "count_common"); each backend supplies its own execution of it
+         (pure-jnp gather, dense-adjacency form, ELL Pallas kernel, or
+         halo-exchange + local reduce on the mesh).  `update(ctx, state,
+         red)` is then pure block-local math on the reduced (n, ...)
+         values.
+      4. **halt reduction** — `changed(old, new)`: the local
+         convergence verdict; the runner reduces it globally (a `psum`
+         on the mesh) and stops when no worker changed or `max_steps`
+         supersteps ran.  Fixed-iteration programs return True
+         unconditionally and bound the loop with `max_steps`.
+
+    Programs must be *hashable statics*: instances ride into `jax.jit` as
+    static arguments and into the per-(mesh, H) compiled-step caches, so
+    equality/hash derive from `(type, _key())` — include every
+    behavior-changing constructor parameter in `_key()`.
+
+    See `core.algorithms` for the shipped workloads (connected
+    components, PageRank, triangle counting, coreness) and
+    `kernels.ops.run_block_program` for the runner.
+    """
+
+    #: neighbor combine name, resolved per backend by `kernels.ops`
+    combine: str = "min"
+    #: value PAD slots read as; must be absorbing for `combine` and match
+    #: the halo field dtype (e.g. int32 max for "min", 0.0 for "sum")
+    halo_fill: Any = -1
+    #: superstep bound (the whole loop is device-resident; the bound is a
+    #: loop-carried operand, never a host decision)
+    max_steps: int = 10_000
+
+    def _key(self) -> Tuple:
+        """Static identity: every parameter that changes traced behavior."""
+        return ()
+
+    def __hash__(self):
+        return hash((type(self), self._key()))
+
+    def __eq__(self, other):
+        return type(other) is type(self) and other._key() == self._key()
+
+    def init(self, g: GraphBlocks) -> Any:
+        """Whole-graph initial worker state (host boundary, pre-shard).
+
+        Every array leaf must have the padded node count N as its leading
+        axis so the ell_spmd backend can shard the state over workers.
+        """
+        raise NotImplementedError
+
+    def halo_field(self, state: Any) -> jax.Array:
+        """The (n, ...) per-node array whose values neighbors read (W2W)."""
+        raise NotImplementedError
+
+    def update(self, ctx: BlockCtx, state: Any, red: jax.Array) -> Any:
+        """One block-local step: (ctx, state, reduced neighbor values) ->
+        state'.  Must be jit-pure and elementwise over the node axis."""
+        raise NotImplementedError
+
+    def changed(self, old: Any, new: Any) -> jax.Array:
+        """Local convergence verdict (device bool scalar); the runner
+        halts when no worker reports a change.  Default: any array leaf
+        differs bit-wise."""
+        leaves_o = jax.tree_util.tree_leaves(old)
+        leaves_n = jax.tree_util.tree_leaves(new)
+        flags = [jnp.any(a != b) for a, b in zip(leaves_o, leaves_n)]
+        out = jnp.bool_(False)
+        for f in flags:
+            out = out | f
+        return out
 
 
 class BladygEngine:

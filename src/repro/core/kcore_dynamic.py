@@ -451,6 +451,11 @@ def maintain_batch(
 ) -> Tuple[GraphBlocks, jax.Array, BatchMaintenanceStats]:
     """Maintain coreness over a stream of updates, R at a time.
 
+    g: GraphBlocks (nbr (N, Cd), N = P*Cn); core: (N,) int32 coreness of
+    `g`; updates: sequence of (u, v, op) with op = +1 insert / -1 delete
+    and u, v global padded ids.  Returns (g', (N,) int32 core',
+    BatchMaintenanceStats).
+
     Chunks of up to R (u, v, op) updates share one batched k-reachability
     search on the frontier kernels' R axis.  Updates whose candidate sets
     are pairwise disjoint are applied together with a single joint clamped

@@ -13,8 +13,12 @@ from .kcore_hindex import hindex_counts
 from .frontier import frontier_step
 from .ell_hindex import hindex_ell
 from .ell_frontier import frontier_step_ell
+from .ell_cc import neighbor_min_ell
+from .ell_pagerank import neighbor_sum_ell
+from .ell_triangles import neighbor_common_ell
 
 __all__ = [
     "ops", "ref", "hindex_counts", "frontier_step",
     "hindex_ell", "frontier_step_ell",
+    "neighbor_min_ell", "neighbor_sum_ell", "neighbor_common_ell",
 ]

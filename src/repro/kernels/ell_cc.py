@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: ELL block-sparse neighbor-min sweep (label propagation).
+
+The connected-components hot loop is the "min" neighbor combine of the
+`BlockProgram` contract: each superstep every node pulls its neighbors'
+current component labels and keeps the minimum.  Structurally this is the
+h-index kernel (`ell_hindex.py`) with the row reduction swapped — gather
+through the ELL neighbor lists, reduce each row — so it shares the same
+tiling:
+
+    nbr[N, Cd]   int32   padded neighbor ids (-1 = empty slot)
+    field[N]     int32   current labels (component = min member id)
+
+Per row tile of T nodes (grid axis i):
+  1. gather   vals[t, j] = field[nbr[t, j]]     (PAD slots -> int32 max,
+              the min-combine's absorbing fill)
+  2. reduce   out[t] = min_j vals[t, j]
+
+Rows with no valid slots reduce to int32 max — `BlockProgram.update`
+takes `min(own, red)`, so the fill is harmless by construction.  A
+max-degree column bound K < Cd (left-filled rows, `ops.degree_bound`)
+restricts the sweep like the sibling kernels.  O(N*Cd) memory; the full
+label vector rides in VMEM as a (1, N) int32 row, like the estimate
+vector of `ell_hindex.py`.  Validated in interpret mode against
+`ref.ell_min_ref`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from ._compat import CompilerParams as _CompilerParams
+
+#: absorbing fill for the min combine (what PAD slots read as)
+MIN_FILL = jnp.iinfo(jnp.int32).max
+
+
+def _ell_min_kernel(nbr_ref, field_ref, out_ref, *, T: int):
+    nbr = nbr_ref[...]  # (T, C) int32, -1 padded
+    vals = jnp.where(
+        nbr >= 0,
+        jnp.take(field_ref[0], jnp.clip(nbr, 0), axis=0),
+        MIN_FILL,
+    )
+    out_ref[...] = jnp.min(vals, axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("K", "T", "interpret"))
+def neighbor_min_ell(
+    nbr: jax.Array,
+    field: jax.Array,
+    K: int,
+    T: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    """Row-wise min of neighbor field values over the ELL adjacency.
+
+    nbr: (N, Cd) int32 (-1 padded); field: (N,) int32; K: column bound —
+    exact iff every row's valid slots lie in the first K columns (always
+    true for K >= Cd; K < Cd needs left-filled rows, the `GraphBlocks`
+    invariant).  Returns (N,) int32 with int32-max on neighborless rows.
+    N % T == 0 and Cd, K multiples of 128 (pad via the ops.py wrapper).
+    """
+    N, Cd = nbr.shape
+    assert field.shape == (N,), (field.shape, N)
+    assert N % T == 0, (N, T)
+    assert Cd % 128 == 0 and K % 128 == 0, (Cd, K)
+    C = min(Cd, K)
+    ni = N // T
+
+    out = pl.pallas_call(
+        functools.partial(_ell_min_kernel, T=T),
+        grid=(ni,),
+        in_specs=[
+            pl.BlockSpec((T, C), lambda i: (i, 0)),  # neighbor-list row tile
+            pl.BlockSpec((1, N), lambda i: (0, 0)),   # full label vector
+        ],
+        out_specs=pl.BlockSpec((T, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, 1), jnp.int32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",)
+        ),
+        interpret=interpret,
+    )(nbr[:, :C], field.astype(jnp.int32)[None, :])
+    return out[:, 0]

@@ -40,9 +40,22 @@ host transfers and returns its superstep count as a device scalar
 power of two — the bucketing keeps the per-(shape, K) compiled caches
 hitting while the bound tracks the graph instead of the padded Cd.
 
+Beyond the two k-core primitives, the registry carries the named
+*neighbor combines* of the `BlockProgram` contract ("min" | "sum" |
+"hindex" | "count_common", see `COMBINES`), each with a per-backend
+execution — `neighbor_combine_blocks` for one superstep,
+`run_block_program` for a whole program fixpoint (CC, PageRank,
+triangle counting, coreness: `core.algorithms`).  The program runner is
+the generalization of the coreness fixpoint below: one fused
+`lax.while_loop` on jnp/dense/ell, the on-mesh `SpmdEngine` fused loop
+on ell_spmd, zero per-superstep host transfers either way.
+
 The GraphBlocks-level entry points (`hindex_blocks`, `frontier_blocks`,
-`coreness_blocks`) duck-type on `.nbr`/`.deg`/`.node_mask`/`.N`/`.Cd` so this
-module never imports `repro.core` (no import cycle).
+`coreness_blocks`, `neighbor_combine_blocks`, `run_block_program`)
+duck-type on `.nbr`/`.deg`/`.node_mask`/`.N`/`.Cd` (plus `.n_real` for
+the program runner) so this module never imports `repro.core` (no
+import cycle; `core.engine` imports the `BlockCtx` contract type from
+here).
 
 The raw dense wrappers (`hindex`, `frontier_step`, `coreness_dense`) keep
 their historical adjacency-matrix signatures for the kernel sweep tests.
@@ -50,7 +63,7 @@ their historical adjacency-matrix signatures for the kernel sweep tests.
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple, Union
+from typing import Any, NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -61,8 +74,16 @@ from .kcore_hindex import hindex_counts as _hindex_pallas
 from .frontier import frontier_step as _frontier_pallas
 from .ell_hindex import hindex_ell as _hindex_ell_pallas
 from .ell_frontier import frontier_step_ell as _frontier_ell_pallas
+from .ell_cc import MIN_FILL, neighbor_min_ell as _min_ell_pallas
+from .ell_pagerank import neighbor_sum_ell as _sum_ell_pallas
+from .ell_triangles import neighbor_common_ell as _common_ell_pallas
 
 BACKENDS = ("jnp", "dense", "ell", "ell_spmd")
+
+#: neighbor combines of the BlockProgram contract, each with a per-backend
+#: execution (pure-jnp gather, dense-adjacency form, ELL Pallas kernel, or
+#: post-halo `ref.combine_rows` on the mesh)
+COMBINES = ("min", "sum", "hindex", "count_common")
 
 #: auto picks the dense MXU path up to this many (padded) nodes; beyond it
 #: the O(N^2) adjacency dominates memory and ELL wins (see EXPERIMENTS.md).
@@ -341,6 +362,74 @@ def frontier_step_ell(
     return nxt[:N, :R]
 
 
+def neighbor_min_ell(
+    nbr: jax.Array,
+    field: jax.Array,
+    T: int = 256,
+    interpret: Optional[bool] = None,
+    K: Optional[int] = None,
+) -> jax.Array:
+    """Row-wise min of neighbor field values via the ELL kernel.
+
+    nbr: (N, Cd) int32 (-1 padded); field: (N,) int32.  Neighborless rows
+    return int32 max (the min combine's absorbing fill).  K optionally
+    bounds the swept columns (left-filled rows, see `degree_bound`).
+    """
+    N, _ = nbr.shape
+    if interpret is None:
+        interpret = not _on_tpu()
+    nbr_p, Ck, Tp, Np = _pad_ell(nbr, K, T)
+    field_p = jnp.full((Np,), MIN_FILL, jnp.int32).at[:N].set(
+        field.astype(jnp.int32))
+    red = _min_ell_pallas(nbr_p, field_p, K=Ck, T=Tp, interpret=interpret)
+    return red[:N]
+
+
+def neighbor_sum_ell(
+    nbr: jax.Array,
+    field: jax.Array,
+    T: int = 256,
+    interpret: Optional[bool] = None,
+    K: Optional[int] = None,
+) -> jax.Array:
+    """Row-wise float32 sum of neighbor field values via the ELL kernel.
+
+    nbr: (N, Cd) int32 (-1 padded); field: (N,) float32.  Neighborless
+    rows return 0.0.  K optionally bounds the swept columns.
+    """
+    N, _ = nbr.shape
+    if interpret is None:
+        interpret = not _on_tpu()
+    nbr_p, Ck, Tp, Np = _pad_ell(nbr, K, T)
+    field_p = jnp.zeros((Np,), jnp.float32).at[:N].set(
+        field.astype(jnp.float32))
+    red = _sum_ell_pallas(nbr_p, field_p, K=Ck, T=Tp, interpret=interpret)
+    return red[:N]
+
+
+def neighbor_common_ell(
+    nbr: jax.Array,
+    rows: jax.Array,
+    T: int = 256,
+    interpret: Optional[bool] = None,
+    K: Optional[int] = None,
+) -> jax.Array:
+    """Directed common-neighbor counts via the ELL intersection kernel.
+
+    nbr, rows: (N, Cd) int32 (-1 padded) — the adjacency swept and the
+    per-node row field intersected (identical for whole-graph use).
+    Returns (N,) int32: red[u] = sum_j |rows[u] ∩ rows[nbr[u, j]]|.
+    K bounds BOTH column axes (left-filled rows required for K < Cd).
+    """
+    N, _ = nbr.shape
+    if interpret is None:
+        interpret = not _on_tpu()
+    nbr_p, Ck, Tp, Np = _pad_ell(nbr, K, T)
+    rows_p, _, _, _ = _pad_ell(rows, K, T)
+    red = _common_ell_pallas(nbr_p, rows_p, K=Ck, T=Tp, interpret=interpret)
+    return red[:N]
+
+
 # ---------------------------------------------------------------------------
 # GraphBlocks-level dispatch — the only entry points core code may use.
 # ---------------------------------------------------------------------------
@@ -356,6 +445,10 @@ def hindex_blocks(
     K: Optional[int] = None,
 ) -> jax.Array:
     """h-index of neighbor estimates for every node, via the chosen backend.
+
+    g: a GraphBlocks (N = P*Cn padded rows, nbr (N, Cd) int32 with -1
+    PAD); est: (N,) int32 current estimates.  Returns (N,) int32 —
+    h[u] = h-index of {est[v] : v ~ u}, 0 for neighborless rows.
 
     All backends are exact and identical (h <= deg <= Cd, so the static
     threshold bound K = Cd keeps the kernel paths jit-safe; fixpoints pass
@@ -462,6 +555,10 @@ def coreness_blocks(
 ) -> Union[jax.Array, Tuple[jax.Array, jax.Array]]:
     """Full min-H coreness of every node (0 on padding rows), any backend.
 
+    g: GraphBlocks; returns (N,) int32 coreness (N = P*Cn padded rows),
+    plus the superstep count as a device int32 scalar when
+    `with_steps=True`.
+
     Every backend runs the whole fixpoint device-resident — one jitted
     `lax.while_loop` (with the Pallas kernel in the body on dense/ell, or
     the shard_map'd halo-exchange loop on ell_spmd) — so there are ZERO
@@ -487,3 +584,212 @@ def coreness_blocks(
     est, steps = _run_fused_coreness(
         mat, est0, g.node_mask, g.N, b, K, 256, interpret, variant, max_steps)
     return (est, steps) if with_steps else est
+
+
+# ---------------------------------------------------------------------------
+# BlockProgram execution: the generic fused superstep runner.  The program
+# contract itself lives in `core.engine.BlockProgram` (which imports the
+# context type from here — kernels never import core); the workloads live
+# in `core.algorithms`.
+# ---------------------------------------------------------------------------
+
+
+class BlockCtx(NamedTuple):
+    """Per-node context handed to `BlockProgram.update`.
+
+    The same program code runs over the whole graph (jnp/dense/ell
+    backends: ``n = N = P*Cn`` rows) or over one worker's shard of it
+    (ell_spmd: ``n = S = N/W`` rows) — update math must therefore be
+    elementwise/broadcast over the leading node axis and may reduce only
+    through the values it is handed.
+
+    Attributes
+    ----------
+    deg:       (n,) int32 — true degree per node (0 on padding rows).
+    node_mask: (n,) bool  — True for real nodes.
+    n_real:    int        — GLOBAL real-node count (static host int; e.g.
+                            the PageRank teleport denominator).
+    """
+
+    deg: jax.Array
+    node_mask: jax.Array
+    n_real: int
+
+
+def _combine_jnp(nbr: jax.Array, field: jax.Array, combine: str) -> jax.Array:
+    """Whole-graph gather + reduce, pure jnp (the oracle execution)."""
+    if combine == "min":
+        return ref.ell_min_ref(nbr, field)
+    if combine == "sum":
+        return ref.ell_sum_ref(nbr, field)
+    if combine == "hindex":
+        return ref.ell_hindex_ref(nbr, field).astype(jnp.int32)
+    if combine == "count_common":
+        return ref.ell_common_ref(nbr, field)
+    raise ValueError(f"unknown combine {combine!r}; expected one of {COMBINES}")
+
+
+def _combine_ell(nbr: jax.Array, field: jax.Array, combine: str,
+                 interpret: Optional[bool], K: Optional[int]) -> jax.Array:
+    """Whole-graph gather + reduce via the ELL Pallas kernels."""
+    if combine == "min":
+        return neighbor_min_ell(nbr, field, interpret=interpret, K=K)
+    if combine == "sum":
+        return neighbor_sum_ell(nbr, field, interpret=interpret, K=K)
+    if combine == "hindex":
+        return hindex_ell(nbr, field, interpret=interpret, K=K)
+    if combine == "count_common":
+        return neighbor_common_ell(nbr, field, interpret=interpret, K=K)
+    raise ValueError(f"unknown combine {combine!r}; expected one of {COMBINES}")
+
+
+def _combine_dense(adj: jax.Array, field: jax.Array, combine: str,
+                   Cd: int) -> jax.Array:
+    """Dense-adjacency formulations of the combines (adj: (N, N) 0/1).
+
+    min  — masked elementwise min over the adjacency row.
+    sum  — the classic SpMV as an MXU matmul: adj @ field.
+    hindex — threshold-count matmul (`ref.hindex_counts_ref`, K = Cd + 1:
+             exact because h <= deg <= Cd).
+    count_common — diag(A^3) as sum(A ∘ A², axis=1): red[u] counts every
+             ordered common-neighbor pair at u, identical to the ELL
+             intersection.
+    """
+    if combine == "min":
+        fill = jnp.iinfo(jnp.int32).max
+        vals = jnp.where(adj > 0, field[None, :].astype(jnp.int32), fill)
+        return jnp.min(vals, axis=1)
+    if combine == "sum":
+        return adj.astype(jnp.float32) @ field.astype(jnp.float32)
+    if combine == "hindex":
+        return ref.hindex_counts_ref(adj, field, K=Cd + 1)
+    if combine == "count_common":
+        a = (adj > 0).astype(jnp.float32)
+        return jnp.sum(a * (a @ a), axis=1).astype(jnp.int32)
+    raise ValueError(f"unknown combine {combine!r}; expected one of {COMBINES}")
+
+
+def neighbor_combine_blocks(
+    g,  # GraphBlocks (duck-typed: .nbr, .N, .Cd)
+    field: jax.Array,
+    combine: str,
+    backend: str = "auto",
+    interpret: Optional[bool] = None,
+    adj: Optional[jax.Array] = None,
+    K: Optional[int] = None,
+) -> jax.Array:
+    """One gather + reduce superstep of a named combine, via any backend.
+
+    field: (N,) values for "min"/"sum"/"hindex", (N, Cd) neighbor rows for
+    "count_common".  Loops over the dense backend should densify once and
+    pass `adj` (see `dense_adj`).  The ell_spmd backend has no standalone
+    combine entry — its reductions only exist downstream of a halo
+    exchange; use `run_block_program(backend="ell_spmd")`.
+    """
+    b = resolve_backend(backend, g.N)
+    if b == "jnp":
+        return _combine_jnp(g.nbr, field, combine)
+    if b == "ell":
+        return _combine_ell(g.nbr, field, combine, interpret, K)
+    if b == "ell_spmd":
+        raise ValueError(
+            "neighbor_combine_blocks has no ell_spmd path: mesh combines "
+            "only exist inside a halo-exchange superstep — run the whole "
+            "program via run_block_program(backend='ell_spmd')."
+        )
+    if adj is None:
+        adj = ref.ell_to_dense(g.nbr, g.N)
+    return _combine_dense(adj, field, combine, g.Cd)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("program", "b", "interpret", "max_steps",
+                              "n_real"))
+def _block_program_fused(g, state0, adj, program, b: str, interpret: bool,
+                         max_steps: int, n_real: int):
+    """The generic fused fixpoint: program supersteps in ONE while_loop.
+
+    The loop body is (halo field -> backend combine -> block-local update
+    -> local halt verdict); nothing inside touches the host, so a run
+    costs ZERO per-superstep transfers on every backend and the superstep
+    count comes back as a device scalar, exactly like the dedicated
+    coreness fixpoints of PR 4.
+    """
+    ctx = BlockCtx(deg=jnp.asarray(g.deg, jnp.int32), node_mask=g.node_mask,
+                   n_real=n_real)
+
+    def red_of(field):
+        if b == "jnp":
+            return _combine_jnp(g.nbr, field, program.combine)
+        if b == "ell":
+            return _combine_ell(g.nbr, field, program.combine, interpret,
+                                None)
+        return _combine_dense(adj, field, program.combine, g.Cd)
+
+    def cond(c):
+        _, changed, it = c
+        return changed & (it < max_steps)
+
+    def body(c):
+        state, _, it = c
+        red = red_of(program.halo_field(state))
+        new = program.update(ctx, state, red)
+        return new, program.changed(state, new), it + 1
+
+    state, _, steps = jax.lax.while_loop(
+        cond, body, (state0, jnp.bool_(True), jnp.int32(0)))
+    return state, steps
+
+
+def run_block_program(
+    g,  # GraphBlocks (duck-typed)
+    program,  # core.engine.BlockProgram (hashable static)
+    backend: str = "auto",
+    max_steps: Optional[int] = None,
+    interpret: Optional[bool] = None,
+    executor=None,
+    with_steps: bool = False,
+) -> Union[Any, Tuple[Any, jax.Array]]:
+    """Run a `BlockProgram` to its halt fixpoint, via the chosen backend.
+
+    The structured contract (init → halo field → named combine → update →
+    halt reduction) is what makes ONE runner serve every backend: on
+    jnp/dense/ell the whole superstep loop fuses into a single jitted
+    `lax.while_loop` (`_block_program_fused`); on ell_spmd the identical
+    program runs over the worker mesh through `SpmdEngine.run_spmd`'s
+    fused loop, with the halo field served by a real W2W all-to-all and
+    the halt decision psum'd on-mesh.  Either way: ZERO per-superstep
+    host transfers, superstep counts as device scalars.
+
+    Host-boundary entry (like the ell_spmd dispatch paths): `program.init`
+    and the real-node count read need concrete arrays — do not call under
+    an outer jit trace.  Mesh loops should pass a long-lived
+    `SpmdExecutor` via `executor=`; `max_steps=None` takes the program's
+    own bound.  Returns the final program state, plus the executed
+    superstep count when `with_steps=True`.
+    """
+    b = resolve_backend(backend, g.N)
+    if program.combine not in COMBINES:
+        raise ValueError(
+            f"unknown combine {program.combine!r}; expected one of {COMBINES}")
+    ms = int(program.max_steps if max_steps is None else max_steps)
+    n_real = int(g.n_real)  # GraphBlocks property (duck-typed, host sync)
+    state0 = program.init(g)
+    if b == "ell_spmd":
+        from ..runtime.spmd import (  # lazy: no import cycle
+            SpmdBlockProgram, SpmdEngine, SpmdExecutor)
+
+        ex = executor if executor is not None else SpmdExecutor(g)
+        eng = SpmdEngine(g, executor=ex)
+        state, _ = eng.run_spmd(
+            SpmdBlockProgram(program, n_real), state0, None,
+            max_supersteps=ms)
+        steps = jnp.int32(len(eng.traces))
+        return (state, steps) if with_steps else state
+    if interpret is None:
+        interpret = not _on_tpu()
+    adj = ref.ell_to_dense(g.nbr, g.N) if b == "dense" else None
+    state, steps = _block_program_fused(
+        g, state0, adj, program=program, b=b, interpret=interpret,
+        max_steps=ms, n_real=n_real)
+    return (state, steps) if with_steps else state

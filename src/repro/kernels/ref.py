@@ -105,6 +105,93 @@ def ell_frontier_hop_ref(
     return hit & eligible.astype(bool) & ~visited.astype(bool)
 
 
+# ---------------------------------------------------------------------------
+# Neighbor-combine oracles (the BlockProgram reductions of `ops.COMBINES`).
+# The *_rows forms reduce already-gathered (n, Cd, ...) neighbor values —
+# shared by the jnp backend and the mesh backend's post-halo local reduce;
+# the ell_* forms bundle the ELL gather for whole-graph use.
+# ---------------------------------------------------------------------------
+
+
+def min_rows(vals: jax.Array) -> jax.Array:
+    """Row-wise min of gathered neighbor values: (n, Cd) -> (n,).
+
+    PAD slots must already hold an absorbing fill (int32 max for the CC
+    label exchange) so empty slots never win the min.
+    """
+    return jnp.min(vals, axis=-1)
+
+
+def sum_rows(vals: jax.Array) -> jax.Array:
+    """Row-wise sum of gathered neighbor values: (n, Cd) -> (n,).
+
+    PAD slots must already hold 0 (the "sum" combine's absorbing fill).
+    """
+    return jnp.sum(vals, axis=-1)
+
+
+def common_rows(own_rows: jax.Array, nb_rows: jax.Array) -> jax.Array:
+    """Directed common-neighbor counts: ((n, Cd), (n, Cd, Cd)) -> (n,).
+
+    own_rows[u] is u's padded neighbor list; nb_rows[u, j] is the padded
+    neighbor list of u's j-th neighbor (all ids global, -1 = PAD — PAD
+    slots never match because both sides are masked to ids >= 0).
+    Returns red[u] = sum_j |N(u) ∩ N(nbr[u, j])|, which counts every
+    triangle through u exactly twice (once per non-u corner).
+    """
+    own = own_rows[:, None, :, None]        # (n, 1, Cd_own, 1)
+    nb = nb_rows[:, :, None, :]             # (n, Cd, 1, Cd_nb)
+    match = (own == nb) & (own >= 0) & (nb >= 0)
+    return jnp.sum(match, axis=(1, 2, 3)).astype(jnp.int32)
+
+
+def combine_rows(combine: str, field: jax.Array, nb_vals: jax.Array) -> jax.Array:
+    """Reduce already-gathered neighbor values by combine name.
+
+    field: (n, ...) this node's own exchanged values; nb_vals: (n, Cd, ...)
+    the neighbors' values with PAD slots holding the combine's absorbing
+    fill.  This is the mesh backend's post-halo local reduce and the
+    semantic contract every kernel-backed combine must match.
+    """
+    if combine == "min":
+        return min_rows(nb_vals)
+    if combine == "sum":
+        return sum_rows(nb_vals)
+    if combine == "hindex":
+        return hindex_rows(nb_vals)
+    if combine == "count_common":
+        return common_rows(field, nb_vals)
+    raise ValueError(f"unknown combine {combine!r}")
+
+
+def ell_min_ref(nbr: jax.Array, field: jax.Array) -> jax.Array:
+    """Gather + row-min over the ELL adjacency (PAD -> dtype max)."""
+    fill = jnp.iinfo(field.dtype).max if jnp.issubdtype(
+        field.dtype, jnp.integer) else jnp.inf
+    vals = jnp.where(nbr >= 0, field[jnp.clip(nbr, 0)], fill)
+    return min_rows(vals)
+
+
+def ell_sum_ref(nbr: jax.Array, field: jax.Array) -> jax.Array:
+    """Gather + row-sum over the ELL adjacency (PAD -> 0)."""
+    vals = jnp.where(nbr >= 0, field[jnp.clip(nbr, 0)],
+                     jnp.zeros((), field.dtype))
+    return sum_rows(vals)
+
+
+def ell_common_ref(nbr: jax.Array, rows: jax.Array) -> jax.Array:
+    """Gather neighbor rows + common-neighbor counts over the ELL adjacency.
+
+    `rows` is the (N, Cd) per-node neighbor-row field being exchanged —
+    for whole-graph execution it is simply `nbr` itself; keeping it a
+    separate argument is what lets the mesh backend hand in halo-served
+    rows instead.
+    """
+    nb_rows = jnp.where(
+        (nbr >= 0)[:, :, None], rows[jnp.clip(nbr, 0)], -1)  # (N, Cd, Cd)
+    return common_rows(rows, nb_rows)
+
+
 def ell_to_dense(nbr: jax.Array, N: int) -> jax.Array:
     """ELL adjacency (rows of padded neighbor ids) -> dense 0/1 (N, N)."""
     rows = jnp.repeat(jnp.arange(N), nbr.shape[1])

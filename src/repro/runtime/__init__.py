@@ -28,6 +28,7 @@ registry can lazily dispatch into this package without an import cycle.
 from .mesh import AXIS, WorkerMesh, best_worker_count, make_worker_mesh
 from .halo import HaloPlan, build_halo_plan
 from .spmd import (
+    SpmdBlockProgram,
     SpmdCorenessProgram,
     SpmdEngine,
     SpmdExecutor,
@@ -42,6 +43,7 @@ __all__ = [
     "AXIS", "WorkerMesh", "best_worker_count", "make_worker_mesh",
     "HaloPlan", "build_halo_plan",
     "SpmdExecutor", "SpmdEngine", "SpmdProgram", "SpmdCorenessProgram",
+    "SpmdBlockProgram",
     "coreness_spmd", "hindex_spmd", "frontier_spmd",
     "StreamStats", "route_updates", "run_stream",
 ]

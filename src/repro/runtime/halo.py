@@ -175,6 +175,10 @@ class HaloPlan:
         to the next power of two that fits, so the result is
         field-for-field identical to
         `build_halo_plan(g, wm, H_min=self.H, K_min=self.K)`.
+
+        Returns the maintained `HaloPlan` (a new frozen instance; `self`
+        unchanged — and returned as-is when every edit is an op == 0
+        no-op).  Host-side preprocessing: raises under a jit trace.
         """
         _check_concrete(g.nbr)
         wm = self.wm

@@ -41,7 +41,8 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec
 
-from ..kernels.ref import hindex_rows
+from ..kernels.ops import BlockCtx
+from ..kernels.ref import combine_rows, hindex_rows
 from .halo import HaloPlan, build_halo_plan
 from .mesh import AXIS, WorkerMesh, make_worker_mesh
 
@@ -259,32 +260,54 @@ class SpmdExecutor:
         return self._nbrl, self._send, self._recv
 
     def hindex(self, est: jax.Array) -> jax.Array:
-        """h-index of neighbor estimates — one executed W2W superstep."""
+        """h-index of neighbor estimates — one executed W2W superstep.
+
+        est: (N,) int32 (N = P*Cn, sharded over workers as (S,) each);
+        returns (N,) int32.
+        """
         fn = _compiled_hindex(self.wm.mesh, self.plan.H)
         return fn(est.astype(jnp.int32), *self._tables)
 
     def frontier(self, f, eligible, visited) -> jax.Array:
-        """One masked BFS hop; f/eligible/visited are (N, R) bool."""
+        """One masked BFS hop for R stacked frontiers.
+
+        f, eligible, visited: (N, R) bool; returns the next frontier as
+        (N, R) bool (`f & eligible & ~visited` semantics of
+        `ref.ell_frontier_hop_ref`).
+        """
         fn = _compiled_frontier(self.wm.mesh, self.plan.H)
         return fn(f.astype(bool), eligible.astype(bool),
                   visited.astype(bool), *self._tables)
 
     def coreness(self, max_steps: int = 10_000) -> Tuple[jax.Array, jax.Array]:
-        """Full min-H coreness on the mesh; returns (est, supersteps)."""
+        """Full min-H coreness on the mesh.
+
+        Returns ((N,) int32 coreness, device int32 superstep count); the
+        whole fixpoint is one on-mesh `lax.while_loop` (zero per-superstep
+        host transfers).
+        """
         fn = _compiled_coreness(self.wm.mesh, self.plan.H)
         est0 = jnp.where(self.node_mask, self.deg, 0).astype(jnp.int32)
         return fn(est0, self.node_mask, jnp.int32(max_steps), *self._tables)
 
     def k_reachable_batch(self, core, roots, ks, max_steps: int = 10_000):
         """R stacked k-reachability searches (semantics of
-        `core.kcore_dynamic.k_reachable_batch`); returns (visited, steps)."""
+        `core.kcore_dynamic.k_reachable_batch`).
+
+        core: (N,) int32; roots: (N, R) bool; ks: (R,) int32 per-search
+        k levels.  Returns ((N, R) bool visited, device superstep count).
+        """
         fn = _compiled_reach(self.wm.mesh, self.plan.H)
         return fn(jnp.asarray(core, jnp.int32), self.node_mask,
                   roots.astype(bool), jnp.asarray(ks, jnp.int32),
                   jnp.int32(max_steps), *self._tables)
 
     def restricted_recompute(self, est0, cand, max_steps: int = 10_000):
-        """Clamped min-H iteration (only `cand` nodes move) on the mesh."""
+        """Clamped min-H iteration (only `cand` nodes move) on the mesh.
+
+        est0: (N,) int32 upper bounds; cand: (N,) bool movable mask.
+        Returns ((N,) int32 fixpoint, device superstep count).
+        """
         fn = _compiled_recompute(self.wm.mesh, self.plan.H)
         return fn(jnp.asarray(est0, jnp.int32), cand.astype(bool),
                   self.node_mask, jnp.int32(max_steps), *self._tables)
@@ -354,6 +377,53 @@ class SpmdCorenessProgram(SpmdProgram):
         changed = jnp.any(
             (new != est).reshape(ctx.B, ctx.Cn), axis=1)  # per-block W2M
         return new, changed
+
+    def master_compute(self, mstate, summary):
+        return mstate, None, jnp.logical_not(jnp.any(summary))
+
+
+class SpmdBlockProgram(SpmdProgram):
+    """Adapter: any `core.engine.BlockProgram` as an SPMD program.
+
+    This is the ell_spmd execution of the structured superstep contract:
+    the program's declared halo field is the exchanged W2W payload, its
+    named combine runs as the post-halo local reduce
+    (`kernels.ref.combine_rows` on the halo-served (S, Cd, ...) values),
+    its update is per-shard workerCompute, and its local changed verdict
+    is the W2M summary the replicated master folds into the halt
+    decision.  `fusable=True`: the whole loop runs on-mesh through
+    `SpmdEngine.run_spmd` with zero per-superstep host transfers.
+
+    Hash/eq delegate to the wrapped program (plus the static real-node
+    count), so reusing a program object reuses the per-(mesh, H)
+    compiled superstep.
+    """
+
+    fusable = True
+
+    def __init__(self, prog, n_real: int):
+        self.prog = prog
+        self.n_real = int(n_real)
+        self.halo_fill = prog.halo_fill
+
+    def __hash__(self):
+        return hash((type(self), self.prog, self.n_real))
+
+    def __eq__(self, other):
+        return (type(other) is type(self) and other.prog == self.prog
+                and other.n_real == self.n_real)
+
+    def halo_field(self, wstate):
+        return self.prog.halo_field(wstate)
+
+    def worker_local(self, ctx: LocalCtx, state, nb_vals, directive):
+        bctx = BlockCtx(deg=ctx.deg, node_mask=ctx.node_mask,
+                        n_real=self.n_real)
+        red = combine_rows(self.prog.combine, self.prog.halo_field(state),
+                           nb_vals)
+        new = self.prog.update(bctx, state, red)
+        changed = self.prog.changed(state, new)
+        return new, changed.reshape(1)  # per-worker W2M flag
 
     def master_compute(self, mstate, summary):
         return mstate, None, jnp.logical_not(jnp.any(summary))

@@ -64,6 +64,7 @@ import numpy as np
 
 from ..core import kcore_dynamic as kd
 from ..core import partition_dynamic as pd
+from ..core.algorithms import connected_components, merge_labels
 from ..core.graph import halo_pair_counts, migrate_vertices
 from ..core.kcore_dynamic import SPMD_BACKEND
 
@@ -84,6 +85,8 @@ class StreamStats(NamedTuple):
     plan_rebuilds: int = 0       # full plan rebuilds (spmd; 0 in steady state)
     migrations: int = 0          # §4.2 rebalance rounds executed
     migrated_vertices: int = 0   # vertices moved across blocks in total
+    cc_merges: int = 0           # CC labels maintained by O(1) label merges
+    cc_recomputes: int = 0       # CC label recomputations (delete/migration)
 
     @property
     def escalated(self) -> int:
@@ -198,12 +201,16 @@ def run_stream(
     executor=None,
     rebalance_threshold: Optional[float] = None,
     rebalance_max_moves: int = 8,
+    cc_labels: Optional[jax.Array] = None,
 ):
     """Ingest an update stream; returns (g', core', StreamStats).
 
-    `updates` may be any iterable (including a generator) of (u, v, op)
-    with op = +1 insert / -1 delete, ids global padded *as of the call*
-    (migrations remap later windows internally).  Exactness: the final
+    g: GraphBlocks (P blocks of Cn rows, nbr (N, Cd)); core: (N,) int32
+    coreness of `g` (as `core.kcore.coreness` returns it).  `updates`
+    may be any iterable (including a generator) of (u, v, op) with
+    op = +1 insert / -1 delete, ids global padded *as of the call*
+    (migrations remap later windows internally).  R is the window width
+    (the stacked-frontier axis of the batched candidate search).  Exactness: the final
     coreness equals sequential per-update maintenance — under live
     rebalancing up to the node-axis permutation, i.e. bit-identical when
     read through `orig_id`.  With `backend="ell_spmd"` every superstep
@@ -215,6 +222,20 @@ def run_stream(
     protocol after every window: blocks report load summaries, the
     coordinator migrates boundary vertices when max/mean load exceeds
     the threshold.  `None` disables it.
+
+    `cc_labels` (optional) arms connected-component maintenance: pass the
+    canonical labels of the PRE-stream graph (as
+    `core.algorithms.connected_components` returns them: (N,) int32, min
+    member padded id per component, -1 on padding rows) and the stream
+    keeps them exact window by window, returning (g', core', stats,
+    labels') instead of the 3-tuple.  Insert-only windows are maintained
+    with O(1)-superstep label merges on device (inserts can only *join*
+    components — `algorithms.merge_labels`); a window containing a
+    deletion or followed by a §4.2 migration triggers one fresh
+    propagation on the post-window graph (splits cannot be merged; node
+    permutations relabel the canonical ids).  `StreamStats.cc_merges` /
+    `cc_recomputes` count the two paths, and the final labels are
+    bit-identical to `connected_components(g')`.
 
     NOTE: consumes `g` via jit buffer donation on the escalation path
     (like `maintain_batch`) — use the returned graph.
@@ -241,6 +262,8 @@ def run_stream(
     per_block = np.zeros(g.P, np.int64)
     migrations = migrated = 0
     remap: Optional[np.ndarray] = None  # pre-stream ids -> current ids
+    labels = jnp.asarray(cc_labels) if cc_labels is not None else None
+    cc_merges = cc_recomputes = 0
 
     for window in _iter_windows(updates, R):
         if remap is not None:
@@ -308,6 +331,7 @@ def run_stream(
         # §4.2 repartition-threshold protocol, live: workerCompute load
         # summaries (W2M) -> masterCompute threshold + move selection ->
         # an executed node migration (a permutation, nothing recompiles)
+        migrated_now = False
         if rebalance_threshold is not None:
             if pd.block_balance(g) > rebalance_threshold:
                 moves = pd.choose_node_moves(
@@ -318,8 +342,25 @@ def run_stream(
                     remap = perm if remap is None else perm[remap]
                     migrations += 1
                     migrated += len(moves)
+                    migrated_now = True
                     if spmd:
                         ex.rebuild(g)
+
+        # CC label maintenance: inserts only ever JOIN components, so an
+        # insert-only window is an O(1)-superstep on-device label merge;
+        # deletions (possible splits) and migrations (canonical ids are
+        # padded ids, which a migration permutes) re-propagate once on
+        # the post-window graph.
+        if labels is not None:
+            ins_mask = valid & (ops_ > 0)
+            if (valid & (ops_ < 0)).any() or migrated_now:
+                labels = connected_components(g, backend=backend,
+                                              executor=ex)
+                cc_recomputes += 1
+            elif ins_mask.any():
+                labels = merge_labels(labels, jnp.asarray(us),
+                                      jnp.asarray(vs), jnp.asarray(ins_mask))
+                cc_merges += int(ins_mask.sum())
 
     stats = StreamStats(
         updates=n_updates,
@@ -335,5 +376,9 @@ def run_stream(
         plan_rebuilds=(ex.full_rebuilds - ex_rebuilds0) if spmd else 0,
         migrations=migrations,
         migrated_vertices=migrated,
+        cc_merges=cc_merges,
+        cc_recomputes=cc_recomputes,
     )
+    if cc_labels is not None:
+        return g, core, stats, labels
     return g, core, stats

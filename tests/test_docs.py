@@ -1,0 +1,73 @@
+"""Docs gate: doctest the shape-convention snippets, kill dead links.
+
+Two rot-proofing checks over the markdown + docstring surface (the CI
+`docs` job runs exactly this module):
+
+  * every fenced ```python block containing `>>> ` in the repo's *.md
+    files runs as a doctest (ARCHITECTURE.md's shape-convention snippets
+    are the motivating case), and so do the docstring doctests of the
+    public modules that carry them (`core.algorithms`);
+  * every relative markdown link `[text](path)` must point at an
+    existing file — external http(s)/mailto links and pure anchors are
+    out of scope (no network in CI).
+"""
+import doctest
+import re
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+MD_FILES = sorted(REPO.glob("*.md"))
+
+_FENCE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+#: modules whose docstrings carry runnable `>>>` examples
+DOCTEST_MODULES = ["repro.core.algorithms"]
+
+
+def _doctest_blocks(path: Path):
+    text = path.read_text()
+    return [b for b in _FENCE.findall(text) if ">>> " in b]
+
+
+@pytest.mark.parametrize(
+    "md", [p for p in MD_FILES if _doctest_blocks(p)], ids=lambda p: p.name)
+def test_markdown_doctest_snippets(md):
+    parser = doctest.DocTestParser()
+    runner = doctest.DocTestRunner(optionflags=doctest.ELLIPSIS)
+    for i, block in enumerate(_doctest_blocks(md)):
+        test = parser.get_doctest(block, {}, f"{md.name}[{i}]", str(md), 0)
+        runner.run(test)
+    results = runner.summarize(verbose=False)
+    assert results.failed == 0, (
+        f"{results.failed} doctest failure(s) in {md.name}")
+
+
+def test_architecture_md_exists_and_has_snippets():
+    arch = REPO / "ARCHITECTURE.md"
+    assert arch.exists(), "ARCHITECTURE.md missing"
+    assert _doctest_blocks(arch), "ARCHITECTURE.md lost its doctest snippets"
+    readme = (REPO / "README.md").read_text()
+    assert "ARCHITECTURE.md" in readme, "README no longer links ARCHITECTURE"
+
+
+@pytest.mark.parametrize("mod", DOCTEST_MODULES)
+def test_module_docstring_doctests(mod):
+    module = __import__(mod, fromlist=["_"])
+    results = doctest.testmod(module, optionflags=doctest.ELLIPSIS)
+    assert results.attempted > 0, f"{mod} lost its docstring doctests"
+    assert results.failed == 0
+
+
+@pytest.mark.parametrize("md", MD_FILES, ids=lambda p: p.name)
+def test_markdown_relative_links_resolve(md):
+    dead = []
+    for target in _LINK.findall(md.read_text()):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        path = target.split("#", 1)[0]
+        if path and not (md.parent / path).exists():
+            dead.append(target)
+    assert not dead, f"dead relative link(s) in {md.name}: {dead}"
