@@ -1,6 +1,6 @@
 """Kernel-variant and fixpoint-latency sweeps (the BENCH_kernels.json source).
 
-Two measurement surfaces for the device-resident-fixpoint work:
+Four measurement surfaces for the kernel pass:
 
   * `kernels/hindex/*` — the h-index kernel variants at a (N, Cd) grid:
     the O(Cd log Cd) in-tile sort sweep vs the legacy O(Cd*K) count-matrix
@@ -13,6 +13,13 @@ Two measurement surfaces for the device-resident-fixpoint work:
     the pre-refactor loop (one `device_get` convergence check per
     superstep).  The derived field carries the superstep count so
     us/superstep is recoverable from the JSON trajectory.
+  * `kernels/triangles/*` — the sorted-merge binary-probe intersection
+    vs the legacy all-pairs cube on the same adjacency, bit-parity
+    asserted against `ref.ell_common_ref` on both.
+  * `kernels/multi/*` — the fused multi-field superstep
+    (`ops.neighbor_multi_ell`: coreness + CC + PageRank reduces off ONE
+    adjacency read) vs the three standalone kernel launches, per-field
+    bit-parity asserted.
 """
 from __future__ import annotations
 
@@ -97,6 +104,52 @@ def run(seed: int = 0, smoke: bool = False) -> List[Tuple[str, float, str]]:
         np.testing.assert_array_equal(np.asarray(got).astype(want.dtype), want)
         us = _timed(lambda bb=b: ops.hindex_blocks(g, est, backend=bb), reps)
         rows.append(row(f"kernels/superstep/N{g.N}/{b}", us, "parity=ok"))
+
+    # ---- triangles: sorted-merge vs all-pairs intersection ------------
+    tri_shapes = [(320, 24)] if smoke else [(320, 24), (320, 128), (1024, 64)]
+    for N, Cd in tri_shapes:
+        gt = build_ell_random(N, Cd=Cd, seed=seed, m_factor=Cd / 3)
+        want = np.asarray(ref.ell_common_ref(gt.nbr, gt.nbr))
+        us_by = {}
+        for variant in ("merge", "allpairs"):
+            got = ops.neighbor_common_ell(gt.nbr, gt.nbr, variant=variant)
+            np.testing.assert_array_equal(np.asarray(got), want)
+            us_by[variant] = _timed(
+                lambda v=variant: ops.neighbor_common_ell(
+                    gt.nbr, gt.nbr, variant=v), reps)
+        speedup = us_by["allpairs"] / max(us_by["merge"], 1e-9)
+        for variant, us in us_by.items():
+            rows.append(row(
+                f"kernels/triangles/N{gt.N}/Cd{Cd}/{variant}", us,
+                f"merge_speedup={speedup:.1f}x;parity=ok"))
+
+    # ---- fused multi-field superstep vs three standalone launches -----
+    for N, Cd in ([(512, 32)] if smoke else [(512, 32), (2048, 64)]):
+        gm = build_ell_random(N, Cd=Cd, seed=seed, m_factor=Cd / 3)
+        est = jnp.asarray(gm.deg, jnp.int32)
+        lab = jnp.arange(gm.N, dtype=jnp.int32)
+        contrib = jnp.where(gm.deg > 0, 1.0 / jnp.maximum(gm.deg, 1),
+                            0.0).astype(jnp.float32)
+        combines = ("hindex", "min", "sum")
+
+        def fused():
+            return ops.neighbor_multi_ell(
+                gm.nbr, (est, lab, contrib), combines)
+
+        def separate():
+            return (ops.hindex_ell(gm.nbr, est),
+                    ops.neighbor_min_ell(gm.nbr, lab),
+                    ops.neighbor_sum_ell(gm.nbr, contrib))
+
+        for f, s in zip(fused(), separate()):
+            np.testing.assert_array_equal(np.asarray(f), np.asarray(s))
+        us_f = _timed(fused, reps)
+        us_s = _timed(separate, reps)
+        ratio = us_s / max(us_f, 1e-9)
+        rows.append(row(f"kernels/multi/N{gm.N}/Cd{Cd}/fused", us_f,
+                        f"fields=3;separate_speedup={ratio:.1f}x;parity=ok"))
+        rows.append(row(f"kernels/multi/N{gm.N}/Cd{Cd}/separate", us_s,
+                        "fields=3"))
 
     # ---- fused vs host-synced fixpoint --------------------------------
     for b in ("jnp", "dense", "ell"):

@@ -13,6 +13,13 @@ Two measurement surfaces for the block runtime (`repro.runtime`):
     slot counts + deduplicated device payload).  The slot-level numbers
     must agree exactly; the device payload shows what deduplication
     saves on the wire.
+  * `runtime/overlap/*` — the split-phase halo read
+    (`SpmdExecutor(overlap=True)`, local slots gather without waiting on
+    the all_to_all) vs strict ordering, same mesh coreness fixpoint:
+    bit-parity asserted, serialized-collective-phase counts in the
+    derived field (0/superstep overlap, 1/superstep strict).  On a
+    1-device host both paths time the same local math — the spread is a
+    multi-device / real-hardware number.
 """
 from __future__ import annotations
 
@@ -53,6 +60,27 @@ def run(seed: int = 0, smoke: bool = False) -> List[Tuple[str, float, str]]:
     for backend, t in times.items():
         rows.append(row(f"runtime/coreness/{backend}", t * 1e6,
                         f"n={nn};P=4;devices={W}"))
+
+    # ---- overlap vs strict halo ordering, same fixpoint ---------------
+    from repro.runtime.spmd import SpmdExecutor
+
+    ov_core = {}
+    for ov in (True, False):
+        ex = SpmdExecutor(g, overlap=ov)
+        est, steps = ex.coreness()  # warmup/compile
+        jax.block_until_ready(est)
+        t0 = time.perf_counter()
+        est, steps = ex.coreness()
+        jax.block_until_ready(est)
+        dt = time.perf_counter() - t0
+        ov_core[ov] = np.asarray(est)
+        mode = "overlap" if ov else "strict"
+        ser = (0 if ov else 1) * int(steps)
+        rows.append(row(f"runtime/overlap/coreness/{mode}", dt * 1e6,
+                        f"serialized_collectives={ser};"
+                        f"steps={int(steps)};devices={W}"))
+    assert (ov_core[True] == cores["jnp"]).all(), "overlap parity broken"
+    assert (ov_core[False] == cores["jnp"]).all(), "strict parity broken"
 
     _, eng_m = coreness_via_engine(g)
     _, eng_x = coreness_via_spmd(g)

@@ -1,20 +1,29 @@
-"""Soft perf-regression check over the BENCH_*.json trajectory files.
+"""Perf-regression check over the BENCH_*.json trajectory files.
 
 Compares a fresh benchmark run (``--fresh`` dir, written by
 ``benchmarks.run --out-dir``) against the committed baselines
-(``--baseline`` dir, normally the repo root) row-by-row and WARNS — never
-fails — when a row's ``us_per_call`` grew by more than ``--threshold``
-(default 2x).  Smoke timings on shared CI runners are noisy; the check is
-a tripwire for order-of-magnitude regressions (a fixpoint falling back to
-per-superstep host syncs, a kernel silently hitting a slow path), not a
-gate.  Rows faster than ``--floor-us`` in the baseline are skipped (pure
-noise), as are rows missing on either side (sweeps legitimately change).
+(``--baseline`` dir, normally the repo root) row-by-row.  Rows are only
+compared when the two files were produced on the SAME ``jax_backend``
+(platform field of the JSON payload): a CPU-interpret fresh point against
+a committed TPU baseline (or vice versa) measures the platform, not the
+code, so the file is skipped with a notice.
 
-Exit code is always 0; under GitHub Actions warnings surface as
-``::warning`` annotations.
+Two severity tiers:
+
+  * soft (``--threshold``, default 2x): WARN on any row whose
+    ``us_per_call`` grew past the ratio — smoke timings on shared CI
+    runners are noisy, so this tier never fails the job;
+  * hard (``--hard-threshold``, default 3x, ``kernels/*`` rows only):
+    FAIL (exit 1).  The kernel sweep rows time single jitted dispatches
+    of this repo's own Pallas/jnp kernels — far less scheduler noise than
+    the end-to-end workload rows — so a >3x growth there is a real
+    regression (a kernel silently falling off its fast path), not jitter.
+
+Rows faster than ``--floor-us`` in the baseline are skipped (pure noise),
+as are rows missing on either side (sweeps legitimately change).
 
 Usage: python -m benchmarks.check_regression [--baseline .] [--fresh .]
-       [--threshold 2.0] [--floor-us 200]
+       [--threshold 2.0] [--hard-threshold 3.0] [--floor-us 200]
 """
 from __future__ import annotations
 
@@ -24,14 +33,19 @@ import os
 import pathlib
 import sys
 
+#: row-name prefix subject to the hard-fail tier
+HARD_PREFIX = "kernels/"
 
-def _load_rows(path: pathlib.Path):
+
+def _load(path: pathlib.Path):
     data = json.loads(path.read_text())
-    return {
+    rows = {
         r["name"]: r["us_per_call"]
         for r in data.get("rows", [])
         if r.get("us_per_call") is not None
     }
+    backend = data.get("platform", {}).get("jax_backend")
+    return rows, backend
 
 
 def _warn(msg: str) -> None:
@@ -39,6 +53,13 @@ def _warn(msg: str) -> None:
         print(f"::warning title=bench regression::{msg}")
     else:
         print(f"WARNING: {msg}")
+
+
+def _error(msg: str) -> None:
+    if os.environ.get("GITHUB_ACTIONS"):
+        print(f"::error title=bench regression::{msg}")
+    else:
+        print(f"ERROR: {msg}")
 
 
 def main(argv=None) -> int:
@@ -49,6 +70,9 @@ def main(argv=None) -> int:
                     help="dir holding the freshly produced BENCH_*.json")
     ap.add_argument("--threshold", type=float, default=2.0,
                     help="warn when fresh/baseline exceeds this ratio")
+    ap.add_argument("--hard-threshold", type=float, default=3.0,
+                    help=f"fail (exit 1) when a {HARD_PREFIX}* row exceeds "
+                         "this ratio")
     ap.add_argument("--floor-us", type=float, default=200.0,
                     help="ignore rows whose baseline is below this (noise)")
     args = ap.parse_args(argv)
@@ -60,27 +84,36 @@ def main(argv=None) -> int:
         _warn(f"no BENCH_*.json found under {fresh_dir} — nothing to check")
         return 0
 
-    compared = regressed = 0
+    compared = regressed = failed = 0
     for fresh_path in fresh_files:
         base_path = base_dir / fresh_path.name
         if not base_path.exists() or base_path.resolve() == fresh_path.resolve():
             print(f"{fresh_path.name}: no distinct baseline, skipped")
             continue
-        base = _load_rows(base_path)
-        fresh = _load_rows(fresh_path)
+        base, base_backend = _load(base_path)
+        fresh, fresh_backend = _load(fresh_path)
+        if base_backend != fresh_backend:
+            print(f"{fresh_path.name}: platform mismatch "
+                  f"(baseline={base_backend}, fresh={fresh_backend}) — "
+                  "timings not comparable, skipped")
+            continue
         for name in sorted(set(base) & set(fresh)):
             if base[name] < args.floor_us:
                 continue
             compared += 1
             ratio = fresh[name] / base[name]
-            if ratio > args.threshold:
+            msg = (f"{name}: {base[name]:.0f}us -> {fresh[name]:.0f}us "
+                   f"({ratio:.1f}x baseline)")
+            if name.startswith(HARD_PREFIX) and ratio > args.hard_threshold:
+                failed += 1
+                _error(f"{msg} > {args.hard_threshold:.1f}x hard limit")
+            elif ratio > args.threshold:
                 regressed += 1
-                _warn(
-                    f"{name}: {base[name]:.0f}us -> {fresh[name]:.0f}us "
-                    f"({ratio:.1f}x > {args.threshold:.1f}x baseline)")
-    print(f"check_regression: {compared} rows compared, "
-          f"{regressed} above {args.threshold:.1f}x (soft check, exit 0)")
-    return 0
+                _warn(f"{msg} > {args.threshold:.1f}x soft limit")
+    print(f"check_regression: {compared} rows compared, {regressed} above "
+          f"{args.threshold:.1f}x (warn), {failed} {HARD_PREFIX}* rows above "
+          f"{args.hard_threshold:.1f}x (fail)")
+    return 1 if failed else 0
 
 
 if __name__ == "__main__":

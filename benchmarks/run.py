@@ -25,9 +25,14 @@ under --out-dir: the machine-readable perf trajectory (committed
 baselines at the repo root, fresh points uploaded as CI artifacts and
 soft-checked by ``benchmarks.check_regression``).
 
+``--profile`` additionally measures the per-kernel roofline points
+(analytic FLOPs/bytes + achieved fraction, `benchmarks.profile_kernels`)
+and writes them to ``PROFILE_kernels.json`` under --out-dir — a distinct
+prefix, so the BENCH_* regression glob never compares profile payloads.
+
 Usage: PYTHONPATH=src python -m benchmarks.run [--full] [--updates N]
        [--backends jnp,dense,ell] [--batch-sizes 1,4,8] [--smoke]
-       [--out-dir DIR]
+       [--profile] [--out-dir DIR]
 
 --smoke is the CI gate: tiny graphs, every backend, a few updates — fails
 fast on kernel parity regressions without the full table runtime.
@@ -89,6 +94,9 @@ def main() -> None:
                     help="comma list: table2,fig7,partitioning,static,"
                          "backends,kernels,runtime,stream,workloads,"
                          "roofline")
+    ap.add_argument("--profile", action="store_true",
+                    help="also dump per-kernel roofline points "
+                         "(PROFILE_kernels.json under --out-dir)")
     ap.add_argument("--out-dir", default=".",
                     help="directory for the BENCH_*.json trajectory files")
     args = ap.parse_args()
@@ -166,6 +174,18 @@ def main() -> None:
             failed += 1
             print(f"{name},nan,ERROR", flush=True)
             traceback.print_exc(file=sys.stderr)
+    if args.profile:
+        from . import profile_kernels
+
+        payload = profile_kernels.profile_points(seed=args.seed)
+        path = pathlib.Path(args.out_dir) / "PROFILE_kernels.json"
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(payload, indent=2) + "\n")
+        print(f"# wrote {path}", file=sys.stderr)
+        for p in payload["points"]:
+            print(f"profile/{p['name']},{p['us_per_call']:.1f},"
+                  f"achieved={p['achieved_fraction']};"
+                  f"intensity={p['intensity_flops_per_byte']}")
     if failed:
         raise SystemExit(1)
 

@@ -5,11 +5,12 @@ from .graph import (
 )
 from .engine import (
     BladygEngine, BladygProgram, BlockCtx, BlockProgram, Mode, MessageStats,
+    MultiProgram,
 )
 from .algorithms import (
     ConnectedComponentsProgram, CorenessBlockProgram, PageRankProgram,
-    TriangleCountProgram, connected_components, merge_labels, pagerank,
-    triangle_counts, triangle_total,
+    TriangleCountProgram, connected_components, fused_analytics,
+    merge_labels, pagerank, triangle_counts, triangle_total,
 )
 from .kcore import (
     coreness, coreness_with_stats, coreness_via_engine, coreness_via_spmd,
@@ -34,9 +35,10 @@ __all__ = [
     "migrate_vertices", "to_networkx_edges", "halo_slot_counts",
     "halo_pair_counts",
     "BladygEngine", "BladygProgram", "BlockCtx", "BlockProgram",
+    "MultiProgram",
     "ConnectedComponentsProgram", "CorenessBlockProgram", "PageRankProgram",
-    "TriangleCountProgram", "connected_components", "merge_labels",
-    "pagerank", "triangle_counts", "triangle_total",
+    "TriangleCountProgram", "connected_components", "fused_analytics",
+    "merge_labels", "pagerank", "triangle_counts", "triangle_total",
     "Mode", "MessageStats", "coreness", "coreness_with_stats",
     "coreness_via_engine", "coreness_via_spmd", "hindex_rows",
     "CorenessProgram",

@@ -62,7 +62,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import ops
-from .engine import BlockCtx, BlockProgram
+from .engine import BlockCtx, BlockProgram, MultiProgram
 from .graph import GraphBlocks
 
 #: the CC label of padding rows and the min-combine's absorbing fill
@@ -239,6 +239,41 @@ def triangle_counts(
         (counts, _), steps = out
         return counts, steps
     return out[0]
+
+
+def fused_analytics(
+    g: GraphBlocks,
+    alpha: float = 0.85,
+    steps: int = 30,
+    backend: str = "auto",
+    executor=None,
+    with_steps: bool = False,
+) -> Union[Tuple[jax.Array, jax.Array, jax.Array],
+           Tuple[Tuple[jax.Array, jax.Array, jax.Array], jax.Array]]:
+    """Coreness + CC labels + PageRank from ONE fused superstep loop.
+
+    Builds a `MultiProgram` over `CorenessBlockProgram`,
+    `ConnectedComponentsProgram`, and fixed-iteration
+    `PageRankProgram(alpha, tol=None)` and runs exactly `steps` fused
+    supersteps: each superstep reads the neighbor slots once and serves
+    all three reduces off the shared gather.  Returns
+    ``(coreness, labels, rank)`` — coreness (N,) int32 (0 on padding),
+    labels (N,) int32 (-1 on padding), rank (N,) float32 (0.0 on
+    padding) — each bit-identical to its standalone program run for the
+    same superstep count, provided `steps` covers the min/hindex
+    programs' convergence (their updates idle at the fixpoint).
+    """
+    prog = MultiProgram(
+        (CorenessBlockProgram(),
+         ConnectedComponentsProgram(),
+         PageRankProgram(alpha=alpha, tol=None, max_steps=steps)),
+        max_steps=steps)
+    out = ops.run_block_program(
+        g, prog, backend=backend, executor=executor, with_steps=with_steps)
+    state, n = out if with_steps else (out, None)
+    core, lab, (rank, _) = state
+    results = (core, jnp.where(g.node_mask, lab, -1), rank)
+    return (results, n) if with_steps else results
 
 
 def triangle_total(counts: jax.Array) -> jax.Array:

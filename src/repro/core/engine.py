@@ -79,6 +79,11 @@ class SuperstepTrace:
     step: int
     mode: Mode
     stats: MessageStats
+    #: collective phases the step's compute had to WAIT on before touching
+    #: neighbor values: 1 under the strict-ordered halo exchange, 0 when the
+    #: runtime overlapped the exchange with block-local gathers
+    #: (`runtime.spmd.SpmdExecutor(overlap=True)`).
+    serialized_collectives: int = 0
 
 
 class BladygProgram:
@@ -202,6 +207,72 @@ class BlockProgram:
         out = jnp.bool_(False)
         for f in flags:
             out = out | f
+        return out
+
+
+class MultiProgram(BlockProgram):
+    """Several BlockPrograms advancing in lockstep off ONE neighbor gather.
+
+    Run separately, k programs cost k adjacency sweeps per superstep —
+    and the (N, Cd) neighbor matrix is the roofline-dominant operand of
+    every sweep.  A MultiProgram declares the fusion instead: its state,
+    halo field, and fill are *tuples* (one leaf per sub-program), its
+    combine is the sentinel ``"multi"`` with the per-field names in
+    `combines`, and the runners (`kernels.ops.run_block_program`, the
+    ell_spmd mesh path) read the neighbor slots ONCE per superstep and
+    serve every field's gather + reduce off the shared index matrix.
+    Each fused reduce reproduces its standalone formulation exactly, so
+    per-field results are bit-identical to running the sub-programs
+    alone for the same superstep count.
+
+    Sub-program combines must come from `kernels.ops.MULTI_COMBINES`
+    ("min" | "sum" | "hindex" — "count_common" exchanges whole rows,
+    which would defeat the shared gather).  Halting: a fused step runs
+    until EVERY sub-program's `changed` goes quiet (OR reduction) or
+    `max_steps` supersteps ran; include a fixed-iteration sub-program
+    (e.g. `PageRankProgram(tol=None)`) and the loop runs exactly
+    `max_steps` supersteps, during which already-converged min-style
+    sub-programs idle at their fixpoints (their updates are idempotent).
+    """
+
+    combine = "multi"
+
+    def __init__(self, programs: Tuple[BlockProgram, ...],
+                 max_steps: int = 10_000):
+        from ..kernels.ops import MULTI_COMBINES  # cycle-free late import
+        programs = tuple(programs)
+        if not programs:
+            raise ValueError("MultiProgram needs at least one sub-program")
+        for p in programs:
+            if p.combine not in MULTI_COMBINES:
+                raise ValueError(
+                    f"sub-program combine {p.combine!r} not fusable; "
+                    f"expected one of {MULTI_COMBINES}")
+        self.programs = programs
+        self.combines: Tuple[str, ...] = tuple(p.combine for p in programs)
+        self.halo_fill = tuple(p.halo_fill for p in programs)
+        self.max_steps = int(max_steps)
+
+    def _key(self):
+        return (self.programs, self.max_steps)
+
+    def init(self, g: GraphBlocks) -> Tuple[Any, ...]:
+        return tuple(p.init(g) for p in self.programs)
+
+    def halo_field(self, state: Tuple[Any, ...]) -> Tuple[jax.Array, ...]:
+        return tuple(p.halo_field(s) for p, s in zip(self.programs, state))
+
+    def update(self, ctx: "BlockCtx", state: Tuple[Any, ...],
+               red: Tuple[jax.Array, ...]) -> Tuple[Any, ...]:
+        return tuple(
+            p.update(ctx, s, r)
+            for p, s, r in zip(self.programs, state, red))
+
+    def changed(self, old: Tuple[Any, ...],
+                new: Tuple[Any, ...]) -> jax.Array:
+        out = jnp.bool_(False)
+        for p, o, n in zip(self.programs, old, new):
+            out = out | p.changed(o, n)
         return out
 
 

@@ -10,6 +10,14 @@ fixed-capacity, padded array shard:
 - Adjacency is **ELL-padded**: ``nbr[N_pad, Cd]`` holds global padded
   neighbor ids, ``-1`` for padding.  Undirected edges are stored twice (once
   per endpoint), matching the degree semantics of the paper.
+- Rows obey the **sorted-ELL invariant**: the valid slots of every row are
+  in strictly ascending id order and the ``-1`` pads sit on the right
+  (``nbr[u, :deg[u]]`` ascending, ``nbr[u, deg[u]:] == PAD``).  Every
+  construction and mutation path (`build_blocks`, `build_ell_random`,
+  `insert_edge`, `delete_edge`, `apply_updates_host`, `migrate_vertices`)
+  maintains it, so sorted rows are the *canonical* form: the host and jitted
+  update paths produce bit-identical arrays, and kernels may binary-search
+  or merge-intersect neighbor rows instead of scanning them linearly.
 - All shapes are static (``jit``/``shard_map`` friendly).  Capacity overflow
   is checked at the host boundary (`build_blocks`, `apply_updates_host`) and
   raises — the TPU path never reallocates.
@@ -29,6 +37,22 @@ import jax.numpy as jnp
 import numpy as np
 
 PAD = -1  # padding sentinel for neighbor slots / node ids
+
+#: sort key for PAD slots — larger than any node id, so an ascending sort
+#: leaves valid ids first (in order) and pads on the right
+_PAD_KEY = np.iinfo(np.int32).max
+
+
+def sort_nbr_rows(nbr: np.ndarray) -> np.ndarray:
+    """Canonicalize ELL rows to the sorted-ELL invariant (host-side).
+
+    Maps pads to +inf (int32 max), sorts each row ascending, and maps the
+    pads back — valid slots end up ascending with pads on the right.  A
+    no-op on rows that already satisfy the invariant.
+    """
+    keyed = np.where(nbr >= 0, nbr, _PAD_KEY)
+    keyed = np.sort(keyed, axis=-1)
+    return np.where(keyed == _PAD_KEY, PAD, keyed).astype(nbr.dtype)
 
 
 @jax.tree_util.register_dataclass
@@ -169,6 +193,7 @@ def build_blocks(
         fill[na] += 1
         nbr[nb_, fill[nb_]] = na
         fill[nb_] += 1
+    nbr = sort_nbr_rows(nbr)  # establish the sorted-ELL invariant
     node_mask = old_of_new >= 0
 
     return GraphBlocks(
@@ -241,6 +266,7 @@ def build_ell_random(
         nbr[av, deg[av] + ranks[len(au):]] = au
         np.add.at(deg, np.concatenate([au, av]), 1)
         pending = pending[~ok]
+    nbr = sort_nbr_rows(nbr)  # establish the sorted-ELL invariant
     return GraphBlocks(
         nbr=jnp.asarray(nbr), deg=jnp.asarray(deg, jnp.int32),
         node_mask=jnp.ones(N, bool),
@@ -338,9 +364,10 @@ def migrate_vertices(g: GraphBlocks, moves, *arrays):
     inv = np.empty(N, dtype=np.int64)
     inv[perm] = np.arange(N)
     remap_vals = np.where(nbr >= 0, perm[np.maximum(nbr, 0)], PAD)
+    # remapping ids scrambles in-row order; re-sort to keep the invariant
     g2 = dataclasses.replace(
         g,
-        nbr=jnp.asarray(remap_vals[inv], jnp.int32),
+        nbr=jnp.asarray(sort_nbr_rows(remap_vals[inv]), jnp.int32),
         deg=jnp.asarray(np.asarray(g.deg)[inv], jnp.int32),
         node_mask=jnp.asarray(mask[inv]),
         orig_id=jnp.asarray(np.asarray(g.orig_id)[inv], jnp.int32),
@@ -364,8 +391,31 @@ def to_networkx_edges(g: GraphBlocks) -> np.ndarray:
 
 # ---------------------------------------------------------------------------
 # Single-edge jitted updates (the maintenance hot path: paper measures
-# per-edge insertion/deletion latency).
+# per-edge insertion/deletion latency).  Both preserve the sorted-ELL
+# invariant: insertion shifts the row right at the sorted position,
+# deletion shifts it left over the hole.  O(Cd) vectorized per row — the
+# static row shape means the shift compiles to a single select, no
+# data-dependent control flow.
 # ---------------------------------------------------------------------------
+
+
+def _sorted_insert_row(row: jax.Array, val: jax.Array) -> jax.Array:
+    """Insert `val` into a sorted ELL row, keeping valid slots ascending."""
+    key = jnp.where(row >= 0, row, _PAD_KEY)
+    pos = jnp.sum(key < val)  # insertion point among the valid prefix
+    idx = jnp.arange(row.shape[0])
+    shifted = row[jnp.maximum(idx - 1, 0)]  # row shifted right by one
+    return jnp.where(idx < pos, row, jnp.where(idx == pos, val, shifted))
+
+
+def _sorted_delete_row(row: jax.Array, val: jax.Array, deg: jax.Array):
+    """Remove `val` from a sorted ELL row, shifting left over the hole."""
+    C = row.shape[0]
+    pos = jnp.argmax(row == val)
+    idx = jnp.arange(C)
+    shifted = row[jnp.minimum(idx + 1, C - 1)]  # row shifted left by one
+    out = jnp.where(idx >= pos, shifted, row)
+    return out.at[deg - 1].set(PAD)  # deg is the pre-delete degree
 
 
 @jax.jit
@@ -377,25 +427,19 @@ def insert_edge(g: GraphBlocks, u: jax.Array, v: jax.Array) -> GraphBlocks:
     self-loops per the module invariant; duplicates would corrupt degree
     counts).  The TPU path itself never branches on those conditions.
     """
-    nbr = g.nbr.at[u, g.deg[u]].set(v.astype(g.nbr.dtype))
-    nbr = nbr.at[v, g.deg[v]].set(u.astype(g.nbr.dtype))
+    vd = v.astype(g.nbr.dtype)
+    ud = u.astype(g.nbr.dtype)
+    nbr = g.nbr.at[u].set(_sorted_insert_row(g.nbr[u], vd))
+    nbr = nbr.at[v].set(_sorted_insert_row(nbr[v], ud))
     deg = g.deg.at[u].add(1).at[v].add(1)
     return dataclasses.replace(g, nbr=nbr, deg=deg)
 
 
 @jax.jit
 def delete_edge(g: GraphBlocks, u: jax.Array, v: jax.Array) -> GraphBlocks:
-    """Delete undirected edge (u, v) — swap-with-last in both rows."""
-
-    def drop(nbr, deg, a, b):
-        row = nbr[a]
-        pos = jnp.argmax(row == b)
-        last = deg[a] - 1
-        row = row.at[pos].set(row[last]).at[last].set(PAD)
-        return nbr.at[a].set(row)
-
-    nbr = drop(g.nbr, g.deg, u, v)
-    nbr = drop(nbr, g.deg, v, u)
+    """Delete undirected edge (u, v) — shift-left in both sorted rows."""
+    nbr = g.nbr.at[u].set(_sorted_delete_row(g.nbr[u], v, g.deg[u]))
+    nbr = nbr.at[v].set(_sorted_delete_row(nbr[v], u, g.deg[v]))
     deg = g.deg.at[u].add(-1).at[v].add(-1)
     return dataclasses.replace(g, nbr=nbr, deg=deg)
 

@@ -93,8 +93,31 @@ def sample_deletions(
     return [(int(src[i]), int(dst[i]), -1) for i in idx]
 
 
+def _insert_sorted(nbr: np.ndarray, deg: np.ndarray, u: int, v: int) -> None:
+    """Splice v into row u at its sorted position (sorted-ELL invariant)."""
+    d = deg[u]
+    pos = int(np.searchsorted(nbr[u, :d], v))
+    nbr[u, pos + 1:d + 1] = nbr[u, pos:d]
+    nbr[u, pos] = v
+    deg[u] += 1
+
+
+def _delete_sorted(nbr: np.ndarray, deg: np.ndarray, u: int, v: int) -> None:
+    """Remove v from row u, shifting left over the hole (invariant kept)."""
+    d = deg[u]
+    pos = int(np.searchsorted(nbr[u, :d], v))
+    nbr[u, pos:d - 1] = nbr[u, pos + 1:d]
+    nbr[u, d - 1] = PAD
+    deg[u] -= 1
+
+
 def apply_updates_host(g: GraphBlocks, updates: List[Update]) -> GraphBlocks:
-    """Apply updates with host-side validation (capacity, dup, existence)."""
+    """Apply updates with host-side validation (capacity, dup, existence).
+
+    Produces the same sorted canonical rows as the jitted
+    `insert_edge`/`delete_edge` path, so replaying a batch through either
+    path yields bit-identical `nbr` arrays.
+    """
     deg = np.asarray(g.deg).copy()
     nbr = np.asarray(g.nbr).copy()
     for u, v, op in updates:
@@ -110,21 +133,13 @@ def apply_updates_host(g: GraphBlocks, updates: List[Update]) -> GraphBlocks:
                 raise ValueError(f"edge ({u},{v}) already present")
             if deg[u] >= g.Cd or deg[v] >= g.Cd:
                 raise ValueError(f"degree capacity Cd={g.Cd} exceeded at ({u},{v})")
-            nbr[u, deg[u]] = v
-            nbr[v, deg[v]] = u
-            deg[u] += 1
-            deg[v] += 1
+            _insert_sorted(nbr, deg, u, v)
+            _insert_sorted(nbr, deg, v, u)
         else:
             if not (nbr[u] == v).any():
                 raise ValueError(f"edge ({u},{v}) not present")
-            pu = int(np.argmax(nbr[u] == v))
-            nbr[u, pu] = nbr[u, deg[u] - 1]
-            nbr[u, deg[u] - 1] = PAD
-            pv = int(np.argmax(nbr[v] == u))
-            nbr[v, pv] = nbr[v, deg[v] - 1]
-            nbr[v, deg[v] - 1] = PAD
-            deg[u] -= 1
-            deg[v] -= 1
+            _delete_sorted(nbr, deg, u, v)
+            _delete_sorted(nbr, deg, v, u)
     import dataclasses
 
     return dataclasses.replace(

@@ -16,9 +16,11 @@ from .ell_frontier import frontier_step_ell
 from .ell_cc import neighbor_min_ell
 from .ell_pagerank import neighbor_sum_ell
 from .ell_triangles import neighbor_common_ell
+from .ell_multi import neighbor_multi_ell
 
 __all__ = [
     "ops", "ref", "hindex_counts", "frontier_step",
     "hindex_ell", "frontier_step_ell",
     "neighbor_min_ell", "neighbor_sum_ell", "neighbor_common_ell",
+    "neighbor_multi_ell",
 ]

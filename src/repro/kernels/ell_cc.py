@@ -10,10 +10,19 @@ tiling:
     nbr[N, Cd]   int32   padded neighbor ids (-1 = empty slot)
     field[N]     int32   current labels (component = min member id)
 
-Per row tile of T nodes (grid axis i):
-  1. gather   vals[t, j] = field[nbr[t, j]]     (PAD slots -> int32 max,
-              the min-combine's absorbing fill)
-  2. reduce   out[t] = min_j vals[t, j]
+Per row tile of T nodes (grid axis i), a chunked, double-buffered sweep
+over the neighbor slots:
+  1. trip bound  the sweep **early-exits** at the highest occupied column
+                 of the tile — the sorted-ELL invariant (`core.graph`)
+                 keeps pads on the right, so column occupancy is monotone
+                 and `ceil(maxcol / chunk)` trips cover every valid slot;
+  2. gather      each trip pulls a (T, chunk) slot slice and gathers
+                 `field[idx]` (PAD slots -> int32 max, the min-combine's
+                 absorbing fill) — the *next* trip's gather is issued
+                 before the current trip's reduce consumes its values
+                 (software double-buffering: on TPU the DMA for trip j+1
+                 overlaps the VPU reduce of trip j);
+  3. reduce      out[t] = min over trips and chunk slots.
 
 Rows with no valid slots reduce to int32 max — `BlockProgram.update`
 takes `min(own, red)`, so the fill is harmless by construction.  A
@@ -35,24 +44,44 @@ from ._compat import CompilerParams as _CompilerParams
 #: absorbing fill for the min combine (what PAD slots read as)
 MIN_FILL = jnp.iinfo(jnp.int32).max
 
+#: neighbor slots gathered per trip (divides 128, so any padded column
+#: count is a multiple of it)
+CHUNK = 8
 
-def _ell_min_kernel(nbr_ref, field_ref, out_ref, *, T: int):
+
+def _ell_min_kernel(nbr_ref, field_ref, out_ref, *, C: int, T: int, chunk: int):
     nbr = nbr_ref[...]  # (T, C) int32, -1 padded
-    vals = jnp.where(
-        nbr >= 0,
-        jnp.take(field_ref[0], jnp.clip(nbr, 0), axis=0),
-        MIN_FILL,
-    )
-    out_ref[...] = jnp.min(vals, axis=1, keepdims=True)
+    field = field_ref[0]
+
+    def gather(j):  # values of slot chunk j, PAD -> absorbing fill
+        idx = jax.lax.dynamic_slice(nbr, (0, j * chunk), (T, chunk))
+        vals = jnp.take(field, jnp.clip(idx, 0).reshape(-1), axis=0)
+        return jnp.where(idx >= 0, vals.reshape(T, chunk), MIN_FILL)
+
+    def body(j, carry):
+        acc, cur = carry
+        nxt = gather(j + 1)  # prefetch j+1 before reducing j (double buffer)
+        return jnp.minimum(acc, jnp.min(cur, axis=1)), nxt
+
+    # early exit: pad-right rows ⇒ columns past the highest occupied one
+    # are all PAD, so ceil(maxcol/chunk) trips suffice
+    cols_any = jnp.any(nbr >= 0, axis=0)
+    maxcol = jnp.max(jnp.where(cols_any, jnp.arange(C, dtype=jnp.int32) + 1, 0))
+    trips = (maxcol + chunk - 1) // chunk
+
+    acc0 = jnp.full((T,), MIN_FILL, jnp.int32)
+    acc, _ = jax.lax.fori_loop(0, trips, body, (acc0, gather(0)))
+    out_ref[...] = acc[:, None]
 
 
-@functools.partial(jax.jit, static_argnames=("K", "T", "interpret"))
+@functools.partial(jax.jit, static_argnames=("K", "T", "interpret", "chunk"))
 def neighbor_min_ell(
     nbr: jax.Array,
     field: jax.Array,
     K: int,
     T: int = 256,
     interpret: bool = True,
+    chunk: int = CHUNK,
 ) -> jax.Array:
     """Row-wise min of neighbor field values over the ELL adjacency.
 
@@ -67,10 +96,11 @@ def neighbor_min_ell(
     assert N % T == 0, (N, T)
     assert Cd % 128 == 0 and K % 128 == 0, (Cd, K)
     C = min(Cd, K)
+    assert C % chunk == 0, (C, chunk)
     ni = N // T
 
     out = pl.pallas_call(
-        functools.partial(_ell_min_kernel, T=T),
+        functools.partial(_ell_min_kernel, C=C, T=T, chunk=chunk),
         grid=(ni,),
         in_specs=[
             pl.BlockSpec((T, C), lambda i: (i, 0)),  # neighbor-list row tile

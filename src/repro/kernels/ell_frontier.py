@@ -14,14 +14,19 @@ dense kernel, `eligible` here carries a per-frontier column axis — batched
 maintenance stacks updates with *different* k values, so each column has its
 own k-level eligibility mask.
 
-Grid: row tiles i; per tile a `fori_loop` over CHUNKS of `chunk` neighbor
+Grid: row tiles i; per tile a `fori_loop` over chunks of `chunk` neighbor
 slots gathers `T*chunk` frontier rows at once (`jnp.take`, see the lowering
 note in ell_hindex.py) and ORs the chunk-reduced (T, R) hit mask into a
 register accumulator — Cd/chunk gather launches instead of Cd single-slot
-gathers, amortizing the per-gather latency.  Like the h-index kernel, a
-max-degree column bound K < Cd (left-filled rows, see `ops.degree_bound`)
-restricts the sweep to the first K slots.  The eligibility/visited epilogue
-is fused (no HBM round-trip).  Validated in interpret mode against
+gathers, amortizing the per-gather latency.  The sweep **early-exits** at
+the highest occupied column of the tile (the sorted-ELL invariant of
+`core.graph` keeps pads on the right, so column occupancy is monotone),
+and is **double-buffered**: the gather for chunk j+1 is issued before the
+reduce of chunk j consumes its rows, so on TPU the next DMA overlaps the
+current VPU reduction.  Like the h-index kernel, a max-degree column bound
+K < Cd (left-filled rows, see `ops.degree_bound`) restricts the sweep to
+the first K slots.  The eligibility/visited epilogue is fused (no HBM
+round-trip).  Validated in interpret mode against
 `ref.ell_frontier_hop_ref`.
 """
 from __future__ import annotations
@@ -45,14 +50,24 @@ def _ell_frontier_kernel(
     f_full = f_ref[...]  # (N, R) int8
     R = f_full.shape[1]
 
-    def body(j, acc):
+    def gather(j):  # slot ids + frontier rows of chunk j
         idx = jax.lax.dynamic_slice(nbr, (0, j * chunk), (T, chunk))  # (T, c)
         rows = jnp.take(f_full, jnp.clip(idx, 0).reshape(-1), axis=0)
-        rows = rows.reshape(T, chunk, R)  # (T, c, R)
-        hit = jnp.any((rows > 0) & (idx >= 0)[:, :, None], axis=1)  # (T, R)
-        return acc | hit
+        return idx, rows.reshape(T, chunk, R)  # (T, c, R)
 
-    hit = jax.lax.fori_loop(0, C // chunk, body, jnp.zeros((T, R), jnp.bool_))
+    def body(j, carry):
+        acc, (idx, rows) = carry
+        nxt = gather(j + 1)  # prefetch j+1 before reducing j (double buffer)
+        hit = jnp.any((rows > 0) & (idx >= 0)[:, :, None], axis=1)  # (T, R)
+        return acc | hit, nxt
+
+    # early exit: pad-right rows ⇒ ceil(maxcol/chunk) trips cover all slots
+    cols_any = jnp.any(nbr >= 0, axis=0)
+    maxcol = jnp.max(jnp.where(cols_any, jnp.arange(C, dtype=jnp.int32) + 1, 0))
+    trips = (maxcol + chunk - 1) // chunk
+
+    hit, _ = jax.lax.fori_loop(
+        0, trips, body, (jnp.zeros((T, R), jnp.bool_), gather(0)))
     out_ref[...] = (
         hit & (elig_ref[...] > 0) & ~(vis_ref[...] > 0)
     ).astype(jnp.int8)

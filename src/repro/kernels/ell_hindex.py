@@ -23,12 +23,14 @@ Per row tile of T nodes (grid axis i), two interchangeable variants:
     work per node — the asymptotic gap the sort variant removes.
 
 Threshold/sort bound K: because h(u) <= deg(u) <= Cd, any K >= max degree
-is exact *when the rows are left-filled* (valid slots before PAD slots —
-the `GraphBlocks` invariant: `build_blocks` fills sequentially,
-`insert_edge` appends at deg[u], `delete_edge` swaps-with-last).  Callers
-that can bound the max degree (see `ops.degree_bound`) pass K < Cd and the
-kernel reads/sorts only the first K neighbor columns; K = Cd is always
-safe and assumes nothing about slot order.
+is exact *when the rows are left-filled* (valid slots before PAD slots).
+The `GraphBlocks` **sorted-ELL invariant** implies left-filling: every
+construction/mutation path (`build_blocks`, `insert_edge`'s sorted-position
+shift-right, `delete_edge`'s shift-left, `migrate_vertices`' re-sort)
+keeps valid slots ascending with pads on the right.  Callers that can
+bound the max degree (see `ops.degree_bound`) pass K < Cd and the kernel
+reads/sorts only the first K neighbor columns; K = Cd is always safe and
+assumes nothing about slot order.
 
 Memory: O(N*K) for the neighbor lists + O(N) for estimates, vs O(N^2) for
 the dense path.  The full `est` vector rides along in VMEM ((1, N) int32 —

@@ -12,17 +12,29 @@ global padded ids work unchanged whether the neighbor rows arrive from
 the local matrix (this kernel) or from a halo exchange (the ell_spmd
 path, where `ref.common_rows` reduces the halo-served (S, Cd, Cd) rows).
 
-Per row tile of T nodes (grid axis i), a `fori_loop` over the C neighbor
-slots: slot j gathers the j-th neighbor's full row from the resident
-(N, C) row matrix and scores the (T, C, C) all-pairs id match against the
-tile's own rows — PAD entries (-1) are masked on both sides, and slots
-with no neighbor contribute nothing.  O(N * Cd^3) work and O(N * Cd)
-memory: the classic set-intersection cost without ever densifying, the
-same trade the dense backend's diag(A^3) matmul makes at O(N^2) memory.
+Two variants (`VARIANTS`):
 
-A max-degree column bound K < Cd (left-filled rows, `ops.degree_bound`)
-bounds BOTH sides of the intersection — the swept slots and the row
-columns compared — which cubes the savings.  Validated in interpret mode
+``merge`` (default) — exploits the **sorted-ELL invariant** (`core.graph`):
+  every row's valid slots ascend with pads on the right, so after keying
+  pads to int32-max each row is monotone and membership is a binary
+  search.  Per swept slot j the kernel gathers the neighbor's keyed row
+  and locates every element of the tile's own rows with ceil(log2 C)
+  vectorized lo/hi probe rounds (`take_along_axis` over the (T, C) mid
+  matrix) — O(N * Cd^2 * log Cd) work instead of the all-pairs cube, and
+  the probes are full-tile vector ops, not scalar loops.  The slot sweep
+  early-exits at the highest occupied column of the tile (pad-right rows
+  make column occupancy monotone).  The ops.py wrapper re-keys + sorts
+  the row field on the way in, which is a no-op permutation under the
+  invariant but makes the kernel correct for arbitrary slot orders too.
+
+``allpairs`` — the legacy O(N * Cd^3) formulation: per swept slot a
+  (T, C, C) all-pairs id match against the tile's own rows, PAD masked on
+  both sides.  Kept as the measuring stick for the merge speedup and as
+  the fallback that assumes nothing about slot order.
+
+Both variants: O(N * Cd) memory (never densifies), a max-degree column
+bound K < Cd (left-filled rows, `ops.degree_bound`) restricts both the
+swept slots and the compared columns.  Validated in interpret mode
 against `ref.ell_common_ref`.
 """
 from __future__ import annotations
@@ -34,8 +46,64 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from ._compat import CompilerParams as _CompilerParams
 
+#: intersection variants: sorted binary-probe merge vs legacy all-pairs
+VARIANTS = ("merge", "allpairs")
 
-def _ell_common_kernel(nbr_ref, own_ref, rows_ref, out_ref, *, C: int, T: int):
+#: key pads sort/compare above every real id (ids are < N <= int32 max)
+_PAD_KEY = jnp.iinfo(jnp.int32).max
+
+
+def _occupied_cols(nbr, C):
+    """Highest occupied column + 1 of a (T, C) tile (0 if all-pad)."""
+    cols_any = jnp.any(nbr >= 0, axis=0)
+    return jnp.max(jnp.where(cols_any, jnp.arange(C, dtype=jnp.int32) + 1, 0))
+
+
+def _ell_merge_kernel(nbr_ref, own_ref, rows_ref, out_ref, *, C: int, T: int):
+    nbr = nbr_ref[...]    # (T, C) int32 neighbor ids, -1 padded
+    own = own_ref[...]    # (T, C) int32 keyed sorted rows (pads = _PAD_KEY)
+    rows = rows_ref[...]  # (N, C) int32 keyed sorted row matrix
+    own_ok = own != _PAD_KEY
+    # lower-bound bisect needs the [lo, hi) interval to close to length 0,
+    # i.e. ceil(log2 C) + 1 = C.bit_length() rounds for C a power of two
+    n_bits = max(1, C.bit_length())
+
+    def body(j, acc):
+        col = jax.lax.dynamic_slice(nbr, (0, j), (T, 1))[:, 0]      # (T,)
+        v_row = jnp.take(rows, jnp.clip(col, 0), axis=0)             # (T, C)
+
+        # vectorized lower/upper-bound bisect of every own[t, i] in
+        # v_row[t, :]; ub - lb = occurrence count, so duplicate ids (legal
+        # in raw ELL fields, not in validated graphs) score like all-pairs
+        def probe(_, st):
+            lb_lo, lb_hi, ub_lo, ub_hi = st
+            mid_l = (lb_lo + lb_hi) >> 1
+            mv_l = jnp.take_along_axis(v_row, jnp.clip(mid_l, 0, C - 1), axis=1)
+            right_l = mv_l < own
+            mid_u = (ub_lo + ub_hi) >> 1
+            mv_u = jnp.take_along_axis(v_row, jnp.clip(mid_u, 0, C - 1), axis=1)
+            right_u = mv_u <= own
+            return (
+                jnp.where(right_l, mid_l + 1, lb_lo),
+                jnp.where(right_l, lb_hi, mid_l),
+                jnp.where(right_u, mid_u + 1, ub_lo),
+                jnp.where(right_u, ub_hi, mid_u),
+            )
+
+        zeros = jnp.zeros((T, C), jnp.int32)
+        full = jnp.full((T, C), C, jnp.int32)
+        lb, _, ub, _ = jax.lax.fori_loop(
+            0, n_bits, probe, (zeros, full, zeros, full))
+        occ = jnp.where(own_ok, ub - lb, 0)
+        cnt = jnp.sum(occ, axis=1)                                   # (T,)
+        return acc + jnp.where(col >= 0, cnt, 0)
+
+    jmax = _occupied_cols(nbr, C)  # early exit: pad-right ⇒ slots ≥ jmax empty
+    red = jax.lax.fori_loop(0, jmax, body, jnp.zeros((T,), jnp.int32))
+    out_ref[...] = red[:, None]
+
+
+def _ell_allpairs_kernel(nbr_ref, own_ref, rows_ref, out_ref, *, C: int, T: int):
     nbr = nbr_ref[...]    # (T, C) int32 neighbor ids, -1 padded
     own = own_ref[...]    # (T, C) int32 this tile's exchanged rows
     rows = rows_ref[...]  # (N, C) int32 full row matrix (the field)
@@ -56,13 +124,15 @@ def _ell_common_kernel(nbr_ref, own_ref, rows_ref, out_ref, *, C: int, T: int):
     out_ref[...] = red[:, None]
 
 
-@functools.partial(jax.jit, static_argnames=("K", "T", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("K", "T", "interpret", "variant"))
 def neighbor_common_ell(
     nbr: jax.Array,
     rows: jax.Array,
     K: int,
     T: int = 256,
     interpret: bool = True,
+    variant: str = "merge",
 ) -> jax.Array:
     """Directed common-neighbor counts over the ELL adjacency.
 
@@ -72,16 +142,30 @@ def neighbor_common_ell(
     K >= Cd, or K < Cd on left-filled rows).  Returns (N,) int32:
     red[u] = sum_j |rows[u] ∩ rows[nbr[u, j]]| over valid slots j.
     N % T == 0 and Cd, K multiples of 128 (pad via the ops.py wrapper).
+
+    variant="merge" canonicalizes the row field (key pads to int32-max,
+    sort ascending — a no-op under the sorted-ELL invariant) and binary-
+    probes memberships; "allpairs" is the legacy cubic match.  Counts are
+    intersection sizes, so both variants are bit-identical.
     """
     N, Cd = nbr.shape
     assert rows.shape == (N, Cd), (rows.shape, nbr.shape)
     assert N % T == 0, (N, T)
     assert Cd % 128 == 0 and K % 128 == 0, (Cd, K)
+    assert variant in VARIANTS, variant
     C = min(Cd, K)
     ni = N // T
 
+    if variant == "merge":
+        kernel = functools.partial(_ell_merge_kernel, C=C, T=T)
+        field = jnp.sort(
+            jnp.where(rows[:, :C] >= 0, rows[:, :C], _PAD_KEY), axis=1)
+    else:
+        kernel = functools.partial(_ell_allpairs_kernel, C=C, T=T)
+        field = rows[:, :C]
+
     out = pl.pallas_call(
-        functools.partial(_ell_common_kernel, C=C, T=T),
+        kernel,
         grid=(ni,),
         in_specs=[
             pl.BlockSpec((T, C), lambda i: (i, 0)),  # neighbor-id row tile
@@ -94,5 +178,5 @@ def neighbor_common_ell(
             dimension_semantics=("arbitrary",)
         ),
         interpret=interpret,
-    )(nbr[:, :C], rows[:, :C], rows[:, :C])
+    )(nbr[:, :C], field, field)
     return out[:, 0]

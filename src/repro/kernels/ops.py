@@ -76,7 +76,11 @@ from .ell_hindex import hindex_ell as _hindex_ell_pallas
 from .ell_frontier import frontier_step_ell as _frontier_ell_pallas
 from .ell_cc import MIN_FILL, neighbor_min_ell as _min_ell_pallas
 from .ell_pagerank import neighbor_sum_ell as _sum_ell_pallas
-from .ell_triangles import neighbor_common_ell as _common_ell_pallas
+from .ell_triangles import (
+    VARIANTS as TRIANGLE_VARIANTS,
+    neighbor_common_ell as _common_ell_pallas,
+)
+from .ell_multi import neighbor_multi_ell as _multi_ell_pallas
 
 BACKENDS = ("jnp", "dense", "ell", "ell_spmd")
 
@@ -85,9 +89,22 @@ BACKENDS = ("jnp", "dense", "ell", "ell_spmd")
 #: post-halo `ref.combine_rows` on the mesh)
 COMBINES = ("min", "sum", "hindex", "count_common")
 
+#: combines a fused MultiProgram superstep may bundle (ell_multi.py); the
+#: meta-combine name "multi" dispatches to the fused shared-gather paths
+MULTI_COMBINES = ("min", "sum", "hindex")
+
 #: auto picks the dense MXU path up to this many (padded) nodes; beyond it
 #: the O(N^2) adjacency dominates memory and ELL wins (see EXPERIMENTS.md).
 DENSE_AUTO_MAX = 4096
+
+#: measured on-TPU crossover for "auto" (see EXPERIMENTS.md §Backends):
+#: below JNP_AUTO_MAX padded nodes the plain-XLA superstep beats the Pallas
+#: paths — the committed CPU sweep shows the same shape (superstep at
+#: N=256: jnp 1437us vs ell 2545us vs dense 6670us), and on TPU the kernel
+#: launch + pad overhead dominates tiles this small.  Entries are
+#: (inclusive N upper bound, backend); None = no bound.
+AUTO_CROSSOVER = ((512, "jnp"), (DENSE_AUTO_MAX, "dense"), (None, "ell"))
+JNP_AUTO_MAX = AUTO_CROSSOVER[0][0]
 
 
 def _on_tpu() -> bool:
@@ -118,11 +135,19 @@ def _tile_dims(N: int, T: int) -> tuple:
 
 
 def resolve_backend(backend: Optional[str], N: int) -> str:
-    """Resolve "auto" (or None) to a concrete backend name for a graph size."""
+    """Resolve "auto" (or None) to a concrete backend name for a graph size.
+
+    Off-TPU, always jnp (Pallas would run interpreted).  On TPU the
+    `AUTO_CROSSOVER` table applies: jnp up to JNP_AUTO_MAX padded nodes
+    (small tiles lose more to kernel launch + padding than they gain),
+    dense while the O(N^2) adjacency stays affordable, ell beyond.
+    """
     if backend in (None, "auto"):
         if not _on_tpu():
             return "jnp"  # Pallas would run interpreted — jnp is the fast path
-        return "dense" if N <= DENSE_AUTO_MAX else "ell"
+        for bound, b in AUTO_CROSSOVER:
+            if bound is None or N <= bound:
+                return b
     if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; expected one of "
                          f"{BACKENDS + ('auto',)}")
@@ -413,6 +438,7 @@ def neighbor_common_ell(
     T: int = 256,
     interpret: Optional[bool] = None,
     K: Optional[int] = None,
+    variant: str = "merge",
 ) -> jax.Array:
     """Directed common-neighbor counts via the ELL intersection kernel.
 
@@ -420,14 +446,52 @@ def neighbor_common_ell(
     per-node row field intersected (identical for whole-graph use).
     Returns (N,) int32: red[u] = sum_j |rows[u] ∩ rows[nbr[u, j]]|.
     K bounds BOTH column axes (left-filled rows required for K < Cd).
+
+    variant="merge" (default) is the O(N*Cd^2*log Cd) sorted binary-probe
+    intersection — the kernel canonicalizes the row field on the way in
+    (a no-op under the sorted-ELL invariant), so it is exact for ANY slot
+    order; "allpairs" keeps the legacy O(N*Cd^3) match for the benchmark
+    sweep.  Both are bit-identical to `ref.ell_common_ref`.
     """
     N, _ = nbr.shape
     if interpret is None:
         interpret = not _on_tpu()
     nbr_p, Ck, Tp, Np = _pad_ell(nbr, K, T)
     rows_p, _, _, _ = _pad_ell(rows, K, T)
-    red = _common_ell_pallas(nbr_p, rows_p, K=Ck, T=Tp, interpret=interpret)
+    red = _common_ell_pallas(nbr_p, rows_p, K=Ck, T=Tp, interpret=interpret,
+                             variant=variant)
     return red[:N]
+
+
+def neighbor_multi_ell(
+    nbr: jax.Array,
+    fields: Tuple[jax.Array, ...],
+    combines: Tuple[str, ...],
+    T: int = 256,
+    interpret: Optional[bool] = None,
+    K: Optional[int] = None,
+) -> Tuple[jax.Array, ...]:
+    """Fused multi-field neighbor reduce — ONE adjacency read for k fields.
+
+    nbr: (N, Cd) int32 (-1 padded); fields: one (N,) vector per combine;
+    combines: static tuple from `MULTI_COMBINES`.  Pads once and serves
+    every field's gather + reduce off the shared neighbor-slot indices
+    (`ell_multi.py`); each output is bit-identical to its standalone
+    kernel.  K optionally bounds the swept columns (left-filled rows).
+    """
+    from .ell_cc import MIN_FILL as _MF  # local alias; fills per combine
+    N, _ = nbr.shape
+    if interpret is None:
+        interpret = not _on_tpu()
+    nbr_p, Ck, Tp, Np = _pad_ell(nbr, K, T)
+    fills = {"min": _MF, "sum": 0.0, "hindex": -1}
+    dtypes = {"min": jnp.int32, "sum": jnp.float32, "hindex": jnp.int32}
+    fields_p = tuple(
+        jnp.full((Np,), fills[c], dtypes[c]).at[:N].set(f.astype(dtypes[c]))
+        for c, f in zip(combines, fields))
+    reds = _multi_ell_pallas(
+        nbr_p, fields_p, tuple(combines), K=Ck, T=Tp, interpret=interpret)
+    return tuple(r[:N] for r in reds)
 
 
 # ---------------------------------------------------------------------------
@@ -669,6 +733,70 @@ def _combine_dense(adj: jax.Array, field: jax.Array, combine: str,
     raise ValueError(f"unknown combine {combine!r}; expected one of {COMBINES}")
 
 
+# ---------------------------------------------------------------------------
+# Fused multi-combine executions (MultiProgram: one adjacency read serves
+# every sub-program's gather) + the trace-time gather accounting that
+# proves it.
+# ---------------------------------------------------------------------------
+
+#: how many adjacency-gather dispatches the program runner has TRACED (not
+#: executed): `_block_program_fused` bumps it once per `red_of` trace, so
+#: lowering a fused MultiProgram superstep counts 1 where lowering its k
+#: sub-programs separately counts k.  Python-side and monotonic; tests
+#: snapshot around an explicit `.lower()` (jit cache hits do not retrace,
+#: hence do not count).
+_GATHER_TRACES = 0
+
+
+def _count_gather() -> None:
+    global _GATHER_TRACES
+    _GATHER_TRACES += 1
+
+
+def gather_trace_count() -> int:
+    """Adjacency-gather dispatches traced so far (see `_GATHER_TRACES`)."""
+    return _GATHER_TRACES
+
+
+def _combine_multi_jnp(nbr: jax.Array, fields, combines) -> Tuple:
+    """Shared-gather multi reduce, pure jnp: one clip/validity, k takes."""
+    valid = nbr >= 0
+    idx = jnp.clip(nbr, 0)
+    outs = []
+    for c, f in zip(combines, fields):
+        if c == "min":
+            vals = jnp.where(valid, f.astype(jnp.int32)[idx], MIN_FILL)
+            outs.append(jnp.min(vals, axis=1))
+        elif c == "sum":
+            vals = jnp.where(valid, f.astype(jnp.float32)[idx], 0.0)
+            outs.append(jnp.sum(vals, axis=1))
+        elif c == "hindex":
+            vals = jnp.where(valid, f.astype(jnp.int32)[idx], -1)
+            outs.append(ref.hindex_rows(vals).astype(jnp.int32))
+        else:
+            raise ValueError(
+                f"combine {c!r} not fusable; expected one of {MULTI_COMBINES}")
+    return tuple(outs)
+
+
+def _combine_multi_ell(nbr: jax.Array, fields, combines,
+                       interpret: Optional[bool], K: Optional[int]) -> Tuple:
+    """Fused multi reduce via the `ell_multi` Pallas kernel."""
+    return neighbor_multi_ell(
+        nbr, tuple(fields), tuple(combines), interpret=interpret, K=K)
+
+
+def _combine_multi_dense(adj: jax.Array, fields, combines, Cd: int) -> Tuple:
+    """Dense multi reduce: per-combine dense forms over one resident adj.
+
+    The dense adjacency is already materialized once for the whole
+    fixpoint, so "one adjacency read" is the resident (N, N) operand —
+    each combine is a separate reduction over it.
+    """
+    return tuple(
+        _combine_dense(adj, f, c, Cd) for c, f in zip(combines, fields))
+
+
 def neighbor_combine_blocks(
     g,  # GraphBlocks (duck-typed: .nbr, .N, .Cd)
     field: jax.Array,
@@ -719,6 +847,14 @@ def _block_program_fused(g, state0, adj, program, b: str, interpret: bool,
                    n_real=n_real)
 
     def red_of(field):
+        _count_gather()  # trace-time accounting: 1 per fused dispatch
+        if program.combine == "multi":
+            if b == "jnp":
+                return _combine_multi_jnp(g.nbr, field, program.combines)
+            if b == "ell":
+                return _combine_multi_ell(g.nbr, field, program.combines,
+                                          interpret, None)
+            return _combine_multi_dense(adj, field, program.combines, g.Cd)
         if b == "jnp":
             return _combine_jnp(g.nbr, field, program.combine)
         if b == "ell":
@@ -769,9 +905,10 @@ def run_block_program(
     superstep count when `with_steps=True`.
     """
     b = resolve_backend(backend, g.N)
-    if program.combine not in COMBINES:
+    if program.combine != "multi" and program.combine not in COMBINES:
         raise ValueError(
-            f"unknown combine {program.combine!r}; expected one of {COMBINES}")
+            f"unknown combine {program.combine!r}; expected one of "
+            f"{COMBINES + ('multi',)}")
     ms = int(program.max_steps if max_steps is None else max_steps)
     n_real = int(g.n_real)  # GraphBlocks property (duck-typed, host sync)
     state0 = program.init(g)

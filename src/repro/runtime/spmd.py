@@ -6,7 +6,12 @@ halo plan baked in:
   W2W   — `_halo_exchange`: gather the send buffers, `lax.all_to_all`
           across the `workers` axis, scatter into the halo buffer; the
           neighbor read is then a purely local gather through the
-          plan's local-frame adjacency.
+          plan's local-frame adjacency.  By default the read is
+          **split-phase** (`_overlap_select`): local slots gather from
+          the field shard without waiting on the collective, only halo
+          slots consume the all_to_all — bit-identical values, zero
+          serialized collective phases per superstep
+          (`SpmdExecutor(overlap=False)` restores strict ordering).
   W2M   — per-block summaries leave the shard through the sharded
           output (an all-gather) or a `lax.psum` for reduced flags.
   M2W   — the master's directive enters the next superstep replicated.
@@ -71,9 +76,35 @@ def _halo_exchange(x_local, send_idx, recv_pos, H: int, fill):
 
 
 def _neighbor_vals(x_local, halo_buf, nbr_local):
-    """Local gather through the plan's local-frame adjacency: (S, Cd, ...)."""
+    """Local gather through the plan's local-frame adjacency: (S, Cd, ...).
+
+    The strict-ordered form: concatenating the halo buffer ahead of the
+    gather makes EVERY neighbor read data-depend on the all_to_all, so
+    the compute phase serializes behind the collective.
+    """
     vals = jnp.concatenate([x_local, halo_buf], axis=0)
     return vals[nbr_local]
+
+
+def _overlap_select(x_local, halo_buf, nbr_local):
+    """Split-phase neighbor read: local slots bypass the halo buffer.
+
+    Local-frame ids < S index this worker's own rows — their values are a
+    pure local gather of `x_local` with NO data dependence on the
+    all_to_all, so the scheduler is free to run that gather while the
+    collective is still in flight; only the halo slots (ids >= S) wait.
+    The select picks, slot for slot, exactly the values the strict
+    concat-gather reads, so both orderings are bit-identical (the
+    poisoned-halo test in tests/test_overlap.py pins the independence).
+    """
+    S = x_local.shape[0]
+    is_local = nbr_local < S
+    local_vals = jnp.take(x_local, jnp.clip(nbr_local, 0, S - 1), axis=0)
+    halo_vals = jnp.take(
+        halo_buf, jnp.clip(nbr_local - S, 0, halo_buf.shape[0] - 1), axis=0)
+    mask = is_local.reshape(
+        is_local.shape + (1,) * (local_vals.ndim - is_local.ndim))
+    return jnp.where(mask, local_vals, halo_vals)
 
 
 def _any_global(x) -> jax.Array:
@@ -81,13 +112,34 @@ def _any_global(x) -> jax.Array:
     return jax.lax.psum(jnp.any(x).astype(jnp.int32), AXIS) > 0
 
 
-def _exchange_gather(field, nbrl, send, recv, H, fill):
+def _exchange_gather(field, nbrl, send, recv, H, fill, overlap: bool = False):
     """W2W exchange + local gather: field (S, ...) -> (S, Cd, ...).
 
     send/recv arrive with their sharded leading worker axis of size 1.
+    `overlap=True` uses the split-phase read (`_overlap_select`): the
+    all_to_all is issued first and only halo slots consume it, local
+    slots gather straight from `field` — same values, one fewer
+    serialized collective phase per superstep.
     """
     halo = _halo_exchange(field, send[0], recv[0], H, fill)
+    if overlap:
+        return _overlap_select(field, halo, nbrl)
     return _neighbor_vals(field, halo, nbrl)
+
+
+def _gather_field(field, nbrl, send, recv, H, fill, overlap: bool):
+    """`_exchange_gather` over a declared halo field, tuple-aware.
+
+    MultiPrograms declare tuple fields/fills (one per fused sub-program);
+    each leaf exchanges with its own fill and dtype.
+    """
+    if isinstance(field, tuple):
+        return tuple(
+            _exchange_gather(f, nbrl, send, recv, H,
+                             jnp.asarray(fl, f.dtype), overlap)
+            for f, fl in zip(field, fill))
+    return _exchange_gather(field, nbrl, send, recv, H,
+                            jnp.asarray(fill, field.dtype), overlap)
 
 
 # ---------------------------------------------------------------------------
@@ -107,26 +159,27 @@ def _smap(fn, mesh, n_lead: int, n_rep: int, out_specs):
 
 
 @functools.lru_cache(maxsize=128)
-def _compiled_hindex(mesh, H: int):
+def _compiled_hindex(mesh, H: int, overlap: bool):
     def local(est, nbrl, send, recv):
-        vals = _exchange_gather(est, nbrl, send, recv, H, jnp.int32(-1))
+        vals = _exchange_gather(est, nbrl, send, recv, H, jnp.int32(-1),
+                                overlap)
         return hindex_rows(vals)
 
     return _smap(local, mesh, 1, 0, P_(AXIS))
 
 
 @functools.lru_cache(maxsize=128)
-def _compiled_frontier(mesh, H: int):
+def _compiled_frontier(mesh, H: int, overlap: bool):
     def local(f, elig, vis, nbrl, send, recv):
         vals = _exchange_gather(
-            f.astype(jnp.int8), nbrl, send, recv, H, jnp.int8(0))
+            f.astype(jnp.int8), nbrl, send, recv, H, jnp.int8(0), overlap)
         return jnp.any(vals > 0, axis=1) & elig & ~vis
 
     return _smap(local, mesh, 3, 0, P_(AXIS))
 
 
 @functools.lru_cache(maxsize=128)
-def _compiled_coreness(mesh, H: int):
+def _compiled_coreness(mesh, H: int, overlap: bool):
     def local(est, mask, max_steps, nbrl, send, recv):
         def cond(c):
             _, changed, it = c
@@ -134,7 +187,8 @@ def _compiled_coreness(mesh, H: int):
 
         def body(c):
             est, _, it = c
-            vals = _exchange_gather(est, nbrl, send, recv, H, jnp.int32(-1))
+            vals = _exchange_gather(est, nbrl, send, recv, H, jnp.int32(-1),
+                                    overlap)
             new = jnp.where(mask, jnp.minimum(est, hindex_rows(vals)), est)
             return new, _any_global(new != est), it + 1
 
@@ -146,7 +200,7 @@ def _compiled_coreness(mesh, H: int):
 
 
 @functools.lru_cache(maxsize=128)
-def _compiled_reach(mesh, H: int):
+def _compiled_reach(mesh, H: int, overlap: bool):
     def local(core, mask, roots, ks, max_steps, nbrl, send, recv):
         elig = (core[:, None] == ks[None, :]) & mask[:, None]
         visited0 = roots & elig
@@ -158,7 +212,8 @@ def _compiled_reach(mesh, H: int):
         def body(c):
             visited, frontier, _, it = c
             vals = _exchange_gather(
-                frontier.astype(jnp.int8), nbrl, send, recv, H, jnp.int8(0))
+                frontier.astype(jnp.int8), nbrl, send, recv, H, jnp.int8(0),
+                overlap)
             nxt = jnp.any(vals > 0, axis=1) & elig & ~visited
             return visited | nxt, nxt, _any_global(nxt), it + 1
 
@@ -171,7 +226,7 @@ def _compiled_reach(mesh, H: int):
 
 
 @functools.lru_cache(maxsize=128)
-def _compiled_recompute(mesh, H: int):
+def _compiled_recompute(mesh, H: int, overlap: bool):
     def local(est, cand, mask, max_steps, nbrl, send, recv):
         move = cand & mask
 
@@ -181,7 +236,8 @@ def _compiled_recompute(mesh, H: int):
 
         def body(c):
             est, _, it = c
-            vals = _exchange_gather(est, nbrl, send, recv, H, jnp.int32(-1))
+            vals = _exchange_gather(est, nbrl, send, recv, H, jnp.int32(-1),
+                                    overlap)
             new = jnp.where(move, jnp.minimum(est, hindex_rows(vals)), est)
             return new, _any_global(new != est), it + 1
 
@@ -213,13 +269,24 @@ class SpmdExecutor:
     Both preserve the capacity floors, so the per-(mesh, H) compiled
     executables keep hitting; `full_rebuilds`/`plan_updates` count which
     path ran (a steady-state stream performs zero full rebuilds).
+
+    `overlap` (default True) selects the split-phase neighbor read
+    (`_overlap_select`): local slots gather without waiting on the
+    all_to_all, so per superstep the compute serializes behind ZERO
+    collective phases instead of one.  `overlap=False` is the
+    strict-ordering fallback (the concat-gather of PR 3/4); both produce
+    bit-identical values, and the executed count lands in each
+    `SuperstepTrace.serialized_collectives`.
     """
 
     def __init__(self, g, W: Optional[int] = None,
                  wm: Optional[WorkerMesh] = None,
-                 plan: Optional[HaloPlan] = None):
+                 plan: Optional[HaloPlan] = None,
+                 overlap: bool = True):
         self.wm = wm if wm is not None else make_worker_mesh(g, W=W)
         self.plan = plan if plan is not None else build_halo_plan(g, self.wm)
+        #: split-phase halo read (False = strict-ordering fallback)
+        self.overlap = bool(overlap)
         #: full from-scratch plan rebuilds after construction (`rebuild`)
         self.full_rebuilds = 0
         #: incremental plan maintenance calls (`apply_updates`)
@@ -265,7 +332,7 @@ class SpmdExecutor:
         est: (N,) int32 (N = P*Cn, sharded over workers as (S,) each);
         returns (N,) int32.
         """
-        fn = _compiled_hindex(self.wm.mesh, self.plan.H)
+        fn = _compiled_hindex(self.wm.mesh, self.plan.H, self.overlap)
         return fn(est.astype(jnp.int32), *self._tables)
 
     def frontier(self, f, eligible, visited) -> jax.Array:
@@ -275,7 +342,7 @@ class SpmdExecutor:
         (N, R) bool (`f & eligible & ~visited` semantics of
         `ref.ell_frontier_hop_ref`).
         """
-        fn = _compiled_frontier(self.wm.mesh, self.plan.H)
+        fn = _compiled_frontier(self.wm.mesh, self.plan.H, self.overlap)
         return fn(f.astype(bool), eligible.astype(bool),
                   visited.astype(bool), *self._tables)
 
@@ -286,7 +353,7 @@ class SpmdExecutor:
         whole fixpoint is one on-mesh `lax.while_loop` (zero per-superstep
         host transfers).
         """
-        fn = _compiled_coreness(self.wm.mesh, self.plan.H)
+        fn = _compiled_coreness(self.wm.mesh, self.plan.H, self.overlap)
         est0 = jnp.where(self.node_mask, self.deg, 0).astype(jnp.int32)
         return fn(est0, self.node_mask, jnp.int32(max_steps), *self._tables)
 
@@ -297,7 +364,7 @@ class SpmdExecutor:
         core: (N,) int32; roots: (N, R) bool; ks: (R,) int32 per-search
         k levels.  Returns ((N, R) bool visited, device superstep count).
         """
-        fn = _compiled_reach(self.wm.mesh, self.plan.H)
+        fn = _compiled_reach(self.wm.mesh, self.plan.H, self.overlap)
         return fn(jnp.asarray(core, jnp.int32), self.node_mask,
                   roots.astype(bool), jnp.asarray(ks, jnp.int32),
                   jnp.int32(max_steps), *self._tables)
@@ -308,7 +375,7 @@ class SpmdExecutor:
         est0: (N,) int32 upper bounds; cand: (N,) bool movable mask.
         Returns ((N,) int32 fixpoint, device superstep count).
         """
-        fn = _compiled_recompute(self.wm.mesh, self.plan.H)
+        fn = _compiled_recompute(self.wm.mesh, self.plan.H, self.overlap)
         return fn(jnp.asarray(est0, jnp.int32), cand.astype(bool),
                   self.node_mask, jnp.int32(max_steps), *self._tables)
 
@@ -419,8 +486,16 @@ class SpmdBlockProgram(SpmdProgram):
     def worker_local(self, ctx: LocalCtx, state, nb_vals, directive):
         bctx = BlockCtx(deg=ctx.deg, node_mask=ctx.node_mask,
                         n_real=self.n_real)
-        red = combine_rows(self.prog.combine, self.prog.halo_field(state),
-                           nb_vals)
+        field = self.prog.halo_field(state)
+        if self.prog.combine == "multi":
+            # fused lockstep supersteps: one exchange per sub-field, one
+            # shared halt reduction — per-field reduces are the standalone
+            # formulations, so results match sub-programs run alone.
+            red = tuple(
+                combine_rows(c, f, nb) for c, f, nb
+                in zip(self.prog.combines, field, nb_vals))
+        else:
+            red = combine_rows(self.prog.combine, field, nb_vals)
         new = self.prog.update(bctx, state, red)
         changed = self.prog.changed(state, new)
         return new, changed.reshape(1)  # per-worker W2M flag
@@ -455,16 +530,16 @@ class SpmdEngine:
         H = ex.plan.H
         B, Cn = ex.wm.B, ex.wm.Cn
         Cd = ex.plan.nbr_local.shape[1]
-        key = (ex.wm.mesh, H, B, Cn, Cd, program)
+        overlap = ex.overlap
+        key = (ex.wm.mesh, H, B, Cn, Cd, overlap, program)
         cached = self._step_cache.get(key)
         if cached is not None:
             return cached
 
         def local(wstate, deg, mask, directive, nbrl, send, recv):
             field = program.halo_field(wstate)
-            nb_vals = _exchange_gather(
-                field, nbrl, send, recv, H,
-                jnp.asarray(program.halo_fill, field.dtype))
+            nb_vals = _gather_field(
+                field, nbrl, send, recv, H, program.halo_fill, overlap)
             ctx = LocalCtx(deg=deg, node_mask=mask, B=B, Cn=Cn, Cd=Cd)
             return program.worker_local(ctx, wstate, nb_vals, directive)
 
@@ -485,7 +560,8 @@ class SpmdEngine:
         H = ex.plan.H
         B, Cn = ex.wm.B, ex.wm.Cn
         Cd = ex.plan.nbr_local.shape[1]
-        key = ("fused", ex.wm.mesh, H, B, Cn, Cd, program)
+        overlap = ex.overlap
+        key = ("fused", ex.wm.mesh, H, B, Cn, Cd, overlap, program)
         cached = self._step_cache.get(key)
         if cached is not None:
             return cached
@@ -501,9 +577,8 @@ class SpmdEngine:
             def body(c):
                 wstate, mstate, d, _, it = c
                 field = program.halo_field(wstate)
-                nb_vals = _exchange_gather(
-                    field, nbrl, send, recv, H,
-                    jnp.asarray(program.halo_fill, field.dtype))
+                nb_vals = _gather_field(
+                    field, nbrl, send, recv, H, program.halo_fill, overlap)
                 wstate2, summary = program.worker_local(
                     ctx, wstate, nb_vals, d)
                 full = jax.lax.all_gather(summary, AXIS, axis=0, tiled=True)
@@ -526,8 +601,10 @@ class SpmdEngine:
         leading axis P) for post-loop trace reconstruction."""
         Cd = self.ex.plan.nbr_local.shape[1]
         field_s = jax.eval_shape(program.halo_field, wstate)
-        nb_s = jax.ShapeDtypeStruct(
-            (self.g.N, Cd) + tuple(field_s.shape[1:]), field_s.dtype)
+        nb_s = jax.tree_util.tree_map(
+            lambda fs: jax.ShapeDtypeStruct(
+                (self.g.N, Cd) + tuple(fs.shape[1:]), fs.dtype),
+            field_s)  # tuple fields (MultiProgram) map leaf-wise
         # ctx rides in by closure: its B/Cn/Cd ints must stay concrete
         # (eval_shape would abstract NamedTuple leaves into tracers)
         ctx = LocalCtx(deg=self.ex.deg, node_mask=self.ex.node_mask,
@@ -562,6 +639,10 @@ class SpmdEngine:
         w2w = self.ex.plan.slot_counts()
         modes = getattr(program, "modes",
                         Mode.LOCAL | Mode.M2W | Mode.W2M | Mode.W2W)
+        # collective phases the compute waited on per superstep: the strict
+        # concat-gather serializes behind the halo all_to_all (1); the
+        # split-phase overlap read serializes behind none (0).
+        ser = 0 if self.ex.overlap else 1
         if fuse is None:
             fuse = getattr(program, "fusable", False)
         if fuse:
@@ -577,7 +658,8 @@ class SpmdEngine:
                 self._summary_shape(program, wstate, d0), directive, w2w)
             (n_steps,) = jax.device_get((n,))
             self.traces.extend(
-                SuperstepTrace(s, modes, stats) for s in range(int(n_steps)))
+                SuperstepTrace(s, modes, stats, serialized_collectives=ser)
+                for s in range(int(n_steps)))
             return wstate, mstate
 
         step = self._step_fn(program)
@@ -590,7 +672,8 @@ class SpmdEngine:
                 wstate, self.ex.deg, self.ex.node_mask, d, *self.ex._tables)
             mstate, directive, halt = program.master_compute(mstate, summary)
             self.traces.append(SuperstepTrace(
-                it, modes, BladygEngine._meter(summary, directive, w2w)))
+                it, modes, BladygEngine._meter(summary, directive, w2w),
+                serialized_collectives=ser))
             it += 1
             if bool(halt):
                 break
