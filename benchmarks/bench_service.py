@@ -1,0 +1,136 @@
+"""Serving path: queries/sec + tail latency under a live update stream.
+
+Measures the Layer-5 query service (`repro.service`) the way it runs in
+production shape: one `QueryServer` interleaving admitted query batches
+with `StreamSession` update windows on the same device program.  Sweeps
+the query mix x the window width R:
+
+  * `service/serve/<mix>/R<r>` — us_per_call is the p50 submit->answer
+    latency (a query waits for the in-flight window + snapshot refresh,
+    so this is the honest interleaved-serving number, not just the
+    gather).  The derived field carries queries/sec of batch busy time
+    (`qps`), p99, answered/shed counts, and the max snapshot staleness
+    observed (0 at refresh_every=1 — every answer reads the newest
+    epoch).
+
+Mixes: `gather` (core/degree point reads), `mixed` (all five kinds),
+`topk` (top-k PageRank, bucketed k).  Each sweep point runs the same
+update+query replay twice on fresh graph clones and reports the second
+pass only, so every compile — the query kernels, the stream step, and
+the escalation/CC-recompute paths some windows trigger (inserts are
+interleaved with deletes so every window carries both ops) — lands in
+the process-global jit caches before the measured pass.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import build_blocks, connected_components, coreness
+from repro.core.partition import node_bfs_partition
+from repro.core.updates import sample_deletions, sample_insertions
+from repro.graphgen import barabasi_albert
+from repro.runtime import StreamSession
+from repro.service import (
+    QueryServer, ServiceConfig, core_of, degree_of, nbr_max_core_of,
+    same_component, topk_pagerank)
+
+from .common import row
+
+
+def _mixed_updates(g, count: int, seed: int):
+    per = max(1, count // 4)
+    ups = (sample_insertions(g, per, "inter", seed=seed)
+           + sample_insertions(g, per, "intra", seed=seed + 1)
+           + sample_deletions(g, per, "inter", seed=seed + 2)
+           + sample_deletions(g, per, "intra", seed=seed + 3))
+    # interleave inserts with deletes so every window carries both ops
+    # (and the warmup windows compile both maintenance paths)
+    half = len(ups) // 2
+    return [u for pair in zip(ups[:half], ups[half:]) for u in pair]
+
+
+def _mix_gather(rng, n: int, count: int):
+    return [core_of(int(rng.integers(n))) if rng.random() < 0.5
+            else degree_of(int(rng.integers(n))) for _ in range(count)]
+
+
+def _mix_mixed(rng, n: int, count: int):
+    out = []
+    for _ in range(count):
+        r = int(rng.integers(5))
+        u, v = int(rng.integers(n)), int(rng.integers(n))
+        out.append([core_of(u), degree_of(u), nbr_max_core_of(u),
+                    same_component(u, v), topk_pagerank(8)][r])
+    return out
+
+
+def _mix_topk(rng, n: int, count: int):
+    return [topk_pagerank(int(rng.integers(1, 17))) for _ in range(count)]
+
+
+MIXES: List[Tuple[str, Callable]] = [
+    ("gather", _mix_gather), ("mixed", _mix_mixed), ("topk", _mix_topk)]
+
+
+def _clone(gg):
+    import jax
+    return jax.tree.map(
+        lambda x: jnp.copy(x) if hasattr(x, "dtype") else x, gg)
+
+
+def run(seed: int = 0, smoke: bool = False) -> List[Tuple[str, float, str]]:
+    rows = []
+    n = 240 if smoke else 1600
+    updates = 32 if smoke else 128
+    qpw = 12 if smoke else 48          # queries submitted per window
+    Rs = (4,) if smoke else (4, 8)
+
+    edges = barabasi_albert(n, 4, seed=seed)
+    nn = int(edges.max()) + 1
+    assign = node_bfs_partition(edges, nn, 4, seed=seed)
+    g0 = build_blocks(edges, nn, assign, P=4, deg_slack=48)
+    core0 = coreness(g0, backend="jnp")
+    labels0 = connected_components(g0, backend="jnp")
+    ups = _mixed_updates(g0, updates, seed + 1)
+    cfg = ServiceConfig(max_queue=4096, max_batch=64, refresh_every=1,
+                        pr_steps=10)
+
+    for mix_name, mix in MIXES:
+        for R in Rs:
+            # two identical passes, each on a fresh clone (the session
+            # donates its graph buffers window-over-window): pass 0 lands
+            # every compile — query kernels, the stream step, and the
+            # escalation/CC-recompute paths some windows trigger — into
+            # the process-global jit caches; pass 1 is what we report.
+            for measured in (False, True):
+                sess = StreamSession(_clone(g0), jnp.copy(core0), R=R,
+                                     backend="jnp",
+                                     cc_labels=jnp.copy(labels0))
+                srv = QueryServer(sess, config=cfg)
+                rng = np.random.default_rng(seed + 2)
+
+                def feed(i: int):
+                    return mix(rng, nn, qpw)
+
+                t0 = time.perf_counter()
+                srv.serve(list(ups), feed)
+                wall = time.perf_counter() - t0
+            s = srv.metrics.summary()
+            rows.append(row(
+                f"service/serve/{mix_name}/R{R}", s["p50_ms"] * 1e3,
+                f"qps={s['qps']:.0f};p99_ms={s['p99_ms']:.2f};"
+                f"answered={s['answered']};shed={s['shed']};"
+                f"batches={s['batches']};stale_max={s['staleness_max']};"
+                f"wall_s={wall:.2f}"))
+            assert s["shed"] == 0, \
+                f"bench feed overran admission control ({s['shed']} shed)"
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import print_rows
+    print_rows(run())

@@ -83,8 +83,8 @@ def run(seed: int = 0, smoke: bool = False) -> List[Tuple[str, float, str]]:
     score = coreness(sg, backend="jnp")
     ups = _mixed_updates(sg, 16, seed + 11)
     t0 = time.perf_counter()
-    sg1, score1, st = run_stream(sg, score, list(ups), R=4,
-                                 backend="ell_spmd")
+    sres = run_stream(sg, score, list(ups), R=4, backend="ell_spmd")
+    st = sres.stats
     dt = time.perf_counter() - t0
     assert st.plan_rebuilds == 0, \
         f"steady-state stream performed {st.plan_rebuilds} full rebuilds"
@@ -110,9 +110,10 @@ def run(seed: int = 0, smoke: bool = False) -> List[Tuple[str, float, str]]:
             lambda x: jnp.copy(x) if hasattr(x, "dtype") else x, gg)
 
     for label, thresh in (("off", None), ("on", 1.2)):
-        gg, cc, stt = run_stream(_clone(rg), rcore, list(rups), R=4,
-                                 backend="jnp", rebalance_threshold=thresh,
-                                 rebalance_max_moves=8)
+        rres = run_stream(_clone(rg), rcore, list(rups), R=4,
+                          backend="jnp", rebalance_threshold=thresh,
+                          rebalance_max_moves=8)
+        gg, stt = rres.g, rres.stats
         rows.append(row(
             f"stream/rebalance/{label}", 0.0,
             f"balance={block_balance(gg):.2f};edge_cut={int(gg.edge_cut())};"

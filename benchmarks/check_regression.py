@@ -22,6 +22,11 @@ Two severity tiers:
 Rows faster than ``--floor-us`` in the baseline are skipped (pure noise),
 as are rows missing on either side (sweeps legitimately change).
 
+``service/*`` rows (BENCH_service.json, p50 submit->answer latency under
+concurrent update load) ride the soft tier: end-to-end serving latency
+folds in window apply + snapshot refresh, which is noisier than a single
+kernel dispatch, so growth warns rather than fails.
+
 Usage: python -m benchmarks.check_regression [--baseline .] [--fresh .]
        [--threshold 2.0] [--hard-threshold 3.0] [--floor-us 200]
 """

@@ -17,10 +17,13 @@ Prints ``name,us_per_call,derived`` CSV rows.
              stream pass, §4.2 live rebalancing (EXPERIMENTS.md §Stream)
   workloads — BlockProgram workload sweep: CC / PageRank / triangles per
              backend, superstep counts + parity (EXPERIMENTS.md §Workloads)
+  service  — query service qps + p50/p99 under concurrent update load,
+             sweeping query mix × window width R (EXPERIMENTS.md §Service)
   roofline — three-term roofline per (arch × shape) from the dry-run JSONs
 
-The `kernels`, `stream`, and `workloads` rows are additionally written to
-``BENCH_kernels.json`` / ``BENCH_stream.json`` / ``BENCH_workloads.json``
+The `kernels`, `stream`, `workloads`, and `service` rows are additionally
+written to ``BENCH_kernels.json`` / ``BENCH_stream.json`` /
+``BENCH_workloads.json`` / ``BENCH_service.json``
 under --out-dir: the machine-readable perf trajectory (committed
 baselines at the repo root, fresh points uploaded as CI artifacts and
 soft-checked by ``benchmarks.check_regression``).
@@ -48,7 +51,7 @@ import sys
 import traceback
 
 #: benches whose rows feed the machine-readable perf trajectory
-JSON_BENCHES = ("kernels", "stream", "workloads")
+JSON_BENCHES = ("kernels", "stream", "workloads", "service")
 
 
 def write_bench_json(out_dir: str, bench: str, rows) -> pathlib.Path:
@@ -93,7 +96,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: table2,fig7,partitioning,static,"
                          "backends,kernels,runtime,stream,workloads,"
-                         "roofline")
+                         "service,roofline")
     ap.add_argument("--profile", action="store_true",
                     help="also dump per-kernel roofline points "
                          "(PROFILE_kernels.json under --out-dir)")
@@ -103,8 +106,8 @@ def main() -> None:
 
     from . import (bench_backends, bench_kcore_maintenance, bench_kernels,
                    bench_vs_naive_kcore, bench_partitioning,
-                   bench_runtime, bench_static_kcore, bench_stream,
-                   bench_workloads, roofline)
+                   bench_runtime, bench_service, bench_static_kcore,
+                   bench_stream, bench_workloads, roofline)
 
     backends = tuple(b for b in args.backends.split(",") if b)
     batch_sizes = tuple(int(r) for r in args.batch_sizes.split(",") if r)
@@ -139,6 +142,8 @@ def main() -> None:
         "stream": lambda: bench_stream.run(
             seed=args.seed, smoke=args.smoke),
         "workloads": lambda: bench_workloads.run(
+            seed=args.seed, smoke=args.smoke),
+        "service": lambda: bench_service.run(
             seed=args.seed, smoke=args.smoke),
         "roofline": lambda: roofline.run(full=args.full, seed=args.seed),
     }

@@ -70,8 +70,9 @@ if args.stream:
     from repro.runtime import run_stream
 
     t0 = time.time()
-    g, core, st = run_stream(g, core, ups, R=8, backend=args.backend
-                             if args.backend != "auto" else "jnp")
+    res = run_stream(g, core, ups, R=8, backend=args.backend
+                     if args.backend != "auto" else "jnp")
+    g, core, st = res.g, res.core, res.stats
     jax.block_until_ready(core)
     dt = time.time() - t0
     print(f"   {st.updates} updates in {dt:.2f}s: "

@@ -1,5 +1,23 @@
-"""Config registry: the 10 assigned architectures + the paper's graph tasks."""
+"""Config registry: seed LLM fixtures + the graph service's own configs.
+
+Two distinct populations live in this namespace — keep them straight:
+
+  * **Seed fixtures** (`ARCHS`): the 10 LLM architecture configs below
+    (codeqwen/deepseek/gemma/llama/...) are NOT part of the BLADYG
+    reproduction.  They are frozen seed-repo fixtures that the model-
+    plumbing tests (`test_models_consistency`, `test_arch_smoke`,
+    `test_sharding_and_specs`), `launch/`, and the roofline benchmarks
+    still exercise as a registry of realistic shape/sharding specs — so
+    they stay, but nothing in `repro.core`/`repro.runtime`/
+    `repro.service` may import them, and no new graph-side code should
+    grow dependencies on them.
+  * **Service configs** (`service.ServiceConfig`): the graph-side knobs
+    — admission control, batching, and snapshot-refresh policy for the
+    query-serving layer (`repro.service`).  These are the configs this
+    package exists to host going forward.
+"""
 from .base import ArchConfig, ShapeConfig, SHAPES, SHAPES_BY_NAME, cell_applicable
+from .service import ServiceConfig
 
 from .seamless_m4t_large_v2 import CONFIG as seamless_m4t_large_v2
 from .mamba2_370m import CONFIG as mamba2_370m
@@ -37,5 +55,5 @@ def get_arch(name: str) -> ArchConfig:
 
 __all__ = [
     "ArchConfig", "ShapeConfig", "SHAPES", "SHAPES_BY_NAME",
-    "cell_applicable", "ARCHS", "get_arch",
+    "cell_applicable", "ARCHS", "get_arch", "ServiceConfig",
 ]

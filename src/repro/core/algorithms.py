@@ -248,6 +248,7 @@ def fused_analytics(
     backend: str = "auto",
     executor=None,
     with_steps: bool = False,
+    init: Optional[Tuple[jax.Array, jax.Array]] = None,
 ) -> Union[Tuple[jax.Array, jax.Array, jax.Array],
            Tuple[Tuple[jax.Array, jax.Array, jax.Array], jax.Array]]:
     """Coreness + CC labels + PageRank from ONE fused superstep loop.
@@ -262,14 +263,34 @@ def fused_analytics(
     padding) — each bit-identical to its standalone program run for the
     same superstep count, provided `steps` covers the min/hindex
     programs' convergence (their updates idle at the fixpoint).
+
+    `init=(core, labels)` warm-starts the two monotone sub-programs from
+    maintained values (labels in the `connected_components` convention:
+    -1 on padding, unmasked here to the internal `INT32_MAX`).  Both are
+    fixpoints of their own updates — min-H of true coreness returns the
+    coreness, min-label of canonical labels returns the labels — so when
+    the inputs are exact (as the stream loop keeps them) they ride
+    through the fused loop bit-unchanged while PageRank, always reset to
+    its uniform init here, still runs its `steps` fixed iterations.
+    This is the serving path's snapshot refresh: one fused loop, three
+    fields, no standalone convergence budget for coreness/CC needed.
     """
+    pr = PageRankProgram(alpha=alpha, tol=None, max_steps=steps)
     prog = MultiProgram(
-        (CorenessBlockProgram(),
-         ConnectedComponentsProgram(),
-         PageRankProgram(alpha=alpha, tol=None, max_steps=steps)),
+        (CorenessBlockProgram(), ConnectedComponentsProgram(), pr),
         max_steps=steps)
+    state0 = None
+    if init is not None:
+        core0, labels0 = init
+        state0 = (
+            jnp.asarray(core0, jnp.int32),
+            jnp.where(g.node_mask, jnp.asarray(labels0, jnp.int32),
+                      INT32_MAX),
+            pr.init(g),
+        )
     out = ops.run_block_program(
-        g, prog, backend=backend, executor=executor, with_steps=with_steps)
+        g, prog, backend=backend, executor=executor, with_steps=with_steps,
+        state0=state0)
     state, n = out if with_steps else (out, None)
     core, lab, (rank, _) = state
     results = (core, jnp.where(g.node_mask, lab, -1), rank)

@@ -885,6 +885,7 @@ def run_block_program(
     interpret: Optional[bool] = None,
     executor=None,
     with_steps: bool = False,
+    state0: Optional[Any] = None,
 ) -> Union[Any, Tuple[Any, jax.Array]]:
     """Run a `BlockProgram` to its halt fixpoint, via the chosen backend.
 
@@ -903,6 +904,15 @@ def run_block_program(
     `SpmdExecutor` via `executor=`; `max_steps=None` takes the program's
     own bound.  Returns the final program state, plus the executed
     superstep count when `with_steps=True`.
+
+    `state0` (optional) warm-starts the fixpoint from a caller-supplied
+    state instead of `program.init(g)` — the serving path's snapshot
+    refresh uses this to resume monotone programs (min-label CC, min-H
+    coreness) AT their fixpoint, where one pass through `update` is the
+    identity, so maintained fields ride through bit-unchanged while
+    fixed-iteration sub-programs (PageRank) still execute.  The caller
+    owns the contract that the state matches `program.init`'s structure
+    (same pytree, shapes, dtypes).
     """
     b = resolve_backend(backend, g.N)
     if program.combine != "multi" and program.combine not in COMBINES:
@@ -911,7 +921,8 @@ def run_block_program(
             f"{COMBINES + ('multi',)}")
     ms = int(program.max_steps if max_steps is None else max_steps)
     n_real = int(g.n_real)  # GraphBlocks property (duck-typed, host sync)
-    state0 = program.init(g)
+    if state0 is None:
+        state0 = program.init(g)
     if b == "ell_spmd":
         from ..runtime.spmd import (  # lazy: no import cycle
             SpmdBlockProgram, SpmdEngine, SpmdExecutor)

@@ -37,7 +37,8 @@ from .spmd import (
     frontier_spmd,
     hindex_spmd,
 )
-from .stream import StreamStats, route_updates, run_stream
+from .stream import (
+    StreamResult, StreamSession, StreamStats, route_updates, run_stream)
 
 __all__ = [
     "AXIS", "WorkerMesh", "best_worker_count", "make_worker_mesh",
@@ -45,5 +46,6 @@ __all__ = [
     "SpmdExecutor", "SpmdEngine", "SpmdProgram", "SpmdCorenessProgram",
     "SpmdBlockProgram",
     "coreness_spmd", "hindex_spmd", "frontier_spmd",
-    "StreamStats", "route_updates", "run_stream",
+    "StreamResult", "StreamSession", "StreamStats", "route_updates",
+    "run_stream",
 ]

@@ -147,10 +147,25 @@ def _gather_field(field, nbrl, send, recv, H, fill, overlap: bool):
 # arguments, so executors rebuilt after graph updates hit this cache.
 # ---------------------------------------------------------------------------
 
+#: how many mesh step functions have been BUILT (jit-wrapped on a compiled-
+#: cache miss): every `_smap` call bumps it, so a steady-state serving loop
+#: — session windows + snapshot refreshes + query batches on one executor —
+#: holds it constant after warmup.  Python-side and monotonic, the mesh
+#: analogue of `kernels.ops.gather_trace_count`; tests snapshot it around
+#: the post-warmup phase to assert ZERO recompiles.
+_STEP_BUILDS = 0
+
+
+def step_build_count() -> int:
+    """Mesh step functions built so far (see `_STEP_BUILDS`)."""
+    return _STEP_BUILDS
+
 
 def _smap(fn, mesh, n_lead: int, n_rep: int, out_specs):
     """shard_map + jit: `n_lead` node-sharded args, `n_rep` replicated args,
     then the three plan tables (nbr_local / send / recv, worker-sharded)."""
+    global _STEP_BUILDS
+    _STEP_BUILDS += 1
     specs = [P_(AXIS)] * n_lead + [P_()] * n_rep + [P_(AXIS)] * 3
     return jax.jit(shard_map(
         fn, mesh=mesh, in_specs=tuple(specs), out_specs=out_specs,

@@ -51,12 +51,22 @@ Two runtime-maintenance loops close over the stream:
     Later stream updates still name nodes by their *pre-stream* padded
     ids; the router composes the migration permutations and remaps each
     window on ingest.
+
+The loop body lives in `StreamSession` — a resumable stepper (open ->
+`apply_window` -> `result`) so other device work can interleave between
+windows; `run_stream` wraps it and returns a `StreamResult`, the uniform
+(g, core, stats, labels) record (legacy tuple unpacking is shimmed with
+a DeprecationWarning).  The query-serving layer (`repro.service`) is the
+primary session consumer: it alternates update windows with query
+batches on the one long-lived executor.
 """
 from __future__ import annotations
 
+import warnings
 from functools import partial
 from itertools import islice
-from typing import Dict, Iterable, Iterator, List, NamedTuple, Optional, Tuple
+from typing import (Any, Dict, Iterable, Iterator, List, NamedTuple,
+                    Optional, Tuple)
 
 import jax
 import jax.numpy as jnp
@@ -92,6 +102,32 @@ class StreamStats(NamedTuple):
     def escalated(self) -> int:
         return (self.escalated_cross_block + self.escalated_spill
                 + self.escalated_conflict)
+
+
+class StreamResult(NamedTuple):
+    """Uniform `run_stream` / `StreamSession.result` return value.
+
+    `labels` is None unless CC maintenance was armed (`cc_labels=`).
+    Tuple-unpacking a StreamResult still works — `__iter__` yields the
+    legacy arity (3 fields, or 4 when labels were maintained) with a
+    DeprecationWarning — but new code should read the named fields;
+    indexing and `len()` see all 4 fields, NamedTuple-style.
+    """
+
+    g: Any                       # post-stream GraphBlocks
+    core: jax.Array              # (N,) int32 maintained coreness
+    stats: StreamStats
+    labels: Optional[jax.Array] = None   # (N,) int32 CC labels or None
+
+    def __iter__(self):
+        warnings.warn(
+            "tuple-unpacking run_stream's result is deprecated; read "
+            ".g/.core/.stats/.labels on the returned StreamResult",
+            DeprecationWarning, stacklevel=2)
+        legacy = (self.g, self.core, self.stats)
+        if self.labels is not None:
+            legacy += (self.labels,)
+        return iter(legacy)
 
 
 def _owner_blocks(g, ids) -> np.ndarray:
@@ -191,88 +227,100 @@ def _iter_windows(updates, R: int) -> Iterator[list]:
         yield window
 
 
-def run_stream(
-    g,
-    core,
-    updates: Iterable[Tuple[int, int, int]],
-    R: int = 8,
-    backend: str = "jnp",
-    W=None,
-    executor=None,
-    rebalance_threshold: Optional[float] = None,
-    rebalance_max_moves: int = 8,
-    cc_labels: Optional[jax.Array] = None,
-):
-    """Ingest an update stream; returns (g', core', StreamStats).
+class StreamSession:
+    """Resumable stream stepper: open -> `apply_window` -> `result`.
 
-    g: GraphBlocks (P blocks of Cn rows, nbr (N, Cd)); core: (N,) int32
-    coreness of `g` (as `core.kcore.coreness` returns it).  `updates`
-    may be any iterable (including a generator) of (u, v, op) with
-    op = +1 insert / -1 delete, ids global padded *as of the call*
-    (migrations remap later windows internally).  R is the window width
-    (the stacked-frontier axis of the batched candidate search).  Exactness: the final
-    coreness equals sequential per-update maintenance — under live
-    rebalancing up to the node-axis permutation, i.e. bit-identical when
-    read through `orig_id`.  With `backend="ell_spmd"` every superstep
-    runs on the worker mesh through ONE long-lived executor (pass
-    `executor` to thread an existing `SpmdExecutor` across calls) whose
-    halo plan is maintained incrementally per window.
+    Holds everything `run_stream` used to keep in loop locals — the
+    current graph, maintained coreness (and optionally CC labels), the
+    long-lived executor, the migration remap, and the routing/superstep
+    counters — so a caller can interleave OTHER device work between
+    windows: the query-serving loop (`repro.service`) applies one window,
+    refreshes its analytics snapshot, answers a few query batches, and
+    comes back, all on the ONE executor with zero steady-state
+    recompiles.  `run_stream` is now a thin wrapper that opens a session
+    and drains the whole iterable through it.
 
-    `rebalance_threshold` (e.g. 1.2) arms the §4.2 repartition-threshold
-    protocol after every window: blocks report load summaries, the
-    coordinator migrates boundary vertices when max/mean load exceeds
-    the threshold.  `None` disables it.
+    Window contract: `apply_window` takes a list of at most `R` updates
+    `(u, v, op)` with ids global padded *as of session open* (later
+    migrations are remapped internally, exactly as `run_stream` always
+    did); windows narrower than R are padded to the fixed width, so the
+    compiled window kernels keep hitting.  Exactness guarantees are
+    unchanged — the session IS `run_stream`'s loop body, extracted.
 
-    `cc_labels` (optional) arms connected-component maintenance: pass the
-    canonical labels of the PRE-stream graph (as
-    `core.algorithms.connected_components` returns them: (N,) int32, min
-    member padded id per component, -1 on padding rows) and the stream
-    keeps them exact window by window, returning (g', core', stats,
-    labels') instead of the 3-tuple.  Insert-only windows are maintained
-    with O(1)-superstep label merges on device (inserts can only *join*
-    components — `algorithms.merge_labels`); a window containing a
-    deletion or followed by a §4.2 migration triggers one fresh
-    propagation on the post-window graph (splits cannot be merged; node
-    permutations relabel the canonical ids).  `StreamStats.cc_merges` /
-    `cc_recomputes` count the two paths, and the final labels are
-    bit-identical to `connected_components(g')`.
-
-    NOTE: consumes `g` via jit buffer donation on the escalation path
-    (like `maintain_batch`) — use the returned graph.
+    NOTE: consumes the graph passed at open via jit buffer donation on
+    the apply path (like `maintain_batch`); read `.g` back, and never
+    hold references to a previous window's graph arrays.
     """
-    if R < 1:
-        raise ValueError(f"R must be >= 1, got {R}")
-    spmd = backend == SPMD_BACKEND
-    if executor is not None and not spmd:
-        raise ValueError(
-            f"executor= requires backend={SPMD_BACKEND!r} (got "
-            f"{backend!r}); a non-mesh stream would leave the executor's "
-            "halo plan stale."
-        )
-    ex = None
-    if spmd:
-        ex = executor if executor is not None else kd._spmd_executor(g, W)
-    ex_updates0 = ex.plan_updates if spmd else 0
-    ex_rebuilds0 = ex.full_rebuilds if spmd else 0
-    core = jnp.asarray(core)
-    tot = dict(bfs=0, rec=0, cand=0, batched=0, seq=0, batches=0)
-    n_updates = 0
-    n_local = 0
-    esc_cross = esc_spill = esc_conflict = 0
-    per_block = np.zeros(g.P, np.int64)
-    migrations = migrated = 0
-    remap: Optional[np.ndarray] = None  # pre-stream ids -> current ids
-    labels = jnp.asarray(cc_labels) if cc_labels is not None else None
-    cc_merges = cc_recomputes = 0
 
-    for window in _iter_windows(updates, R):
-        if remap is not None:
-            window = [(int(remap[u]), int(remap[v]), op)
+    def __init__(
+        self,
+        g,
+        core,
+        R: int = 8,
+        backend: str = "jnp",
+        W=None,
+        executor=None,
+        rebalance_threshold: Optional[float] = None,
+        rebalance_max_moves: int = 8,
+        cc_labels: Optional[jax.Array] = None,
+    ):
+        if R < 1:
+            raise ValueError(f"R must be >= 1, got {R}")
+        spmd = backend == SPMD_BACKEND
+        if executor is not None and not spmd:
+            raise ValueError(
+                f"executor= requires backend={SPMD_BACKEND!r} (got "
+                f"{backend!r}); a non-mesh stream would leave the "
+                "executor's halo plan stale."
+            )
+        self.R = int(R)
+        self.backend = backend
+        self._spmd = spmd
+        self._W = W
+        self.executor = None
+        if spmd:
+            self.executor = (executor if executor is not None
+                             else kd._spmd_executor(g, W))
+        self._ex_updates0 = self.executor.plan_updates if spmd else 0
+        self._ex_rebuilds0 = self.executor.full_rebuilds if spmd else 0
+        self.g = g
+        self.core = jnp.asarray(core)
+        self._track_labels = cc_labels is not None
+        self.labels = (jnp.asarray(cc_labels) if self._track_labels
+                       else None)
+        self._rebalance_threshold = rebalance_threshold
+        self._rebalance_max_moves = int(rebalance_max_moves)
+        self._tot = dict(bfs=0, rec=0, cand=0, batched=0, seq=0, batches=0)
+        self._n_updates = 0
+        self._n_local = 0
+        self._esc_cross = self._esc_spill = self._esc_conflict = 0
+        self._per_block = np.zeros(g.P, np.int64)
+        self._migrations = self._migrated = 0
+        self._remap: Optional[np.ndarray] = None  # open-time -> current ids
+        self._cc_merges = self._cc_recomputes = 0
+
+    @property
+    def windows_applied(self) -> int:
+        """Windows ingested so far (the serving layer's staleness clock)."""
+        return self._tot["batches"]
+
+    def apply_window(self, window: List[Tuple[int, int, int]]) -> None:
+        """Ingest ONE window of at most R updates (see class docstring)."""
+        if len(window) > self.R:
+            raise ValueError(
+                f"window of {len(window)} updates exceeds R={self.R}")
+        if not window:
+            return
+        g, core, ex, spmd = self.g, self.core, self.executor, self._spmd
+        backend, W, tot = self.backend, self._W, self._tot
+        if self._remap is not None:
+            window = [(int(self._remap[u]), int(self._remap[v]), op)
                       for u, v, op in window]
         kd._validate_updates_host(g, window)
         tot["batches"] += 1
+        R = self.R
         n = len(window)
-        n_updates += n
+        self._n_updates += n
         us = np.zeros(R, np.int32)
         vs = np.zeros(R, np.int32)
         ops_ = np.zeros(R, np.int32)
@@ -300,9 +348,9 @@ def run_stream(
             (steps, route.accept, route.cross, route.spill, route.conflict,
              route.per_block))
         tot["bfs"] += int(steps_h)
-        esc_cross += int(cross.sum())
-        esc_spill += int(spl.sum())
-        esc_conflict += int(conf.sum())
+        self._esc_cross += int(cross.sum())
+        self._esc_spill += int(spl.sum())
+        self._esc_conflict += int(conf.sum())
 
         if accept.any():
             # accepted updates stay at their window position; op=0 turns the
@@ -320,8 +368,8 @@ def run_stream(
                     jnp.asarray(us_a), jnp.asarray(vs_a), jnp.asarray(ops_a),
                     route.cand_ins, route.cand_del, backend=backend)
             tot["rec"] += int(rec)
-            n_local += int(accept.sum())
-            per_block += nblk.astype(np.int64)
+            self._n_local += int(accept.sum())
+            self._per_block += nblk.astype(np.int64)
 
         # coordinator path, original stream order within the window
         for r in np.flatnonzero(cross | spl | conf):
@@ -332,16 +380,17 @@ def run_stream(
         # summaries (W2M) -> masterCompute threshold + move selection ->
         # an executed node migration (a permutation, nothing recompiles)
         migrated_now = False
-        if rebalance_threshold is not None:
-            if pd.block_balance(g) > rebalance_threshold:
+        if self._rebalance_threshold is not None:
+            if pd.block_balance(g) > self._rebalance_threshold:
                 moves = pd.choose_node_moves(
-                    g, max_moves=rebalance_max_moves,
+                    g, max_moves=self._rebalance_max_moves,
                     pair_counts=halo_pair_counts(g))
                 if moves:
                     g, perm, core = migrate_vertices(g, moves, core)
-                    remap = perm if remap is None else perm[remap]
-                    migrations += 1
-                    migrated += len(moves)
+                    self._remap = (perm if self._remap is None
+                                   else perm[self._remap])
+                    self._migrations += 1
+                    self._migrated += len(moves)
                     migrated_now = True
                     if spmd:
                         ex.rebuild(g)
@@ -351,34 +400,116 @@ def run_stream(
         # deletions (possible splits) and migrations (canonical ids are
         # padded ids, which a migration permutes) re-propagate once on
         # the post-window graph.
-        if labels is not None:
+        if self._track_labels:
             ins_mask = valid & (ops_ > 0)
             if (valid & (ops_ < 0)).any() or migrated_now:
-                labels = connected_components(g, backend=backend,
-                                              executor=ex)
-                cc_recomputes += 1
+                self.labels = connected_components(g, backend=backend,
+                                                   executor=ex)
+                self._cc_recomputes += 1
             elif ins_mask.any():
-                labels = merge_labels(labels, jnp.asarray(us),
-                                      jnp.asarray(vs), jnp.asarray(ins_mask))
-                cc_merges += int(ins_mask.sum())
+                self.labels = merge_labels(
+                    self.labels, jnp.asarray(us), jnp.asarray(vs),
+                    jnp.asarray(ins_mask))
+                self._cc_merges += int(ins_mask.sum())
+        self.g, self.core = g, core
 
-    stats = StreamStats(
-        updates=n_updates,
-        batches=tot["batches"],
-        block_local=n_local,
-        escalated_cross_block=esc_cross,
-        escalated_spill=esc_spill,
-        escalated_conflict=esc_conflict,
-        bfs_steps=tot["bfs"],
-        recompute_steps=tot["rec"],
-        per_block=tuple(int(x) for x in per_block),
-        plan_updates=(ex.plan_updates - ex_updates0) if spmd else 0,
-        plan_rebuilds=(ex.full_rebuilds - ex_rebuilds0) if spmd else 0,
-        migrations=migrations,
-        migrated_vertices=migrated,
-        cc_merges=cc_merges,
-        cc_recomputes=cc_recomputes,
-    )
-    if cc_labels is not None:
-        return g, core, stats, labels
-    return g, core, stats
+    def stats(self) -> StreamStats:
+        """Routing/superstep accounting over every window applied so far."""
+        spmd, ex = self._spmd, self.executor
+        return StreamStats(
+            updates=self._n_updates,
+            batches=self._tot["batches"],
+            block_local=self._n_local,
+            escalated_cross_block=self._esc_cross,
+            escalated_spill=self._esc_spill,
+            escalated_conflict=self._esc_conflict,
+            bfs_steps=self._tot["bfs"],
+            recompute_steps=self._tot["rec"],
+            per_block=tuple(int(x) for x in self._per_block),
+            plan_updates=(ex.plan_updates - self._ex_updates0) if spmd else 0,
+            plan_rebuilds=(ex.full_rebuilds - self._ex_rebuilds0)
+            if spmd else 0,
+            migrations=self._migrations,
+            migrated_vertices=self._migrated,
+            cc_merges=self._cc_merges,
+            cc_recomputes=self._cc_recomputes,
+        )
+
+    def result(self) -> StreamResult:
+        """Close out: the session's state as a `StreamResult` snapshot.
+
+        The session stays usable afterwards (`result` is cheap and
+        side-effect free); `close` is the self-documenting alias for the
+        final call.
+        """
+        return StreamResult(g=self.g, core=self.core, stats=self.stats(),
+                            labels=self.labels)
+
+    close = result
+
+
+def run_stream(
+    g,
+    core,
+    updates: Iterable[Tuple[int, int, int]],
+    R: int = 8,
+    backend: str = "jnp",
+    W=None,
+    executor=None,
+    rebalance_threshold: Optional[float] = None,
+    rebalance_max_moves: int = 8,
+    cc_labels: Optional[jax.Array] = None,
+) -> StreamResult:
+    """Ingest an update stream; returns a `StreamResult` (g, core, stats,
+    labels).
+
+    Thin wrapper: opens a `StreamSession` and drains `updates` through it
+    window by window — use the session directly to interleave other work
+    (e.g. query serving) between windows.
+
+    g: GraphBlocks (P blocks of Cn rows, nbr (N, Cd)); core: (N,) int32
+    coreness of `g` (as `core.kcore.coreness` returns it).  `updates`
+    may be any iterable (including a generator) of (u, v, op) with
+    op = +1 insert / -1 delete, ids global padded *as of the call*
+    (migrations remap later windows internally).  R is the window width
+    (the stacked-frontier axis of the batched candidate search).
+    Exactness: the final coreness equals sequential per-update
+    maintenance — under live rebalancing up to the node-axis
+    permutation, i.e. bit-identical when read through `orig_id`.  With
+    `backend="ell_spmd"` every superstep runs on the worker mesh through
+    ONE long-lived executor (pass `executor` to thread an existing
+    `SpmdExecutor` across calls) whose halo plan is maintained
+    incrementally per window.
+
+    `rebalance_threshold` (e.g. 1.2) arms the §4.2 repartition-threshold
+    protocol after every window: blocks report load summaries, the
+    coordinator migrates boundary vertices when max/mean load exceeds
+    the threshold.  `None` disables it.
+
+    `cc_labels` (optional) arms connected-component maintenance: pass the
+    canonical labels of the PRE-stream graph (as
+    `core.algorithms.connected_components` returns them: (N,) int32, min
+    member padded id per component, -1 on padding rows) and the stream
+    keeps them exact window by window in `result.labels`.  Insert-only
+    windows are maintained with O(1)-superstep label merges on device
+    (inserts can only *join* components — `algorithms.merge_labels`); a
+    window containing a deletion or followed by a §4.2 migration
+    triggers one fresh propagation on the post-window graph (splits
+    cannot be merged; node permutations relabel the canonical ids).
+    `StreamStats.cc_merges` / `cc_recomputes` count the two paths, and
+    the final labels are bit-identical to `connected_components(g')`.
+
+    Returns `StreamResult(g, core, stats, labels)`; `labels` is None
+    when `cc_labels` was not passed.  Legacy tuple unpacking (3 fields,
+    or 4 with `cc_labels`) still works behind a DeprecationWarning.
+
+    NOTE: consumes `g` via jit buffer donation on the escalation path
+    (like `maintain_batch`) — use the returned graph.
+    """
+    session = StreamSession(
+        g, core, R=R, backend=backend, W=W, executor=executor,
+        rebalance_threshold=rebalance_threshold,
+        rebalance_max_moves=rebalance_max_moves, cc_labels=cc_labels)
+    for window in _iter_windows(updates, R):
+        session.apply_window(window)
+    return session.result()

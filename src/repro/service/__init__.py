@@ -1,0 +1,50 @@
+"""Graph query service: serve reads from device-resident analytics while
+the stream writes.
+
+BLADYG's premise is a graph that is *queried while it changes*; this
+package is the querying half.  It layers on the streaming runtime
+without forking it — one `StreamSession` (runtime/stream.py) applies
+update windows, and between windows the server answers typed query
+batches against versioned epoch snapshots of the maintained analytics:
+
+  state.py    — `AnalyticsState` / `EpochSnapshot`: consistent,
+                immutable (coreness, CC labels, PageRank, topology)
+                records cut by a warm-started `fused_analytics` pass and
+                published by reference swap (double buffering).
+  queries.py  — the typed query set (`core_of`, `degree_of`,
+                `nbr_max_core_of`, `same_component`, `topk_pagerank`):
+                jitted batched gathers, pow2-padded so the jit cache
+                keeps hitting; ONE device_get per answered batch.
+  server.py   — `QueryServer`: bounded-queue admission with a reject-new
+                shed policy, bucket-by-kind batching, and the scheduling
+                loop interleaving query batches between stream windows.
+  metrics.py  — `ServiceMetrics`: per-kind latency percentiles,
+                queries/sec, snapshot staleness, shed counts.
+
+Everything runs on the session's one executor with zero steady-state
+recompiles — counter-asserted in tests/test_service.py via
+`kernels.ops.gather_trace_count`, `queries.query_trace_count`, and
+`runtime.spmd.step_build_count`.
+"""
+from ..configs.service import ServiceConfig
+from .metrics import ServiceMetrics
+from .queries import (
+    KINDS,
+    Query,
+    core_of,
+    degree_of,
+    nbr_max_core_of,
+    query_trace_count,
+    same_component,
+    topk_pagerank,
+)
+from .server import QueryServer, Request
+from .state import AnalyticsState, EpochSnapshot
+
+__all__ = [
+    "ServiceConfig", "ServiceMetrics",
+    "KINDS", "Query", "core_of", "degree_of", "nbr_max_core_of",
+    "same_component", "topk_pagerank", "query_trace_count",
+    "QueryServer", "Request",
+    "AnalyticsState", "EpochSnapshot",
+]

@@ -1,0 +1,188 @@
+"""Typed graph queries: jitted batched gathers over an epoch snapshot.
+
+Every query kind is answered for a whole same-kind batch at once by ONE
+jitted device function and ONE `jax.device_get` of the compact answer
+array — queries never pull whole analytics vectors to the host.  Batches
+are padded to the pow2 bucket above their fill (`kernels.ops._pow2_bucket`
+floor 8) and top-k widths are pow2-bucketed the same way, so a steady
+query mix compiles each (kind, bucket) pair once and then only ever hits
+the jit cache; `_QUERY_TRACES` counts the compiles the same way
+`kernels.ops.gather_trace_count` counts adjacency-gather lowerings, and
+the serving tests assert it stops moving after warmup.
+
+Addressing: node arguments are global padded ids of the SNAPSHOT's
+epoch (the session's id space when the snapshot was cut; migrations make
+later epochs' spaces differ — `EpochSnapshot.orig_id` maps back to input
+ids).  Out-of-range ids are rejected at submit time by the server;
+padding-row ids are legal and answer with the padding conventions
+(core 0, degree 0, label -1).
+
+Query kinds:
+
+  core            — coreness of u                       -> int
+  degree          — degree of u                          -> int
+  nbr_max_core    — max coreness among u's neighbors     -> int (-1 if
+                    isolated; exercises the (N, Cd) adjacency gather)
+  same_component  — are u and v in one CC                -> bool
+  topk_pagerank   — ids + ranks of the k highest-rank    -> ([ids], [ranks])
+                    nodes, PageRank-descending
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.ops import _pow2_bucket
+from .state import EpochSnapshot
+
+#: every query kind the service answers (the server's bucket axis)
+KINDS = ("core", "degree", "nbr_max_core", "same_component",
+         "topk_pagerank")
+
+#: smallest padded batch — tiny buckets would fragment the jit cache
+BATCH_FLOOR = 8
+
+
+class Query(NamedTuple):
+    """One typed request; build via the constructors below."""
+
+    kind: str
+    u: int = 0
+    v: int = 0
+    k: int = 0
+
+
+def core_of(u: int) -> Query:
+    return Query("core", u=int(u))
+
+
+def degree_of(u: int) -> Query:
+    return Query("degree", u=int(u))
+
+
+def nbr_max_core_of(u: int) -> Query:
+    return Query("nbr_max_core", u=int(u))
+
+
+def same_component(u: int, v: int) -> Query:
+    return Query("same_component", u=int(u), v=int(v))
+
+
+def topk_pagerank(k: int) -> Query:
+    if k < 1:
+        raise ValueError(f"topk_pagerank needs k >= 1, got {k}")
+    return Query("topk_pagerank", k=int(k))
+
+
+# ---------------------------------------------------------------------------
+# Trace accounting: bumped at TRACE time inside each jitted answer fn, so
+# steady-state serving (stable kind/bucket mix) holds the count constant.
+# ---------------------------------------------------------------------------
+
+_QUERY_TRACES = 0
+
+
+def _count_trace() -> None:
+    global _QUERY_TRACES
+    _QUERY_TRACES += 1
+
+
+def query_trace_count() -> int:
+    """Query-kernel lowerings traced so far (see module docstring)."""
+    return _QUERY_TRACES
+
+
+# ---------------------------------------------------------------------------
+# The jitted batch kernels — one per kind, shapes are the cache key.
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def _batch_gather(field: jax.Array, ids: jax.Array) -> jax.Array:
+    """(N,) field, (B,) ids -> (B,) values (serves core AND degree)."""
+    _count_trace()
+    return field[ids]
+
+
+@jax.jit
+def _batch_nbr_max_core(core: jax.Array, nbr: jax.Array,
+                        ids: jax.Array) -> jax.Array:
+    """Max coreness over each queried node's neighbor row; -1 if none."""
+    _count_trace()
+    rows = nbr[ids]                          # (B, Cd)
+    vals = jnp.where(rows >= 0, core[jnp.clip(rows, 0)], -1)
+    return jnp.max(vals, axis=1)
+
+
+@jax.jit
+def _batch_same_component(labels: jax.Array, us: jax.Array,
+                          vs: jax.Array) -> jax.Array:
+    _count_trace()
+    return labels[us] == labels[vs]
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _batch_topk(rank: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
+    """(values, ids) of the k highest-rank nodes, rank-descending."""
+    _count_trace()
+    return jax.lax.top_k(rank, k)
+
+
+def batch_bucket(n: int) -> int:
+    """Padded batch width for an n-query batch (pow2, floor 8)."""
+    return _pow2_bucket(n, floor=BATCH_FLOOR)
+
+
+def topk_bucket(k: int, N: int) -> int:
+    """Static top-k width for a requested k (pow2-bucketed, capped at N)."""
+    return min(_pow2_bucket(k, floor=BATCH_FLOOR), N)
+
+
+def _pad_ids(vals: List[int], B: int) -> jax.Array:
+    out = np.zeros(B, np.int32)
+    out[:len(vals)] = vals
+    return jnp.asarray(out)
+
+
+def run_batch(snap: EpochSnapshot, kind: str, queries: List[Query],
+              k: int = 0) -> list:
+    """Answer one same-kind batch against a snapshot.
+
+    Pads to the pow2 bucket, runs the kind's jitted kernel, pulls the
+    compact answers with exactly ONE `jax.device_get`, and returns one
+    python answer per query (ints/bools; `topk_pagerank` returns
+    ([ids], [ranks]) sliced to each query's own k).  For
+    `topk_pagerank` the caller passes the shared bucketed width `k`
+    (`topk_bucket`); the server's bucketing guarantees every query in
+    the batch fits it.
+    """
+    n = len(queries)
+    if n == 0:
+        return []
+    if kind == "topk_pagerank":
+        vals, ids = _batch_topk(snap.rank, k=k)
+        vals_h, ids_h = jax.device_get((vals, ids))
+        return [(ids_h[:q.k].tolist(), vals_h[:q.k].tolist())
+                for q in queries]
+    B = batch_bucket(n)
+    if kind == "core":
+        out = _batch_gather(snap.core,
+                            _pad_ids([q.u for q in queries], B))
+    elif kind == "degree":
+        out = _batch_gather(snap.deg,
+                            _pad_ids([q.u for q in queries], B))
+    elif kind == "nbr_max_core":
+        out = _batch_nbr_max_core(snap.core, snap.nbr,
+                                  _pad_ids([q.u for q in queries], B))
+    elif kind == "same_component":
+        out = _batch_same_component(
+            snap.labels, _pad_ids([q.u for q in queries], B),
+            _pad_ids([q.v for q in queries], B))
+    else:
+        raise ValueError(f"unknown query kind {kind!r}; expected {KINDS}")
+    ans = jax.device_get(out)
+    return [x.item() for x in ans[:n]]

@@ -250,9 +250,10 @@ def test_run_stream_routing_transfers_per_window_not_per_superstep(
     core = coreness(g, backend="jnp")
     ups = [(0, 8, +1), (20, 30, +1), (40, 50, +1), (2, 10, +1)]
     count_device_get["n"] = 0
-    g2, core2, stats = run_stream(
+    res = run_stream(
         jax.tree.map(lambda x: jnp.copy(x) if hasattr(x, "dtype") else x, g),
         core, list(ups), R=2)
+    g2, core2, stats = res.g, res.core, res.stats
     n_gets = count_device_get["n"]
     assert stats.batches == 2
     assert stats.bfs_steps + stats.recompute_steps > stats.batches

@@ -73,7 +73,8 @@ def test_block_local_updates_ride_the_batched_path():
     core0 = coreness(g, backend="jnp")
     # one independent intra-block insertion per block: all block-local
     ups = [(_pad_id(g, b, 0), _pad_id(g, b, 5), +1) for b in range(P)]
-    g2, core2, st = run_stream(_clone(g), core0, ups, R=P)
+    res = run_stream(_clone(g), core0, ups, R=P)
+    g2, core2, st = res.g, res.core, res.stats
     assert st.block_local == P and st.escalated == 0
     assert st.per_block == (1,) * P
     assert (np.asarray(coreness(g2, backend="jnp"))
@@ -89,7 +90,8 @@ def test_cross_block_and_conflicts_escalate():
         (u00, _pad_id(g, 0, 6), +1),            # shares u00 -> conflict
         (_pad_id(g, 1, 0), _pad_id(g, 2, 0), +1),  # cross-block
     ]
-    g2, core2, st = run_stream(_clone(g), core0, ups, R=4)
+    res = run_stream(_clone(g), core0, ups, R=4)
+    g2, core2, st = res.g, res.core, res.stats
     assert st.escalated_cross_block == 1
     assert st.escalated_conflict >= 1
     # exactness regardless of routing decisions
@@ -108,7 +110,8 @@ def test_stream_exact_vs_sequential_on_general_graph():
            + sample_deletions(g, 3, "inter", seed=4)
            + sample_deletions(g, 3, "intra", seed=5))
     ref_g, ref_core, _ = maintain_batch_host(_clone(g), core0, list(ups))
-    g2, core2, st = run_stream(_clone(g), core0, ups, R=4)
+    res = run_stream(_clone(g), core0, ups, R=4)
+    g2, core2, st = res.g, res.core, res.stats
     assert (np.asarray(core2) == np.asarray(ref_core)).all()
     assert (np.asarray(g2.nbr) == np.asarray(ref_g.nbr)).all()
     assert st.updates == len(ups)
@@ -119,7 +122,8 @@ def test_stream_accepts_generators():
     g = community_graph()
     core0 = coreness(g, backend="jnp")
     ups = [(_pad_id(g, b, 1), _pad_id(g, b, 6), +1) for b in range(P)]
-    g2, core2, st = run_stream(_clone(g), core0, iter(ups), R=2)
+    res = run_stream(_clone(g), core0, iter(ups), R=2)
+    g2, core2, st = res.g, res.core, res.stats
     assert st.batches == 2 and st.updates == P
     assert (np.asarray(coreness(g2, backend="jnp"))
             == np.asarray(core2)).all()
@@ -130,9 +134,10 @@ def test_stream_spmd_backend_parity():
     core0 = coreness(g, backend="jnp")
     ups = [(_pad_id(g, 0, 0), _pad_id(g, 0, 5), +1),
            (_pad_id(g, 1, 0), _pad_id(g, 2, 0), +1)]
-    g_a, core_a, _ = run_stream(_clone(g), core0, ups, R=2, backend="jnp")
-    g_b, core_b, st = run_stream(_clone(g), core0, ups, R=2,
-                                 backend="ell_spmd")
+    res_a = run_stream(_clone(g), core0, ups, R=2, backend="jnp")
+    res_b = run_stream(_clone(g), core0, ups, R=2, backend="ell_spmd")
+    g_a, core_a = res_a.g, res_a.core
+    g_b, core_b = res_b.g, res_b.core
     assert (np.asarray(core_a) == np.asarray(core_b)).all()
     assert (np.asarray(g_a.nbr) == np.asarray(g_b.nbr)).all()
 
@@ -172,8 +177,8 @@ def test_stream_spmd_zero_full_rebuilds_in_steady_state():
     g = ba_graph()
     core0 = coreness(g, backend="jnp")
     ups = _mixed_updates(g)
-    g2, core2, st = run_stream(_clone(g), core0, ups, R=4,
-                               backend="ell_spmd")
+    res = run_stream(_clone(g), core0, ups, R=4, backend="ell_spmd")
+    g2, core2, st = res.g, res.core, res.stats
     assert st.plan_rebuilds == 0
     assert st.plan_updates > 0
     assert st.migrations == 0
@@ -191,11 +196,13 @@ def test_stream_threads_a_caller_owned_executor():
     core0 = coreness(g, backend="jnp")
     ex = SpmdExecutor(g)
     ups1 = [(_pad_id(g, b, 0), _pad_id(g, b, 5), +1) for b in range(P)]
-    g1, core1, st1 = run_stream(_clone(g), core0, ups1, R=P,
-                                backend="ell_spmd", executor=ex)
+    res1 = run_stream(_clone(g), core0, ups1, R=P,
+                      backend="ell_spmd", executor=ex)
+    g1, core1, st1 = res1.g, res1.core, res1.stats
     ups2 = [(_pad_id(g, b, 1), _pad_id(g, b, 6), +1) for b in range(P)]
-    g2, core2, st2 = run_stream(g1, core1, ups2, R=P,
-                                backend="ell_spmd", executor=ex)
+    res2 = run_stream(g1, core1, ups2, R=P,
+                      backend="ell_spmd", executor=ex)
+    g2, core2, st2 = res2.g, res2.core, res2.stats
     assert ex.full_rebuilds == 0
     assert ex.plan_updates == st1.plan_updates + st2.plan_updates
     assert (np.asarray(coreness(g2, backend="jnp"))
@@ -210,12 +217,13 @@ def test_stream_migration_keeps_coreness_bit_identical(backend):
     g = _skewed_graph()
     core0 = coreness(g, backend="jnp")
     ups = _mixed_updates(g)
-    ref_g, ref_core, ref_st = run_stream(_clone(g), core0, list(ups), R=4,
-                                         backend="jnp")
-    g2, core2, st = run_stream(_clone(g), core0, list(ups), R=4,
-                               backend=backend,
-                               rebalance_threshold=1.2,
-                               rebalance_max_moves=6)
+    ref = run_stream(_clone(g), core0, list(ups), R=4, backend="jnp")
+    ref_g, ref_core = ref.g, ref.core
+    res = run_stream(_clone(g), core0, list(ups), R=4,
+                     backend=backend,
+                     rebalance_threshold=1.2,
+                     rebalance_max_moves=6)
+    g2, core2, st = res.g, res.core, res.stats
     assert st.migrations > 0 and st.migrated_vertices > 0
     assert (_core_by_orig(g2, core2) == _core_by_orig(ref_g, ref_core)).all()
     # the edge set is preserved too (in original ids)
@@ -233,7 +241,7 @@ def test_stream_rebalance_disabled_never_migrates():
     g = _skewed_graph()
     core0 = coreness(g, backend="jnp")
     ups = _mixed_updates(g)[:4]
-    _, _, st = run_stream(_clone(g), core0, ups, R=4, backend="jnp")
+    st = run_stream(_clone(g), core0, ups, R=4, backend="jnp").stats
     assert st.migrations == 0 and st.migrated_vertices == 0
 
 
@@ -258,3 +266,69 @@ def test_stream_rejects_bad_window():
     u = _pad_id(g, 0, 0)
     with pytest.raises(ValueError):
         run_stream(g, core0, [(u, u, +1)], R=2)
+
+
+def test_stream_result_tuple_shim_warns_and_matches_arity():
+    """Legacy tuple unpacking still works — 3 fields without cc_labels,
+    4 with — behind a DeprecationWarning; named access never warns."""
+    import warnings
+
+    from repro.core.algorithms import connected_components
+    from repro.runtime import StreamResult
+
+    g = community_graph()
+    core0 = coreness(g, backend="jnp")
+    ups = [(_pad_id(g, 0, 0), _pad_id(g, 0, 5), +1)]
+    res = run_stream(_clone(g), core0, ups, R=2)
+    assert isinstance(res, StreamResult) and res.labels is None
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        g2, core2, st = res
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    assert g2 is res.g and core2 is res.core and st is res.stats
+
+    labels0 = connected_components(g, backend="jnp")
+    res4 = run_stream(_clone(g), core0, ups, R=2, cc_labels=labels0)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        _, _, _, labels = res4
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    assert labels is res4.labels and res4.labels is not None
+    # NamedTuple indexing/len see all 4 fields, warning-free
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert len(res) == 4 and res[3] is None and res4[3] is labels
+
+
+def test_stream_session_stepper_matches_run_stream():
+    """`run_stream` is a thin wrapper: hand-stepping the same windows
+    through a StreamSession reproduces its result bit-for-bit."""
+    from repro.runtime import StreamSession
+    from repro.runtime.stream import _iter_windows
+
+    g = ba_graph()
+    core0 = coreness(g, backend="jnp")
+    ups = _mixed_updates(g)
+    ref = run_stream(_clone(g), core0, list(ups), R=4)
+
+    sess = StreamSession(_clone(g), core0, R=4)
+    for i, window in enumerate(_iter_windows(list(ups), 4)):
+        sess.apply_window(window)
+        assert sess.windows_applied == i + 1
+    res = sess.result()
+    assert (np.asarray(res.core) == np.asarray(ref.core)).all()
+    assert (np.asarray(res.g.nbr) == np.asarray(ref.g.nbr)).all()
+    assert res.stats == ref.stats
+    # close is the documented alias and the session survives result()
+    assert sess.close().stats == res.stats
+
+
+def test_stream_session_rejects_oversized_window():
+    from repro.runtime import StreamSession
+
+    g = community_graph()
+    core0 = coreness(g, backend="jnp")
+    sess = StreamSession(_clone(g), core0, R=2)
+    ups = [(_pad_id(g, b, 0), _pad_id(g, b, 5), +1) for b in range(3)]
+    with pytest.raises(ValueError, match="exceeds R"):
+        sess.apply_window(ups)

@@ -341,8 +341,9 @@ def test_run_stream_maintains_cc_labels(backend):
     ups = (sample_insertions(g, 6, "inter", seed=33)
            + sample_deletions(g, 3, "intra", seed=34)
            + sample_insertions(g, 5, "intra", seed=35))
-    g2, core2, stats, labels = run_stream(
+    res = run_stream(
         g, core, list(ups), R=4, backend=backend, cc_labels=labels0)
+    g2, core2, stats, labels = res.g, res.core, res.stats, res.labels
     np.testing.assert_array_equal(
         np.asarray(labels),
         np.asarray(connected_components(g2, backend="jnp")))
@@ -360,8 +361,8 @@ def test_run_stream_insert_only_cc_never_recomputes():
     core = coreness(g, backend="jnp")
     labels0 = connected_components(g, backend="jnp")
     ups = sample_insertions(g, 8, "inter", seed=43)
-    g2, _, stats, labels = run_stream(
-        g, core, list(ups), R=4, cc_labels=labels0)
+    res = run_stream(g, core, list(ups), R=4, cc_labels=labels0)
+    g2, stats, labels = res.g, res.stats, res.labels
     assert stats.cc_recomputes == 0
     assert stats.cc_merges == len(ups)
     np.testing.assert_array_equal(
