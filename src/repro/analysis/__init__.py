@@ -1,0 +1,41 @@
+"""tracelint: repo-specific static analysis for the device-loop invariants.
+
+Seven PRs of discipline — sorted-ELL on every mutation path,
+pow2-bucketed compiled-cache keys, zero steady-state host syncs and
+retraces — live here as machine-checked rules instead of prose:
+
+* :mod:`repro.analysis.engine` — AST scan driver, ``# tracelint:``
+  pragmas, the committed-baseline mechanism.
+* :mod:`repro.analysis.rules` — the five AST rules (``host-sync``,
+  ``retrace-hazard``, ``sorted-ell``, ``cache-key``,
+  ``pallas-kernel``).
+* :mod:`repro.analysis.config` — boundary whitelists, cache-key
+  schemas, bucket-helper and seed-package inventories.
+* :mod:`repro.analysis.imports` — the ``dead-seed`` import-graph audit.
+* :mod:`repro.analysis.entrypoints` — the ``entrypoint-audit``
+  transfer-budget + jaxpr-purity manifest.
+
+CLI: ``python -m repro.analysis --check`` (see ``__main__``); docs:
+ARCHITECTURE.md "Enforced invariants".
+"""
+from .engine import (  # noqa: F401
+    Finding,
+    ModuleSource,
+    Rule,
+    RULES,
+    load_baseline,
+    partition_findings,
+    scan_source,
+    scan_tree,
+    write_baseline,
+)
+from .entrypoints import MANIFEST, count_device_gets, run_audit  # noqa: F401
+from .imports import audit_dead_seed, build_import_graph  # noqa: F401
+
+__all__ = [
+    "Finding", "ModuleSource", "Rule", "RULES",
+    "scan_source", "scan_tree",
+    "load_baseline", "write_baseline", "partition_findings",
+    "MANIFEST", "run_audit", "count_device_gets",
+    "audit_dead_seed", "build_import_graph",
+]

@@ -1,0 +1,115 @@
+"""``python -m repro.analysis`` — the tracelint CLI.
+
+Exit codes: 0 clean (or informational run), 1 non-baselined findings
+under ``--check``, 2 usage errors.
+
+Typical invocations::
+
+    python -m repro.analysis                 # scan + audit, print report
+    python -m repro.analysis --check         # CI gate: fail on new findings
+    python -m repro.analysis --write-baseline  # grandfather current findings
+    python -m repro.analysis --rules host-sync,sorted-ell --no-audit
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import List, Optional
+
+from . import config  # noqa: F401  (imported for rule side effects)
+from . import engine, entrypoints, imports
+
+
+def _default_root() -> Path:
+    """The directory containing the `repro` package (so scanned paths
+    read `repro/...`)."""
+    import repro
+
+    # `repro` is a namespace package (no __init__.py): locate via __path__
+    return Path(next(iter(repro.__path__))).resolve().parent
+
+
+def _default_baseline(root: Path) -> Path:
+    """`tracelint_baseline.json` at the repo root (one above `src/`),
+    falling back next to the scan root."""
+    repo = root.parent
+    cand = repo / "tracelint_baseline.json"
+    return cand if repo.is_dir() else root / "tracelint_baseline.json"
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="tracelint: enforce the BLADYG device-loop invariants")
+    p.add_argument("--root", type=Path, default=None,
+                   help="scan root (default: the dir containing `repro`)")
+    p.add_argument("--baseline", type=Path, default=None,
+                   help="baseline file (default: tracelint_baseline.json "
+                        "at the repo root)")
+    p.add_argument("--check", action="store_true",
+                   help="exit 1 if any non-baselined finding remains")
+    p.add_argument("--write-baseline", action="store_true",
+                   help="grandfather all current findings into the "
+                        "baseline file and exit")
+    p.add_argument("--rules", type=str, default=None,
+                   help="comma-separated rule ids (default: all AST rules)")
+    p.add_argument("--no-audit", action="store_true",
+                   help="skip the jaxpr/transfer entry-point audit")
+    p.add_argument("--no-imports", action="store_true",
+                   help="skip the dead-seed import audit")
+    p.add_argument("--report", type=Path, default=None,
+                   help="write the full findings report as JSON")
+    return p
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+    root = args.root if args.root is not None else _default_root()
+    if not (root / "repro").is_dir():
+        print(f"error: scan root {root} does not contain a `repro` "
+              "package", file=sys.stderr)
+        return 2
+    baseline_path = (args.baseline if args.baseline is not None
+                     else _default_baseline(root))
+    rules = ([r.strip() for r in args.rules.split(",") if r.strip()]
+             if args.rules else None)
+
+    findings = engine.scan_tree(root, rules=rules)
+    if not args.no_imports and rules is None:
+        findings.extend(imports.audit_dead_seed(root))
+    if not args.no_audit and rules is None:
+        findings.extend(entrypoints.run_audit())
+    findings.sort()
+
+    baseline = engine.load_baseline(baseline_path)
+    new, grandfathered = engine.partition_findings(findings, baseline)
+
+    if args.write_baseline:
+        engine.write_baseline(baseline_path, findings)
+        print(f"wrote {len(findings)} fingerprint(s) to {baseline_path}")
+        return 0
+
+    if args.report is not None:
+        args.report.write_text(json.dumps({
+            "root": str(root),
+            "total": len(findings),
+            "new": [f.to_json() for f in new],
+            "grandfathered": [f.to_json() for f in grandfathered],
+        }, indent=1) + "\n")
+
+    for f in new:
+        print(f)
+    summary = (f"tracelint: {len(new)} new finding(s), "
+               f"{len(grandfathered)} baselined, "
+               f"{len(engine.RULES)} AST rules + dead-seed"
+               + ("" if args.no_audit else " + entry-point audit"))
+    print(summary)
+    if args.check and new:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

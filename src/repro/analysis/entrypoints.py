@@ -1,0 +1,376 @@
+"""The entry-point audit: transfer budgets + jaxpr purity, as a manifest.
+
+The per-feature counter tests (`tests/test_device_fixpoints.py`,
+`tests/test_service.py`) pin "ONE device_get per window / batch /
+fixpoint" for the paths they grew up with.  This module generalizes
+that folklore into a declarative manifest: every registered public
+entry point states its **transfer budget** (how many `jax.device_get`
+calls one execution may make) and, where the entry is a pure jitted
+function, a **jaxpr probe** asserting its lowered program contains no
+callback/infeed/outfeed primitives — the primitives through which a
+host dependency could hide from the transfer counter.
+
+Budgets count `jax.device_get` calls only (parity with the existing
+counter tests).  `int()`/`np.asarray()` blocking syncs do NOT route
+through `device_get` — those are the host-sync AST rule's job; the two
+passes are complementary, not redundant.
+
+Everything runs on a tiny deterministic graph (two blocks, a few path
+components), so the audit is cheap enough for CI and for
+`tests/test_tracelint.py` to run wholesale.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from functools import partial
+from typing import Callable, List, Optional, Sequence, Tuple
+
+from .engine import Finding
+
+RULE_ID = "entrypoint-audit"
+
+
+# ---------------------------------------------------------------------------
+# Transfer counting (the same patch the counter tests use)
+# ---------------------------------------------------------------------------
+
+
+@contextlib.contextmanager
+def count_device_gets():
+    """Context manager counting `jax.device_get` calls; yields a 1-box."""
+    import jax
+
+    box = [0]
+    real = jax.device_get
+
+    def counting(x):
+        box[0] += 1
+        return real(x)
+
+    jax.device_get = counting
+    try:
+        yield box
+    finally:
+        jax.device_get = real
+
+
+# ---------------------------------------------------------------------------
+# jaxpr purity scan
+# ---------------------------------------------------------------------------
+
+#: primitive-name fragments that smuggle host interaction into a jaxpr
+FORBIDDEN_FRAGMENTS = ("callback", "infeed", "outfeed")
+
+
+def forbidden_primitives(closed_jaxpr) -> List[str]:
+    """Names of forbidden primitives anywhere in a jaxpr, recursively
+    (through pjit/while/cond/scan sub-jaxprs)."""
+    bad: List[str] = []
+    seen = set()
+
+    def sub_jaxprs(value):
+        if hasattr(value, "jaxpr"):         # ClosedJaxpr
+            yield value.jaxpr
+        elif hasattr(value, "eqns"):        # raw Jaxpr
+            yield value
+        elif isinstance(value, (tuple, list)):
+            for v in value:
+                yield from sub_jaxprs(v)
+
+    def walk(jaxpr):
+        if id(jaxpr) in seen:
+            return
+        seen.add(id(jaxpr))
+        for eqn in jaxpr.eqns:
+            name = eqn.primitive.name
+            if any(frag in name for frag in FORBIDDEN_FRAGMENTS):
+                bad.append(name)
+            for v in eqn.params.values():
+                for sub in sub_jaxprs(v):
+                    walk(sub)
+
+    walk(closed_jaxpr.jaxpr
+         if hasattr(closed_jaxpr, "jaxpr") else closed_jaxpr)
+    return bad
+
+
+# ---------------------------------------------------------------------------
+# The manifest
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class EntryPoint:
+    """One audited public entry point.
+
+    `prepare` builds everything host-side (graphs, executors, sessions —
+    uncounted) and returns `(fn, args)`; the audit then runs
+    `fn(*args)` under the transfer counter and compares against
+    `max_device_gets`.  With `probe=True` the audit additionally traces
+    `jax.make_jaxpr(fn)(*args)` and asserts the jaxpr is free of
+    callback/infeed/outfeed primitives — only set it on pure jittable
+    entries (host-boundary drivers cannot be traced whole).
+    """
+
+    name: str
+    invariant: str           # the prose contract this budget pins down
+    max_device_gets: int
+    prepare: Callable[[], Tuple[Callable, tuple]]
+    probe: bool = False
+
+
+# -- tiny deterministic world ------------------------------------------------
+
+_CTX: dict = {}
+
+
+def _tiny_blocks():
+    """Two blocks x 8 rows; four 2-node path components per block.
+
+    Small enough to audit in milliseconds, structured enough that an
+    insert between two block-0 components is block-local with disjoint
+    candidate sets (the clean-window case the stream budget pins).
+    """
+    if "g" in _CTX:
+        return _CTX["g"]
+    import numpy as np
+
+    from ..core.graph import build_blocks
+
+    edges = np.asarray(
+        [(0, 1), (2, 3), (4, 5), (6, 7),
+         (8, 9), (10, 11), (12, 13), (14, 15)], np.int32)
+    assign = np.asarray([0] * 8 + [1] * 8, np.int32)
+    g = _CTX["g"] = build_blocks(edges, 16, assign, P=2, deg_slack=6)
+    return g
+
+
+def _padded_of(g, orig: int) -> int:
+    import numpy as np
+
+    return int(np.flatnonzero(np.asarray(g.orig_id) == orig)[0])
+
+
+# -- prepare() builders ------------------------------------------------------
+
+
+def _prep_route_window():
+    import jax.numpy as jnp
+
+    from ..runtime.stream import _route_window
+
+    g = _tiny_blocks()
+    R, N = 4, g.N
+    cand = jnp.zeros((N, R), bool).at[0, 0].set(True).at[2, 0].set(True)
+    us = jnp.asarray([0, 0, 0, 0], jnp.int32)
+    vs = jnp.asarray([2, 0, 0, 0], jnp.int32)
+    ops_ = jnp.asarray([1, 0, 0, 0], jnp.int32)
+    valid = jnp.asarray([True, False, False, False])
+    fn = lambda c, u, v, o, w: _route_window(c, u, v, o, w, Cn=g.Cn)  # noqa: E731
+    return fn, (cand, us, vs, ops_, valid)
+
+
+def _prep_block_program_cc():
+    from ..core.algorithms import connected_components
+
+    g = _tiny_blocks()
+    return partial(connected_components, backend="jnp"), (g,)
+
+
+def _prep_fused_analytics():
+    from ..core.algorithms import fused_analytics
+
+    g = _tiny_blocks()
+    return partial(fused_analytics, backend="jnp", steps=4), (g,)
+
+
+def _prep_coreness(backend: str):
+    from ..kernels import ops
+
+    g = _tiny_blocks()
+    return partial(ops.coreness_blocks, backend=backend), (g,)
+
+
+def _prep_spmd_hindex():
+    import jax.numpy as jnp
+
+    from ..runtime.spmd import SpmdExecutor
+
+    g = _tiny_blocks()
+    if "ex" not in _CTX:
+        _CTX["ex"] = SpmdExecutor(g)
+    est = jnp.where(g.node_mask, g.deg, 0).astype(jnp.int32)
+    return _CTX["ex"].hindex, (est,)
+
+
+def _prep_spmd_coreness():
+    from ..runtime.spmd import SpmdExecutor
+
+    g = _tiny_blocks()
+    if "ex" not in _CTX:
+        _CTX["ex"] = SpmdExecutor(g)
+    return _CTX["ex"].coreness, ()
+
+
+def _copy_graph(g):
+    """Deep-copy a GraphBlocks pytree: the stream path CONSUMES its graph
+    via jit buffer donation, and the audit's tiny graph is shared."""
+    import jax
+    import jax.numpy as jnp
+
+    return jax.tree.map(
+        lambda x: jnp.copy(x) if hasattr(x, "dtype") else x, g)
+
+
+def _prep_apply_window_clean():
+    from ..core.kcore import coreness
+    from ..runtime.stream import StreamSession
+
+    g = _copy_graph(_tiny_blocks())
+    core = coreness(g, backend="jnp")
+    sess = StreamSession(g, core, R=4, backend="jnp")
+    # block-local insert joining two block-0 path components: candidate
+    # sets stay inside the block, the window routes clean (no escalation)
+    window = [(_padded_of(g, 0), _padded_of(g, 2), 1)]
+    return sess.apply_window, (window,)
+
+
+def _snapshot():
+    if "snap" in _CTX:
+        return _CTX["snap"]
+    from ..core.algorithms import fused_analytics
+    from ..service.state import EpochSnapshot
+
+    g = _tiny_blocks()
+    core, labels, rank = fused_analytics(g, backend="jnp", steps=4)
+    snap = _CTX["snap"] = EpochSnapshot(
+        epoch=0, windows=0, core=core, labels=labels, rank=rank,
+        deg=g.deg, nbr=g.nbr, node_mask=g.node_mask, orig_id=g.orig_id)
+    return snap
+
+
+def _prep_run_batch_core():
+    from ..service import queries as q
+
+    snap = _snapshot()
+    batch = [q.core_of(1), q.core_of(2), q.core_of(3)]
+    return partial(q.run_batch, snap, "core"), (batch,)
+
+
+def _prep_run_batch_topk():
+    from ..service import queries as q
+
+    snap = _snapshot()
+    k = q.topk_bucket(2, int(snap.core.shape[0]))
+    batch = [q.topk_pagerank(2)]
+    return partial(q.run_batch, snap, "topk_pagerank", k=k), (batch,)
+
+
+def _prep_batch_gather_probe():
+    import jax.numpy as jnp
+
+    from ..service.queries import _batch_gather
+
+    snap = _snapshot()
+    ids = jnp.asarray([0, 1, 2, 3], jnp.int32)
+    return _batch_gather, (snap.core, ids)
+
+
+MANIFEST: Tuple[EntryPoint, ...] = (
+    EntryPoint(
+        name="stream._route_window",
+        invariant="window routing is pure device code: the (N, R) "
+                  "candidate matrix never reaches the host",
+        max_device_gets=0, prepare=_prep_route_window, probe=True),
+    EntryPoint(
+        name="ops.run_block_program[cc,jnp]",
+        invariant="a fused block program makes no per-superstep "
+                  "transfers (one host read of n_real at entry, not "
+                  "via device_get)",
+        max_device_gets=0, prepare=_prep_block_program_cc),
+    EntryPoint(
+        name="algorithms.fused_analytics[jnp]",
+        invariant="the fused multi-field pass stays on device end to "
+                  "end",
+        max_device_gets=0, prepare=_prep_fused_analytics),
+    EntryPoint(
+        name="ops.coreness_blocks[jnp]",
+        invariant="the jnp fixpoint is one fused while_loop, zero "
+                  "transfers",
+        max_device_gets=0,
+        prepare=partial(_prep_coreness, "jnp")),
+    EntryPoint(
+        name="ops.coreness_blocks[ell]",
+        invariant="the ELL fixpoint makes exactly ONE transfer: the "
+                  "pow2-bucketed degree bound",
+        max_device_gets=1,
+        prepare=partial(_prep_coreness, "ell")),
+    EntryPoint(
+        name="SpmdExecutor.hindex",
+        invariant="a mesh superstep (halo exchange + kernel) is pure "
+                  "device code",
+        max_device_gets=0, prepare=_prep_spmd_hindex),
+    EntryPoint(
+        name="SpmdExecutor.coreness",
+        invariant="the fused on-mesh coreness loop transfers at most "
+                  "once (the fixpoint pull)",
+        max_device_gets=1, prepare=_prep_spmd_coreness),
+    EntryPoint(
+        name="StreamSession.apply_window[clean]",
+        invariant="a clean (non-escalating) stream window makes ONE "
+                  "bundled transfer: the compact routing verdict",
+        max_device_gets=1, prepare=_prep_apply_window_clean),
+    EntryPoint(
+        name="queries.run_batch[core]",
+        invariant="an answered query batch makes ONE transfer: the "
+                  "compact answer array",
+        max_device_gets=1, prepare=_prep_run_batch_core),
+    EntryPoint(
+        name="queries.run_batch[topk_pagerank]",
+        invariant="a top-k batch makes ONE transfer: the (values, ids) "
+                  "pair",
+        max_device_gets=1, prepare=_prep_run_batch_topk),
+    EntryPoint(
+        name="queries._batch_gather",
+        invariant="the query kernels are pure gathers",
+        max_device_gets=0, prepare=_prep_batch_gather_probe, probe=True),
+)
+
+
+def run_audit(
+    entries: Optional[Sequence[EntryPoint]] = None,
+) -> List[Finding]:
+    """Execute the manifest; one finding per violated budget/probe."""
+    import jax
+
+    findings: List[Finding] = []
+    for ep in (MANIFEST if entries is None else entries):
+        fn, args = ep.prepare()
+        try:
+            with count_device_gets() as box:
+                out = fn(*args)
+                jax.block_until_ready(out)
+        except Exception as e:  # an entry that cannot run is a finding
+            findings.append(Finding(
+                path="<audit>", line=0, rule=RULE_ID,
+                message=f"{ep.name}: failed to execute: {e!r}",
+                snippet=ep.name))
+            continue
+        if box[0] > ep.max_device_gets:
+            findings.append(Finding(
+                path="<audit>", line=0, rule=RULE_ID,
+                message=(f"{ep.name}: {box[0]} device_get call(s), budget "
+                         f"{ep.max_device_gets} — violated invariant: "
+                         f"{ep.invariant}"),
+                snippet=ep.name))
+        if ep.probe:
+            jaxpr = jax.make_jaxpr(fn)(*args)
+            bad = forbidden_primitives(jaxpr)
+            if bad:
+                findings.append(Finding(
+                    path="<audit>", line=0, rule=RULE_ID,
+                    message=(f"{ep.name}: jaxpr contains host-interaction "
+                             f"primitives {sorted(set(bad))}"),
+                    snippet=ep.name))
+    return findings

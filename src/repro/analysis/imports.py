@@ -1,0 +1,135 @@
+"""Dead-seed audit: flag seed modules graph code never imports.
+
+The repo grew out of a seed that shipped an LLM-training substrate
+(`models/`, `optim/`, `data/`, `launch/`, `distributed/`, the
+architecture files in `configs/`).  The BLADYG product surface is
+`repro.{core,kernels,runtime,service,graphgen,checkpoint}`; anything
+outside it that those packages never (transitively) import is seed
+substrate and must be explicitly quarantined — a documented
+``seed_fixtures`` note in its package ``__init__`` — rather than
+silently riding along as if it were product code.
+
+The import graph is *static and by-name*: an edge exists when a module
+names another in an ``import``/``from`` statement (relative imports
+resolved).  Parent-package ``__init__`` side effects are deliberately
+NOT modeled — importing ``repro.configs.service`` does execute
+``repro.configs.__init__`` at runtime, but the audit asks "does graph
+code *name* this module", which is the dependency a refactor must
+preserve.  The quarantine marker covers the side-effect-loaded rest.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, List, Set
+
+from . import config
+from .engine import Finding, iter_py_files
+
+RULE_ID = "dead-seed"
+
+
+def module_name(rel_posix: str) -> str:
+    """'repro/core/graph.py' -> 'repro.core.graph';
+    'repro/models/__init__.py' -> 'repro.models'."""
+    parts = rel_posix[:-3].split("/")  # strip .py
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+def build_import_graph(root: Path) -> Dict[str, Set[str]]:
+    """module -> set of (known, in-tree) modules it names."""
+    root = Path(root)
+    paths = {module_name(p.relative_to(root).as_posix()): p
+             for p in iter_py_files(root)}
+    known = set(paths)
+    edges: Dict[str, Set[str]] = {m: set() for m in known}
+
+    for mod, path in paths.items():
+        try:
+            tree = ast.parse(path.read_text())
+        except SyntaxError:
+            continue
+        pkg_parts = mod.split(".")
+        for node in ast.walk(tree):
+            targets: List[str] = []
+            if isinstance(node, ast.Import):
+                targets = [a.name for a in node.names]
+            elif isinstance(node, ast.ImportFrom):
+                if node.level:
+                    # relative: drop `level` trailing components of the
+                    # *package* path (a module's package is its parent)
+                    base_parts = pkg_parts[:-1] if path.name != "__init__.py" \
+                        else pkg_parts
+                    base_parts = base_parts[:len(base_parts) - node.level + 1]
+                    base = ".".join(base_parts)
+                else:
+                    base = ""
+                stem = (f"{base}.{node.module}" if base and node.module
+                        else (node.module or base))
+                if stem:
+                    targets.append(stem)
+                    targets.extend(f"{stem}.{a.name}" for a in node.names)
+            for t in targets:
+                # longest known prefix of the dotted target
+                parts = t.split(".")
+                for i in range(len(parts), 0, -1):
+                    cand = ".".join(parts[:i])
+                    if cand in known and cand != mod:
+                        edges[mod].add(cand)
+                        break
+    return edges
+
+
+def reachable_modules(edges: Dict[str, Set[str]]) -> Set[str]:
+    """Closure of the product-surface roots over the import graph."""
+    roots = [m for m in edges
+             if any(m == r or m.startswith(r + ".")
+                    for r in config.REACHABILITY_ROOTS)]
+    seen = set(roots)
+    stack = list(roots)
+    while stack:
+        for nxt in edges.get(stack.pop(), ()):
+            if nxt not in seen:
+                seen.add(nxt)
+                stack.append(nxt)
+    return seen
+
+
+def _quarantined(root: Path, mod: str) -> bool:
+    """True if `mod` or any ancestor package carries the seed marker in
+    its `__init__` source."""
+    parts = mod.split(".")
+    for i in range(len(parts), 0, -1):
+        init = root.joinpath(*parts[:i]) / "__init__.py"
+        if init.exists() and config.SEED_MARKER in init.read_text():
+            return True
+    return False
+
+
+def audit_dead_seed(root: Path) -> List[Finding]:
+    """Findings for unreachable modules lacking a seed_fixtures note."""
+    root = Path(root)
+    relpath = {module_name(p.relative_to(root).as_posix()):
+               p.relative_to(root).as_posix()
+               for p in iter_py_files(root)}
+    edges = build_import_graph(root)
+    live = reachable_modules(edges)
+    findings: List[Finding] = []
+    for mod in sorted(edges):
+        if mod in live or mod == "repro":
+            continue
+        if mod.startswith("repro.analysis"):
+            continue  # the linter itself is tooling, not product surface
+        if _quarantined(root, mod):
+            continue
+        findings.append(Finding(
+            path=relpath.get(mod, mod.replace(".", "/") + ".py"), line=0,
+            rule=RULE_ID,
+            message=(f"`{mod}` is unreachable from the product packages "
+                     f"({', '.join(config.REACHABILITY_ROOTS)}) and its "
+                     "package __init__ carries no `seed_fixtures` note: "
+                     "either wire it in or quarantine it explicitly"),
+            snippet=mod))
+    return findings

@@ -1,0 +1,749 @@
+"""The tracelint AST rules — one class per enforced invariant.
+
+Rule ids (stable; pragmas, the baseline, and ARCHITECTURE.md key on
+them):
+
+* ``host-sync`` — no device→host synchronization inside the protected
+  packages outside whitelisted boundary functions.
+* ``retrace-hazard`` — shape/data-derived values must pass through the
+  pow2 bucket helpers before reaching jit static args or compiled-cache
+  keys; no un-memoized jit construction inside function bodies; no
+  mutable defaults on jitted/cached functions.
+* ``sorted-ell`` — every write to a `nbr` adjacency routes through the
+  approved sort/splice helpers.
+* ``cache-key`` — compiled-function caches must be registered in
+  `config.CACHE_SCHEMAS` and key on their full declared tuple.
+* ``pallas-kernel`` — kernel bodies use `lax` loops (not Python loops
+  over possibly-traced dims); `pallas_call` specs stay consistent.
+
+All rules are heuristic in the way static analysis must be: they see
+names and shapes of expressions, not values.  Each rule's docstring
+states exactly what is matched so a reader can predict (and with a
+``# tracelint: disable=`` pragma, override) any individual verdict.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Iterator, List, Optional, Sequence, Tuple
+
+from . import config
+from .engine import Finding, ModuleSource, Rule, register
+
+
+# ---------------------------------------------------------------------------
+# Shared AST helpers
+# ---------------------------------------------------------------------------
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """'jax.device_get' for Attribute chains / Names; None otherwise."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = dotted_name(node.value)
+        return f"{base}.{node.attr}" if base else None
+    return None
+
+
+def call_name(node: ast.Call) -> Optional[str]:
+    return dotted_name(node.func)
+
+
+def contains_call(node: ast.AST, names: Iterable[str]) -> bool:
+    """True if any descendant Call's dotted name (or its last component)
+    is in `names`."""
+    names = set(names)
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            name = call_name(sub)
+            if name and (name in names or name.split(".")[-1] in names):
+                return True
+    return False
+
+
+def _mentions_jax(node: ast.AST) -> bool:
+    """True if the expression subtree references jax/jnp (so `int(...)`
+    of it plausibly blocks on a device value)."""
+    for sub in ast.walk(node):
+        name = dotted_name(sub) or ""
+        if name.startswith(("jnp.", "jax.")) or name in ("jnp", "jax"):
+            return True
+    return False
+
+
+#: compound statements own nested statements; yielding them alongside
+#: their children would double-count (and over-sanction) every nested site
+_COMPOUND_STMTS = (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef,
+                   ast.If, ast.For, ast.AsyncFor, ast.While, ast.With,
+                   ast.AsyncWith, ast.Try)
+
+
+def _statements(tree: ast.AST) -> Iterator[ast.stmt]:
+    """Leaf (non-compound) statements of a module."""
+    for node in ast.walk(tree):
+        if isinstance(node, ast.stmt) and not isinstance(
+                node, _COMPOUND_STMTS):
+            yield node
+
+
+def _decorator_names(fn: ast.AST) -> List[str]:
+    """Dotted names of a def's decorators; `partial(jax.jit, ...)` and
+    `lru_cache(...)` report their callee ('functools.partial' resolves
+    to its first argument's name)."""
+    out: List[str] = []
+    for dec in getattr(fn, "decorator_list", []):
+        if isinstance(dec, ast.Call):
+            name = dotted_name(dec.func) or ""
+            if name.split(".")[-1] == "partial" and dec.args:
+                inner = dotted_name(dec.args[0])
+                if inner:
+                    out.append(inner)
+                    continue
+            out.append(name)
+        else:
+            out.append(dotted_name(dec) or "")
+    return out
+
+
+def _is_jit_name(name: str) -> bool:
+    return name.split(".")[-1] == "jit"
+
+
+def _is_cache_decorator(name: str) -> bool:
+    return name.split(".")[-1] in ("lru_cache", "cache")
+
+
+# ---------------------------------------------------------------------------
+# host-sync
+# ---------------------------------------------------------------------------
+
+
+@register
+class HostSyncRule(Rule):
+    """No device→host pulls in the protected device-loop packages.
+
+    Flags, inside `config.SYNC_SCOPE` files and outside whitelisted
+    boundary functions (`config.HOST_BOUNDARIES` or a
+    ``# tracelint: boundary`` def-line pragma):
+
+    * ``jax.device_get(...)`` calls,
+    * ``.item()`` calls (host scalar extraction),
+    * ``np.asarray(...)`` / ``np.array(...)`` — a blocking transfer
+      when the argument is a device array, and it bypasses
+      `jax.device_get` (so counter-based tests never see it),
+    * ``int(x)`` / ``float(x)`` / ``bool(x)`` where `x` mentions
+      jax/jnp — a blocking sync on a traced/device value.  Exempt when
+      the argument already contains a `device_get` (that call is the
+      finding; flagging both would double-count one transfer).
+
+    The zero-steady-state-sync contract these protect is the load-
+    bearing performance invariant of the whole runtime: ONE bundled
+    transfer per stream window / query batch / fixpoint, everything
+    else stays on device (ARCHITECTURE.md "Enforced invariants").
+    """
+
+    id = "host-sync"
+    summary = "device→host sync outside a whitelisted boundary"
+
+    def applies(self, path: str) -> bool:
+        return config.in_sync_scope(path)
+
+    def check(self, mod: ModuleSource) -> Iterator[Finding]:
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            kind = self._sync_kind(node)
+            if kind is None or mod.is_boundary(node):
+                continue
+            yield mod.finding(
+                self.id, node,
+                f"{kind} synchronizes host and device inside a protected "
+                "device loop; move it behind a whitelisted boundary "
+                "function or keep the value on device")
+
+    @staticmethod
+    def _sync_kind(node: ast.Call) -> Optional[str]:
+        name = call_name(node)
+        if name in ("jax.device_get", "device_get"):
+            return "jax.device_get()"
+        if (isinstance(node.func, ast.Attribute) and node.func.attr == "item"
+                and not node.args and not node.keywords):
+            return ".item()"
+        if name in ("np.asarray", "numpy.asarray", "np.array",
+                    "numpy.array"):
+            return f"{name}() on a (possibly device) array"
+        if (name in ("int", "float", "bool") and len(node.args) == 1
+                and not node.keywords and _mentions_jax(node.args[0])
+                and not contains_call(node.args[0], {"device_get"})):
+            return f"{name}() on a jax value"
+        return None
+
+
+# ---------------------------------------------------------------------------
+# retrace-hazard
+# ---------------------------------------------------------------------------
+
+
+@register
+class RetraceHazardRule(Rule):
+    """Shape-derived statics must be pow2-bucketed; jit wrappers must be
+    memoized; static/cached args must be hashable.
+
+    Three checks inside `config.SYNC_SCOPE`:
+
+    1. **Unbucketed shape-derived scalar**: an ``int(...)`` or
+       ``jax.device_get(...)`` whose argument reads ``.shape`` or
+       reduces a degree vector (``jnp.max/min(... .deg ...)``) produces
+       a value that varies with the data — if it reaches a jit static
+       argument or cache key, every distinct value is a fresh compile.
+       The statement must route the value through one of the
+       `config.BUCKET_HELPERS` (`_pow2_bucket` & co.); the helpers'
+       own bodies are exempt.
+    2. **Un-memoized nested jit**: calling ``jax.jit`` inside a
+       function body builds a NEW compiled callable per call — its
+       cache is thrown away every time.  Exempt when an enclosing
+       function carries `lru_cache`/`cache` (the `_compiled_*` pattern)
+       or is a registered factory (`config.JIT_FACTORIES`).
+    3. **Mutable default on a jitted/cached def**: a list/dict/set
+       default on a function under `jax.jit` or `lru_cache` is either
+       unhashable (TypeError at call time) or a shared mutable key.
+    """
+
+    id = "retrace-hazard"
+    summary = "shape-derived static / un-memoized jit / unhashable key"
+
+    def applies(self, path: str) -> bool:
+        return config.in_sync_scope(path)
+
+    def check(self, mod: ModuleSource) -> Iterator[Finding]:
+        yield from self._check_shape_derived(mod)
+        yield from self._check_nested_jit(mod)
+        yield from self._check_mutable_defaults(mod)
+
+    # -- 1: unbucketed shape-derived host scalars --------------------------
+
+    def _check_shape_derived(self, mod: ModuleSource) -> Iterator[Finding]:
+        for stmt in _statements(mod.tree):
+            if contains_call(stmt, config.BUCKET_HELPERS):
+                continue  # bucketed somewhere in this statement: sanctioned
+            for node in ast.walk(stmt):
+                if not (isinstance(node, ast.Call)
+                        and call_name(node) in (
+                            "int", "jax.device_get", "device_get")
+                        and node.args):
+                    continue
+                if not self._shape_derived(node.args[0]):
+                    continue
+                names = mod.enclosing_names(node)
+                if any(n in config.BUCKET_HELPERS for n in names):
+                    continue  # inside a bucket helper itself
+                yield mod.finding(
+                    self.id, node,
+                    "shape/degree-derived host scalar never passes a pow2 "
+                    "bucket helper (_pow2_bucket/degree_bound/...): as a "
+                    "jit static or cache key it compiles once per "
+                    "distinct value")
+                break  # one finding per statement is enough
+
+    @staticmethod
+    def _shape_derived(node: ast.AST) -> bool:
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Attribute) and sub.attr == "shape":
+                return True
+            if (isinstance(sub, ast.Call)
+                    and (call_name(sub) or "").split(".")[-1]
+                    in ("max", "min")):
+                if any(isinstance(s, ast.Attribute) and s.attr == "deg"
+                       for s in ast.walk(sub)):
+                    return True
+        return False
+
+    # -- 2: nested, un-memoized jit ----------------------------------------
+
+    def _check_nested_jit(self, mod: ModuleSource) -> Iterator[Finding]:
+        for node in ast.walk(mod.tree):
+            if not (isinstance(node, ast.Call)
+                    and _is_jit_name(call_name(node) or "")):
+                continue
+            enclosing = mod.enclosing_functions(node)
+            if not enclosing:
+                continue  # module-level jit: compiled once, cached forever
+            if any(n in config.JIT_FACTORIES
+                   for n in mod.enclosing_names(node)):
+                continue
+            if any(_is_cache_decorator(d)
+                   for f in enclosing for d in _decorator_names(f)):
+                continue  # the lru_cache'd _compiled_* factory pattern
+            yield mod.finding(
+                self.id, node,
+                "jax.jit(...) built inside a function body without an "
+                "enclosing lru_cache: a fresh compiled callable (and a "
+                "thrown-away trace cache) per call")
+
+    # -- 3: mutable defaults on jitted/cached defs -------------------------
+
+    def _check_mutable_defaults(self, mod: ModuleSource) -> Iterator[Finding]:
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            decs = _decorator_names(node)
+            if not any(_is_jit_name(d) or _is_cache_decorator(d)
+                       for d in decs):
+                continue
+            defaults = list(node.args.defaults) + [
+                d for d in node.args.kw_defaults if d is not None]
+            for d in defaults:
+                if isinstance(d, (ast.List, ast.Dict, ast.Set)):
+                    yield mod.finding(
+                        self.id, d,
+                        f"mutable default on jitted/cached `{node.name}`: "
+                        "unhashable as a static/cache key (and shared "
+                        "across calls)")
+
+
+# ---------------------------------------------------------------------------
+# sorted-ell
+# ---------------------------------------------------------------------------
+
+
+@register
+class SortedEllRule(Rule):
+    """Every `nbr` write routes through the approved sort/splice helpers.
+
+    The sorted-ELL invariant (valid slots of every adjacency row
+    ascending, PAD=-1 slots packed right) is what the merge-intersection
+    triangle kernel and the O(log Cd) row probes rely on; ONE unsorted
+    write anywhere silently corrupts their results.
+
+    Flags, in every non-seed `repro` module, writes to a `nbr` target —
+    ``nbr[...] = ...`` / ``g.nbr[...] = ...`` subscript stores,
+    ``... .nbr.at[...].set/add/max/min(...)`` functional updates, and
+    ``nbr=`` keyword arguments to `dataclasses.replace` /
+    `GraphBlocks(...)` — unless the written value's expression contains
+    a call to an approved helper (`config.SORTED_ELL_HELPERS`: the
+    sort + the four splice routines) or the enclosing function is an
+    approved raw writer (`config.SORTED_ELL_WRITERS`: the helpers
+    themselves and the constructors that end with `sort_nbr_rows`).
+
+    A bare-name value is resolved ONE assignment deep inside the
+    enclosing function: ``nbr = g.nbr.at[u].set(_sorted_insert_row(...))``
+    followed by ``replace(g, nbr=nbr)`` is approved, because the local's
+    defining statement routes through a helper.  Deeper dataflow is out
+    of scope — thread the helper call within one assignment of the write.
+
+    Matching is exact on the name ``nbr`` (so `nbr_local`, halo tables
+    etc. never trigger).
+    """
+
+    id = "sorted-ell"
+    summary = "nbr write bypassing the sorted-ELL helpers"
+
+    _AT_SETTERS = ("set", "add", "max", "min", "mul", "apply")
+
+    def applies(self, path: str) -> bool:
+        return path.startswith("repro/") and not config.is_seed(path)
+
+    def check(self, mod: ModuleSource) -> Iterator[Finding]:
+        for node in ast.walk(mod.tree):
+            for site, value in self._nbr_writes(node):
+                if self._approved(mod, site, value):
+                    continue
+                yield mod.finding(
+                    self.id, site,
+                    "write to `nbr` bypasses the approved sorted-ELL "
+                    "helpers (sort_nbr_rows / _sorted_insert_row / "
+                    "_sorted_delete_row / _insert_sorted / "
+                    "_delete_sorted): an unsorted row breaks the "
+                    "merge-intersection and binary-probe kernels")
+
+    def _approved(self, mod: ModuleSource, site: ast.AST,
+                  value: Optional[ast.AST]) -> bool:
+        if value is not None and contains_call(
+                value, config.SORTED_ELL_HELPERS):
+            return True
+        if isinstance(value, ast.Name) and self._local_routes_through(
+                mod, site, value.id):
+            return True
+        return any(n in config.SORTED_ELL_WRITERS
+                   for n in mod.enclosing_names(site))
+
+    @staticmethod
+    def _local_routes_through(mod: ModuleSource, site: ast.AST,
+                              name: str) -> bool:
+        """One-deep dataflow: does a local assignment `name = ...` in the
+        enclosing function route through an approved helper?"""
+        fns = mod.enclosing_functions(site)
+        if not fns:
+            return False
+        for stmt in ast.walk(fns[-1]):
+            if isinstance(stmt, ast.Assign):
+                targets = stmt.targets
+            elif isinstance(stmt, ast.AnnAssign):
+                targets = [stmt.target]
+            else:
+                continue
+            if stmt.value is None:
+                continue
+            if any(isinstance(t, ast.Name) and t.id == name
+                   for t in targets) and contains_call(
+                       stmt.value, config.SORTED_ELL_HELPERS):
+                return True
+        return False
+
+    @classmethod
+    def _nbr_writes(
+        cls, node: ast.AST,
+    ) -> Iterator[Tuple[ast.AST, Optional[ast.AST]]]:
+        """(site, written-value) pairs for `nbr` mutations at `node`."""
+        if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            targets = (node.targets if isinstance(node, ast.Assign)
+                       else [node.target])
+            for t in targets:
+                elts = t.elts if isinstance(t, ast.Tuple) else [t]
+                for e in elts:
+                    if cls._is_nbr_store_target(e):
+                        yield e, getattr(node, "value", None)
+        elif isinstance(node, ast.Call):
+            # <...>.nbr.at[...].set(value)
+            f = node.func
+            if (isinstance(f, ast.Attribute) and f.attr in cls._AT_SETTERS
+                    and isinstance(f.value, ast.Subscript)
+                    and isinstance(f.value.value, ast.Attribute)
+                    and f.value.value.attr == "at"
+                    and cls._is_nbr_ref(f.value.value.value)):
+                val = node.args[0] if node.args else None
+                yield node, val
+            # dataclasses.replace(g, nbr=...) / GraphBlocks(..., nbr=...)
+            name = (call_name(node) or "").split(".")[-1]
+            if name in ("replace", "GraphBlocks"):
+                for kw in node.keywords:
+                    if kw.arg == "nbr":
+                        yield node, kw.value
+
+    @classmethod
+    def _is_nbr_store_target(cls, t: ast.AST) -> bool:
+        if isinstance(t, ast.Subscript):
+            return cls._is_nbr_ref(t.value)
+        return isinstance(t, ast.Attribute) and t.attr == "nbr"
+
+    @staticmethod
+    def _is_nbr_ref(node: ast.AST) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id == "nbr"
+        return isinstance(node, ast.Attribute) and node.attr == "nbr"
+
+
+# ---------------------------------------------------------------------------
+# cache-key
+# ---------------------------------------------------------------------------
+
+
+@register
+class CacheKeyRule(Rule):
+    """Compiled-function caches must register and carry their full key.
+
+    Two cache-site patterns are detected inside `config.SYNC_SCOPE`:
+
+    * ``@functools.lru_cache`` / ``@cache`` defs — the parameter list IS
+      the key; it must include every name in the site's registered
+      schema (`config.CACHE_SCHEMAS`, keyed ``path::funcname``).
+    * dict caches — an (ann)assignment of a dict literal to a name or
+      attribute containing ``cache`` (e.g. ``self._step_cache = {}``).
+      Every tuple key stored/looked up on that name in the module (via
+      ``[...]``, ``.get``, ``.setdefault``, or a `key = (...)` local
+      resolved one assignment deep) must mention every schema name —
+      element names are the trailing identifier (`ex.wm.mesh` counts
+      as ``mesh``); string/number literals are free discriminators.
+
+    A detected site with NO schema entry is itself a finding: new
+    caches must declare their key in `config.CACHE_SCHEMAS` so the
+    reviewer sees exactly what the compiled artifact varies over —
+    under-keyed caches (the (mesh, H) bugs of PRs 2-6) silently serve
+    stale compilations when a forgotten axis changes.
+    """
+
+    id = "cache-key"
+    summary = "unregistered or under-keyed compiled-function cache"
+
+    def applies(self, path: str) -> bool:
+        return config.in_sync_scope(path)
+
+    def check(self, mod: ModuleSource) -> Iterator[Finding]:
+        yield from self._check_lru_sites(mod)
+        yield from self._check_dict_sites(mod)
+
+    # -- lru_cache sites ---------------------------------------------------
+
+    def _check_lru_sites(self, mod: ModuleSource) -> Iterator[Finding]:
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if not any(_is_cache_decorator(d)
+                       for d in _decorator_names(node)):
+                continue
+            key = f"{mod.path}::{node.name}"
+            schema = config.CACHE_SCHEMAS.get(key)
+            if schema is None:
+                yield mod.finding(
+                    self.id, node,
+                    f"lru_cache site `{node.name}` is not registered; add "
+                    f'"{key}" with its key names to '
+                    "analysis/config.CACHE_SCHEMAS")
+                continue
+            params = {a.arg for a in (node.args.posonlyargs + node.args.args
+                                      + node.args.kwonlyargs)}
+            missing = [s for s in schema if s not in params]
+            if missing:
+                yield mod.finding(
+                    self.id, node,
+                    f"lru_cache site `{node.name}` is missing registered "
+                    f"key fields {missing}: cached compilations would be "
+                    "shared across values that must not share them")
+
+    # -- dict cache sites --------------------------------------------------
+
+    def _check_dict_sites(self, mod: ModuleSource) -> Iterator[Finding]:
+        sites = {}  # cache attr/name -> defining node
+        for node in ast.walk(mod.tree):
+            target = value = None
+            if isinstance(node, ast.Assign) and len(node.targets) == 1:
+                target, value = node.targets[0], node.value
+            elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                target, value = node.target, node.value
+            if target is None or not isinstance(value, ast.Dict):
+                continue
+            name = (target.id if isinstance(target, ast.Name)
+                    else target.attr if isinstance(target, ast.Attribute)
+                    else None)
+            if name and "cache" in name.lower():
+                sites.setdefault(name, node)
+        for name, site in sites.items():
+            key = f"{mod.path}::{name}"
+            schema = config.CACHE_SCHEMAS.get(key)
+            if schema is None:
+                yield mod.finding(
+                    self.id, site,
+                    f"dict cache `{name}` is not registered; add "
+                    f'"{key}" with its key names to '
+                    "analysis/config.CACHE_SCHEMAS")
+                continue
+            for use, key_expr in self._key_exprs(mod, name):
+                tup = self._resolve_tuple(mod, use, key_expr)
+                if tup is None:
+                    continue  # opaque key expression: nothing to verify
+                names = {n for n in map(self._element_name, tup.elts) if n}
+                missing = [s for s in schema if s not in names]
+                if missing:
+                    yield mod.finding(
+                        self.id, use,
+                        f"cache key for `{name}` is missing registered "
+                        f"fields {missing}: a change in those would "
+                        "silently reuse a stale compilation")
+
+    @staticmethod
+    def _key_exprs(mod: ModuleSource,
+                   name: str) -> Iterator[Tuple[ast.AST, ast.AST]]:
+        """(usage-node, key-expression) for subscripts / .get / .setdefault
+        on the cache called `name`."""
+        def is_cache_ref(n: ast.AST) -> bool:
+            return ((isinstance(n, ast.Name) and n.id == name)
+                    or (isinstance(n, ast.Attribute) and n.attr == name))
+
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Subscript) and is_cache_ref(node.value):
+                yield node, node.slice
+            elif (isinstance(node, ast.Call)
+                  and isinstance(node.func, ast.Attribute)
+                  and node.func.attr in ("get", "setdefault", "pop")
+                  and is_cache_ref(node.func.value) and node.args):
+                yield node, node.args[0]
+
+    @staticmethod
+    def _resolve_tuple(mod: ModuleSource, use: ast.AST,
+                       expr: ast.AST) -> Optional[ast.Tuple]:
+        if isinstance(expr, ast.Tuple):
+            return expr
+        if isinstance(expr, ast.Name):
+            # one-assignment-deep local resolution within the same function
+            funcs = mod.enclosing_functions(use)
+            scope = funcs[-1] if funcs else mod.tree
+            found = None
+            for node in ast.walk(scope):
+                if (isinstance(node, ast.Assign)
+                        and len(node.targets) == 1
+                        and isinstance(node.targets[0], ast.Name)
+                        and node.targets[0].id == expr.id
+                        and isinstance(node.value, ast.Tuple)):
+                    found = node.value
+            return found
+        return None
+
+    @staticmethod
+    def _element_name(node: ast.AST) -> Optional[str]:
+        if isinstance(node, ast.Constant):
+            return None  # literal discriminators are free
+        name = dotted_name(node)
+        if name:
+            return name.split(".")[-1]
+        if isinstance(node, ast.Call):
+            inner = call_name(node)
+            return inner.split(".")[-1] if inner else None
+        return None
+
+
+# ---------------------------------------------------------------------------
+# pallas-kernel
+# ---------------------------------------------------------------------------
+
+
+@register
+class PallasKernelRule(Rule):
+    """Kernel bodies loop with `lax`, and `pallas_call` specs line up.
+
+    Scope: ``repro/kernels/ell_*.py``.  Inside functions named
+    ``*_kernel`` (the functions handed to `pl.pallas_call`):
+
+    * ``while`` statements and ``for ... in range(x)`` where `x` is not
+      an integer literal (or a module-level integer constant like
+      ``CHUNK``) are flagged — a Python loop over a traced/parameter
+      dim unrolls unboundedly at trace time; the idiom is
+      `jax.lax.fori_loop` (static unrolls over literal widths and
+      `zip`s of refs are fine and not matched).
+
+    For every ``pl.pallas_call(...)``:
+
+    * literal ``out_shape`` and ``out_specs`` lists must have equal
+      lengths;
+    * a literal ``in_specs`` list must match the positional argument
+      count of the immediately-applied call (skipped when the call
+      site uses ``*args`` or builds specs programmatically);
+    * a literal ``grid`` tuple fixes the arity of every literal
+      `BlockSpec` index_map lambda in the specs.
+    """
+
+    id = "pallas-kernel"
+    summary = "Python loop over traced dim / inconsistent pallas specs"
+
+    def applies(self, path: str) -> bool:
+        import fnmatch
+
+        return (fnmatch.fnmatch(path, "repro/kernels/ell_*.py")
+                and not config.is_seed(path))
+
+    def check(self, mod: ModuleSource) -> Iterator[Finding]:
+        yield from self._check_kernel_loops(mod)
+        yield from self._check_pallas_calls(mod)
+
+    # -- loops inside *_kernel bodies --------------------------------------
+
+    def _check_kernel_loops(self, mod: ModuleSource) -> Iterator[Finding]:
+        for node in ast.walk(mod.tree):
+            if not (isinstance(node, (ast.While, ast.For))):
+                continue
+            names = mod.enclosing_names(node)
+            if not any(n.endswith("_kernel") for n in names):
+                continue
+            if isinstance(node, ast.While):
+                yield mod.finding(
+                    self.id, node,
+                    "`while` inside a Pallas kernel body: use "
+                    "jax.lax.while_loop/fori_loop (a Python loop over a "
+                    "traced dim unrolls at trace time)")
+                continue
+            it = node.iter
+            if (isinstance(it, ast.Call)
+                    and (call_name(it) or "") == "range"
+                    and not all(self._static_int(a, mod) for a in it.args)):
+                yield mod.finding(
+                    self.id, node,
+                    "`for ... in range(<non-literal>)` inside a Pallas "
+                    "kernel body: if the bound is a traced or parameter "
+                    "dim this unrolls unboundedly; use jax.lax.fori_loop")
+
+    @staticmethod
+    def _static_int(node: ast.AST, mod: ModuleSource) -> bool:
+        if isinstance(node, ast.Constant) and isinstance(node.value, int):
+            return True
+        return isinstance(node, ast.Name) and node.id in mod.int_constants
+
+    # -- pallas_call spec consistency --------------------------------------
+
+    def _check_pallas_calls(self, mod: ModuleSource) -> Iterator[Finding]:
+        outer_of = {}  # id(pallas_call Call) -> applying Call
+        for node in ast.walk(mod.tree):
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Call)
+                    and self._is_pallas_call(node.func)):
+                outer_of[id(node.func)] = node
+        for node in ast.walk(mod.tree):
+            if not (isinstance(node, ast.Call)
+                    and self._is_pallas_call(node)):
+                continue
+            kw = {k.arg: k.value for k in node.keywords if k.arg}
+            yield from self._check_out_arity(mod, node, kw)
+            yield from self._check_in_arity(mod, node, kw,
+                                            outer_of.get(id(node)))
+            yield from self._check_index_maps(mod, node, kw)
+
+    @staticmethod
+    def _is_pallas_call(node: ast.Call) -> bool:
+        return (call_name(node) or "").split(".")[-1] == "pallas_call"
+
+    def _check_out_arity(self, mod, node, kw) -> Iterator[Finding]:
+        out_shape, out_specs = kw.get("out_shape"), kw.get("out_specs")
+        if (isinstance(out_shape, (ast.List, ast.Tuple))
+                and isinstance(out_specs, (ast.List, ast.Tuple))
+                and len(out_shape.elts) != len(out_specs.elts)):
+            yield mod.finding(
+                self.id, node,
+                f"pallas_call out_shape has {len(out_shape.elts)} entries "
+                f"but out_specs has {len(out_specs.elts)}")
+
+    def _check_in_arity(self, mod, node, kw, outer) -> Iterator[Finding]:
+        in_specs = kw.get("in_specs")
+        if not isinstance(in_specs, (ast.List, ast.Tuple)):
+            return
+        if any(not isinstance(e, (ast.Call, ast.Name))
+               for e in in_specs.elts):
+            return  # comprehension/star pieces: built programmatically
+        if outer is None or any(isinstance(a, ast.Starred)
+                                for a in outer.args):
+            return
+        if len(in_specs.elts) != len(outer.args):
+            yield mod.finding(
+                self.id, node,
+                f"pallas_call declares {len(in_specs.elts)} in_specs but "
+                f"is applied to {len(outer.args)} positional arrays")
+
+    def _check_index_maps(self, mod, node, kw) -> Iterator[Finding]:
+        grid = kw.get("grid")
+        if isinstance(grid, ast.Tuple):
+            glen = len(grid.elts)
+        elif grid is not None and not isinstance(grid, ast.Tuple):
+            glen = 1
+        else:
+            return
+        specs: List[ast.AST] = []
+        for key in ("in_specs", "out_specs"):
+            v = kw.get(key)
+            if isinstance(v, (ast.List, ast.Tuple)):
+                specs.extend(v.elts)
+            elif v is not None:
+                specs.append(v)
+        for spec in specs:
+            if not (isinstance(spec, ast.Call)
+                    and (call_name(spec) or "").split(".")[-1]
+                    == "BlockSpec"):
+                continue
+            lam = None
+            for cand in list(spec.args) + [k.value for k in spec.keywords]:
+                if isinstance(cand, ast.Lambda):
+                    lam = cand
+            if lam is None:
+                continue
+            arity = len(lam.args.args)
+            if arity != glen:
+                yield mod.finding(
+                    self.id, spec,
+                    f"BlockSpec index_map takes {arity} args but the grid "
+                    f"has {glen} dimension(s)")

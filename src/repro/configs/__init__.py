@@ -15,6 +15,10 @@ Two distinct populations live in this namespace — keep them straight:
     — admission control, batching, and snapshot-refresh policy for the
     query-serving layer (`repro.service`).  These are the configs this
     package exists to host going forward.
+
+seed_fixtures: the arch-config population above is quarantined seed
+substrate — `python -m repro.analysis` (the `dead-seed` audit) accepts
+this package as deliberately unreachable from the product surface.
 """
 from .base import ArchConfig, ShapeConfig, SHAPES, SHAPES_BY_NAME, cell_applicable
 from .service import ServiceConfig

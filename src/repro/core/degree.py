@@ -33,10 +33,14 @@ class DegreeProgram(BladygProgram):
         return mstate, None, halt
 
 
+# Module-level jit: one trace cache shared by every compute_degrees call
+# (a per-call `jax.jit(...)` would retrace each time).
+_degree_step = jax.jit(DegreeProgram().worker_compute)
+
+
 def compute_degrees(g: GraphBlocks) -> jax.Array:
     """Static degree of every node (padding rows -> 0)."""
-    prog = DegreeProgram()
-    deg, _ = jax.jit(prog.worker_compute)(g, None, None)
+    deg, _ = _degree_step(g, None, None)
     return jnp.where(g.node_mask, deg, 0)
 
 

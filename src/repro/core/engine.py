@@ -48,6 +48,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import weakref
 from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
@@ -276,6 +277,20 @@ class MultiProgram(BlockProgram):
         return out
 
 
+# One jitted wrapper per program INSTANCE, kept for the instance's
+# lifetime: a fresh `jax.jit(...)` per run() would discard the compile
+# cache and retrace every call (tracelint: retrace-hazard).
+_JIT_WORKERS: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+
+def _jitted_worker(program: BladygProgram) -> Callable:
+    """Memoized `jax.jit(program.worker_compute)` keyed on the instance."""
+    fn = _JIT_WORKERS.get(program)
+    if fn is None:
+        fn = _JIT_WORKERS[program] = jax.jit(program.worker_compute)
+    return fn
+
+
 class BladygEngine:
     """Superstep scheduler over a block-partitioned graph."""
 
@@ -294,7 +309,7 @@ class BladygEngine:
         jit_steps: bool = True,
         w2w_override: Optional[Tuple[int, int]] = None,
     ) -> Tuple[Any, Any]:
-        worker = jax.jit(program.worker_compute, static_argnums=()) if jit_steps \
+        worker = _jitted_worker(program) if jit_steps \
             else program.worker_compute
         master = program.master_compute
         step = 0

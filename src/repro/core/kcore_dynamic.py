@@ -434,9 +434,13 @@ def _maintain_one_spmd(g: GraphBlocks, core, update, tot, W=None, ex=None):
     else:
         ex2 = _spmd_executor(g2, W)
     new_core, rec_steps = ex2.restricted_recompute(ub, cand)
-    tot["bfs"] += int(bfs_steps)
-    tot["rec"] += int(rec_steps)
-    tot["cand"] += int(jnp.sum(cand))
+    # ONE bundled transfer for the three counters (three bare int() casts
+    # would block the dispatch queue once each)
+    bfs_h, rec_h, cand_h = jax.device_get(
+        (bfs_steps, rec_steps, jnp.sum(cand)))
+    tot["bfs"] += int(bfs_h)
+    tot["rec"] += int(rec_h)
+    tot["cand"] += int(cand_h)
     tot["seq"] += 1
     return g2, new_core
 
@@ -489,6 +493,9 @@ def maintain_batch(
 
     core = jnp.asarray(core)
     tot = dict(bfs=0, rec=0, cand=0, batched=0, seq=0, batches=0)
+    # batched-path recompute supersteps accumulate on device; pulled once
+    # when the final stats are assembled
+    rec_dev = jnp.int32(0)
     for start in range(0, len(updates), R):
         chunk = list(updates[start:start + R])
         if len(chunk) == 1:
@@ -512,9 +519,12 @@ def maintain_batch(
                 g, core, jnp.asarray(us), jnp.asarray(vs),
                 jnp.asarray(valid), backend=backend,
             )
-        tot["bfs"] += int(steps)
+        # ONE bundled transfer pulls the candidate matrix together with
+        # the superstep counter (int(steps) alone would sync separately)
+        steps_h, cand_np = jax.device_get((steps, cand))
+        tot["bfs"] += int(steps_h)
         tot["batches"] += 1
-        cand_np = np.asarray(jax.device_get(cand))
+        cand_np = np.asarray(cand_np)
         accepted, deferred = _independent_prefix(cand_np, n)
 
         if accepted:
@@ -541,7 +551,7 @@ def maintain_batch(
                     jnp.asarray(us_a), jnp.asarray(vs_a), jnp.asarray(ops_a),
                     cand_ins, cand_del, backend=backend,
                 )
-            tot["rec"] += int(rec_steps)
+            rec_dev = rec_dev + rec_steps  # async accumulate, no host sync
             tot["cand"] += int(cand_np[:, acc].sum())
             tot["batched"] += len(accepted)
 
@@ -555,7 +565,7 @@ def maintain_batch(
         batched_updates=tot["batched"],
         sequential_updates=tot["seq"],
         bfs_steps=tot["bfs"],
-        recompute_steps=tot["rec"],
+        recompute_steps=tot["rec"] + int(jax.device_get(rec_dev)),
         candidates=tot["cand"],
     )
     return g, core, stats
@@ -568,6 +578,7 @@ def _maintain_one(g, core, update, tot, backend, W=None, ex=None):
     u, v, op = update
     fn = insert_edge_maintain if op > 0 else delete_edge_maintain
     g, core, s = fn(g, core, jnp.int32(u), jnp.int32(v), backend=backend)
+    s = jax.device_get(s)  # ONE bundled pull of the whole stats tuple
     tot["bfs"] += int(s.bfs_steps)
     tot["rec"] += int(s.recompute_steps)
     tot["cand"] += int(s.candidates)

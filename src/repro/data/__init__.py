@@ -1,3 +1,8 @@
-"""Data pipelines."""
+"""Data pipelines.
+
+seed_fixtures: quarantined seed substrate — token pipelines for the
+model plumbing tests, unreachable from the BLADYG product packages
+(see the `dead-seed` audit in `python -m repro.analysis`).
+"""
 from .pipeline import SyntheticTokens, ByteCorpus
 __all__ = ["SyntheticTokens", "ByteCorpus"]

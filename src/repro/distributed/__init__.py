@@ -1,0 +1,13 @@
+"""Distributed substrate: sharding specs (live) + fault harness (seed).
+
+``sharding`` is reachable from the product surface (the checkpoint and
+elastic layers name it), so the `dead-seed` audit never flags it.
+
+seed_fixtures: ``fault`` is quarantined seed substrate — the
+fault-injection harness for the LLM training loop, never imported by
+the BLADYG product packages.  The `dead-seed` audit
+(`python -m repro.analysis`) accepts this marker.
+
+Marker-only package ``__init__``: importing it must stay side-effect
+free (no submodule imports).
+"""

@@ -1,0 +1,12 @@
+"""Launch/roofline substrate from the seed repo (dryrun, specs, train).
+
+seed_fixtures: quarantined seed substrate — the training-launch stack
+(mesh planning, dry-run cost model, train loop) is exercised by its own
+tests but never imported by the BLADYG product packages.  The
+`dead-seed` audit (`python -m repro.analysis`) accepts this marker; do
+not grow graph-side dependencies on anything in here.
+
+Marker-only package ``__init__``: importing it must stay side-effect
+free (no submodule imports), so the audit marker never drags the seed
+stack into product import graphs.
+"""

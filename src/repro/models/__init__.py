@@ -1,4 +1,11 @@
-"""Assigned-architecture model substrate (pure JAX, dict pytree params)."""
+"""Assigned-architecture model substrate (pure JAX, dict pytree params).
+
+seed_fixtures: quarantined seed substrate — exercised by the model
+consistency tests and roofline benches, never imported by the BLADYG
+product packages (`repro.{core,kernels,runtime,service}`).  The
+`dead-seed` audit (`python -m repro.analysis`) accepts this marker;
+do not grow graph-side dependencies on anything in here.
+"""
 from .model_zoo import build, ModelBundle, cross_entropy, param_count
 from . import layers, attention, moe, ssm, transformer, encdec
 

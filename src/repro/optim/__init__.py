@@ -1,4 +1,9 @@
-"""Optimizer substrate: AdamW (+ schedule, clipping), gradient compression."""
+"""Optimizer substrate: AdamW (+ schedule, clipping), gradient compression.
+
+seed_fixtures: quarantined seed substrate — kept for the optimizer
+tests, unreachable from the BLADYG product packages (see the
+`dead-seed` audit in `python -m repro.analysis`).
+"""
 from .adamw import AdamWConfig, AdamWState, init, update, cosine_lr, global_norm
 from .compress import (
     quantize_int8, dequantize_int8, init_error_feedback, compressed_psum_mean,

@@ -291,6 +291,10 @@ class StreamSession:
         self._rebalance_threshold = rebalance_threshold
         self._rebalance_max_moves = int(rebalance_max_moves)
         self._tot = dict(bfs=0, rec=0, cand=0, batched=0, seq=0, batches=0)
+        # recompute supersteps of the block-local accepted path accumulate
+        # ON DEVICE — apply_window never blocks on them; stats() pulls the
+        # scalar once when asked
+        self._rec_dev = jnp.int32(0)
         self._n_updates = 0
         self._n_local = 0
         self._esc_cross = self._esc_spill = self._esc_conflict = 0
@@ -367,7 +371,7 @@ class StreamSession:
                     g, core,
                     jnp.asarray(us_a), jnp.asarray(vs_a), jnp.asarray(ops_a),
                     route.cand_ins, route.cand_del, backend=backend)
-            tot["rec"] += int(rec)
+            self._rec_dev = self._rec_dev + rec  # async; no host sync here
             self._n_local += int(accept.sum())
             self._per_block += nblk.astype(np.int64)
 
@@ -424,7 +428,8 @@ class StreamSession:
             escalated_spill=self._esc_spill,
             escalated_conflict=self._esc_conflict,
             bfs_steps=self._tot["bfs"],
-            recompute_steps=self._tot["rec"],
+            recompute_steps=(self._tot["rec"]
+                             + int(jax.device_get(self._rec_dev))),
             per_block=tuple(int(x) for x in self._per_block),
             plan_updates=(ex.plan_updates - self._ex_updates0) if spmd else 0,
             plan_rebuilds=(ex.full_rebuilds - self._ex_rebuilds0)

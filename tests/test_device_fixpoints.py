@@ -258,8 +258,10 @@ def test_run_stream_routing_transfers_per_window_not_per_superstep(
     assert stats.batches == 2
     assert stats.bfs_steps + stats.recompute_steps > stats.batches
     # window routing: ONE bundled transfer per window; escalated updates
-    # (the sequential coordinator path) may add a bounded constant each
-    assert n_gets <= stats.batches + 2 * stats.escalated, (
+    # (the sequential coordinator path) may add a bounded constant each;
+    # +1: stats() pulls the device-resident recompute-superstep counter
+    # once at close-out (apply_window itself never blocks on it)
+    assert n_gets <= stats.batches + 1 + 2 * stats.escalated, (
         n_gets, stats.batches, stats.escalated)
     # exactness unchanged
     np.testing.assert_array_equal(

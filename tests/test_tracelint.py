@@ -1,0 +1,411 @@
+"""tracelint (`repro.analysis`) — trigger/non-trigger fixtures per rule,
+pragma + baseline round-trips, the dead-seed and entry-point audits, and
+the CLI gate end to end.
+
+Every AST rule gets a pair: a snippet that MUST produce a finding and a
+minimally-different snippet that MUST NOT (the escape hatch the rule
+documents — bucket helper, approved splice, registered schema, static
+width).  The self-scan test then pins the repo itself clean against the
+committed (empty) baseline, and the audit tests keep the declarative
+transfer budgets in parity with the counter tests in
+`test_device_fixpoints.py` / `test_service.py`.
+"""
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import (
+    MANIFEST,
+    audit_dead_seed,
+    load_baseline,
+    partition_findings,
+    run_audit,
+    scan_source,
+    scan_tree,
+    write_baseline,
+)
+from repro.analysis.__main__ import main as tracelint_main
+from repro.analysis.engine import Finding
+from repro.analysis.entrypoints import EntryPoint, forbidden_primitives
+
+REPO = Path(__file__).resolve().parents[1]
+SRC_ROOT = REPO / "src"
+BASELINE = REPO / "tracelint_baseline.json"
+
+
+def _rules(findings):
+    return sorted({f.rule for f in findings})
+
+
+def _write(path: Path, text: str = "") -> None:
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(text)
+
+
+# ---------------------------------------------------------------------------
+# host-sync
+# ---------------------------------------------------------------------------
+
+_SYNC_BAD = """\
+import jax
+import jax.numpy as jnp
+
+def superstep(x):
+    total = int(jnp.sum(x))
+    y = jax.device_get(x)
+    return total, y
+"""
+
+
+def test_host_sync_trigger():
+    fs = scan_source(_SYNC_BAD, "repro/runtime/fake.py", rules=["host-sync"])
+    assert len(fs) == 2
+    assert _rules(fs) == ["host-sync"]
+    assert [f.line for f in fs] == [5, 6]
+
+
+def test_host_sync_non_trigger_out_of_scope():
+    # graphgen is host-side generator code, outside SYNC_SCOPE
+    fs = scan_source(_SYNC_BAD, "repro/graphgen/fake.py",
+                     rules=["host-sync"])
+    assert fs == []
+
+
+def test_host_sync_non_trigger_boundary_pragma():
+    marked = _SYNC_BAD.replace(
+        "def superstep(x):", "def superstep(x):  # tracelint: boundary")
+    fs = scan_source(marked, "repro/runtime/fake.py", rules=["host-sync"])
+    assert fs == []
+
+
+def test_host_sync_non_trigger_whitelisted_boundary():
+    # build_blocks is a registered host boundary for repro/core/graph.py
+    text = "import jax\n\ndef build_blocks(e):\n    return jax.device_get(e)\n"
+    assert scan_source(text, "repro/core/graph.py",
+                       rules=["host-sync"]) == []
+    # the same code under a non-boundary name is a finding
+    rogue = text.replace("build_blocks", "sneaky_pull")
+    assert len(scan_source(rogue, "repro/core/graph.py",
+                           rules=["host-sync"])) == 1
+
+
+# ---------------------------------------------------------------------------
+# retrace-hazard
+# ---------------------------------------------------------------------------
+
+_RETRACE_BAD = """\
+def compile_step(x):
+    width = int(x.shape[1])
+    return width
+"""
+
+_RETRACE_OK = """\
+from repro.kernels.ops import _pow2_bucket
+
+def compile_step(x):
+    width = _pow2_bucket(int(x.shape[1]))
+    return width
+"""
+
+
+def test_retrace_shape_derived_trigger_and_bucketed_escape():
+    bad = scan_source(_RETRACE_BAD, "repro/runtime/fake.py",
+                      rules=["retrace-hazard"])
+    assert len(bad) == 1 and bad[0].rule == "retrace-hazard"
+    ok = scan_source(_RETRACE_OK, "repro/runtime/fake.py",
+                     rules=["retrace-hazard"])
+    assert ok == []
+
+
+def test_retrace_nested_jit_trigger_and_memoized_escape():
+    bad = "import jax\n\ndef make_step(fn):\n    return jax.jit(fn)\n"
+    assert len(scan_source(bad, "repro/runtime/fake.py",
+                           rules=["retrace-hazard"])) == 1
+    ok = ("import functools\nimport jax\n\n"
+          "@functools.lru_cache(maxsize=4)\n"
+          "def make_step(fn):\n    return jax.jit(fn)\n")
+    assert scan_source(ok, "repro/runtime/fake.py",
+                       rules=["retrace-hazard"]) == []
+
+
+def test_retrace_mutable_default_on_jitted_def():
+    bad = ("import jax\n\n@jax.jit\ndef f(x, hist=[]):\n    return x\n")
+    fs = scan_source(bad, "repro/runtime/fake.py", rules=["retrace-hazard"])
+    assert len(fs) == 1
+    ok = bad.replace("hist=[]", "hist=()")
+    assert scan_source(ok, "repro/runtime/fake.py",
+                       rules=["retrace-hazard"]) == []
+
+
+# ---------------------------------------------------------------------------
+# sorted-ell
+# ---------------------------------------------------------------------------
+
+_ELL_BAD = """\
+from dataclasses import replace
+
+def corrupt(g, u, v):
+    nbr = g.nbr.at[u, 0].set(v)
+    return replace(g, nbr=nbr)
+"""
+
+_ELL_OK = """\
+from dataclasses import replace
+
+from repro.core.graph import _sorted_insert_row
+
+def splice(g, u, v):
+    nbr = g.nbr.at[u].set(_sorted_insert_row(g.nbr[u], v))
+    return replace(g, nbr=nbr)
+"""
+
+
+def test_sorted_ell_trigger():
+    fs = scan_source(_ELL_BAD, "repro/runtime/fake.py", rules=["sorted-ell"])
+    # the raw .at[].set AND the replace(nbr=...) kwarg both flag
+    assert len(fs) == 2
+    assert _rules(fs) == ["sorted-ell"]
+
+
+def test_sorted_ell_non_trigger_one_deep_local_resolution():
+    # `nbr = ....set(_sorted_insert_row(...))` approves BOTH the write
+    # and the later `replace(g, nbr=nbr)` that names the local
+    assert scan_source(_ELL_OK, "repro/runtime/fake.py",
+                       rules=["sorted-ell"]) == []
+
+
+def test_sorted_ell_ignores_other_names():
+    text = "def f(tbl, u, v):\n    halo = tbl.halo.at[u].set(v)\n    return halo\n"
+    assert scan_source(text, "repro/runtime/fake.py",
+                       rules=["sorted-ell"]) == []
+
+
+# ---------------------------------------------------------------------------
+# cache-key
+# ---------------------------------------------------------------------------
+
+
+def test_cache_key_unregistered_lru_site_triggers():
+    bad = ("import functools\n\n"
+           "@functools.lru_cache(maxsize=8)\n"
+           "def _compiled_step(mesh, H):\n    return None\n")
+    fs = scan_source(bad, "repro/runtime/fake.py", rules=["cache-key"])
+    assert len(fs) == 1 and "register" in fs[0].message.lower()
+
+
+def test_cache_key_registered_covering_site_passes():
+    # the registered spmd.py::_compiled_hindex schema is (mesh, H, overlap)
+    ok = ("import functools\n\n"
+          "@functools.lru_cache(maxsize=8)\n"
+          "def _compiled_hindex(mesh, H, overlap):\n    return None\n")
+    assert scan_source(ok, "repro/runtime/spmd.py",
+                       rules=["cache-key"]) == []
+    # dropping a schema axis from the parameter list is a finding
+    under = ok.replace("(mesh, H, overlap)", "(mesh, H)")
+    assert len(scan_source(under, "repro/runtime/spmd.py",
+                           rules=["cache-key"])) == 1
+
+
+def test_cache_key_unregistered_dict_cache_triggers():
+    bad = "class Engine:\n    _plan_cache: dict = {}\n"
+    fs = scan_source(bad, "repro/runtime/fake.py", rules=["cache-key"])
+    assert len(fs) == 1
+
+
+# ---------------------------------------------------------------------------
+# pallas-kernel
+# ---------------------------------------------------------------------------
+
+_PALLAS_BAD = """\
+def scan_kernel(x_ref, o_ref, n):
+    for i in range(n):
+        o_ref[i] = x_ref[i]
+"""
+
+_PALLAS_OK = """\
+CHUNK = 8
+
+def scan_kernel(x_ref, o_ref):
+    for i in range(CHUNK):
+        o_ref[i] = x_ref[i]
+"""
+
+
+def test_pallas_python_loop_over_traced_dim_triggers():
+    fs = scan_source(_PALLAS_BAD, "repro/kernels/ell_fake.py",
+                     rules=["pallas-kernel"])
+    assert len(fs) == 1 and fs[0].rule == "pallas-kernel"
+
+
+def test_pallas_static_unroll_and_out_of_scope_pass():
+    assert scan_source(_PALLAS_OK, "repro/kernels/ell_fake.py",
+                       rules=["pallas-kernel"]) == []
+    # the rule only scopes the pallas kernel modules
+    assert scan_source(_PALLAS_BAD, "repro/kernels/ops.py",
+                       rules=["pallas-kernel"]) == []
+
+
+# ---------------------------------------------------------------------------
+# pragmas + baseline
+# ---------------------------------------------------------------------------
+
+
+def test_pragma_disable_suppresses_only_named_rule():
+    sup = _SYNC_BAD.replace(
+        "int(jnp.sum(x))",
+        "int(jnp.sum(x))  # tracelint: disable=host-sync")
+    fs = scan_source(sup, "repro/runtime/fake.py", rules=["host-sync"])
+    assert [f.line for f in fs] == [6]  # only the un-pragmaed line remains
+    wrong = _SYNC_BAD.replace(
+        "int(jnp.sum(x))",
+        "int(jnp.sum(x))  # tracelint: disable=sorted-ell")
+    assert len(scan_source(wrong, "repro/runtime/fake.py",
+                           rules=["host-sync"])) == 2
+
+
+def test_baseline_roundtrip(tmp_path):
+    fs = scan_source(_SYNC_BAD, "repro/runtime/fake.py", rules=["host-sync"])
+    bp = tmp_path / "baseline.json"
+    write_baseline(bp, fs)
+    new, grandfathered = partition_findings(fs, load_baseline(bp))
+    assert new == [] and len(grandfathered) == len(fs)
+    # a finding NOT in the baseline partitions as new
+    extra = fs + [Finding(path="repro/runtime/fake.py", line=99,
+                          rule="host-sync", message="m",
+                          snippet="int(jnp.prod(x))")]
+    new2, _ = partition_findings(extra, load_baseline(bp))
+    assert len(new2) == 1 and new2[0].line == 99
+
+
+# ---------------------------------------------------------------------------
+# dead-seed audit
+# ---------------------------------------------------------------------------
+
+
+def test_dead_seed_trigger_and_quarantine_marker(tmp_path):
+    _write(tmp_path / "repro/core/graph.py", "")
+    _write(tmp_path / "repro/models/__init__.py", '"""Model zoo."""\n')
+    _write(tmp_path / "repro/models/zoo.py", "")
+    fs = audit_dead_seed(tmp_path)
+    assert {f.snippet for f in fs} == {"repro.models", "repro.models.zoo"}
+    assert _rules(fs) == ["dead-seed"]
+    assert fs[0].path == "repro/models/__init__.py"
+    # the documented seed_fixtures note quarantines the whole subtree
+    _write(tmp_path / "repro/models/__init__.py",
+           '"""seed_fixtures: quarantined seed substrate."""\n')
+    assert audit_dead_seed(tmp_path) == []
+
+
+def test_dead_seed_reachable_module_not_flagged(tmp_path):
+    _write(tmp_path / "repro/core/graph.py",
+           "from ..models.zoo import build\n")
+    _write(tmp_path / "repro/models/__init__.py", '"""Model zoo."""\n')
+    _write(tmp_path / "repro/models/zoo.py", "")
+    # graph.py names repro.models.zoo -> zoo is live; only the package
+    # __init__ (never named by graph code) remains dead
+    assert {f.snippet for f in audit_dead_seed(tmp_path)} == {"repro.models"}
+
+
+# ---------------------------------------------------------------------------
+# self-scan: the repo itself is clean against the committed baseline
+# ---------------------------------------------------------------------------
+
+
+def test_self_scan_is_clean_against_committed_baseline():
+    findings = scan_tree(SRC_ROOT) + audit_dead_seed(SRC_ROOT)
+    new, _ = partition_findings(findings, load_baseline(BASELINE))
+    assert new == [], "\n".join(str(f) for f in new)
+
+
+def test_committed_baseline_is_near_empty():
+    data = json.loads(BASELINE.read_text())
+    assert data["count"] == len(data["fingerprints"]) <= 2
+
+
+# ---------------------------------------------------------------------------
+# entry-point audit (parity with the device_get counter tests)
+# ---------------------------------------------------------------------------
+
+
+def test_entry_point_audit_is_clean():
+    assert run_audit() == []
+
+
+def test_manifest_budgets_match_counter_tests():
+    budgets = {ep.name: ep.max_device_gets for ep in MANIFEST}
+    # parity with tests/test_device_fixpoints.py:
+    assert budgets["ops.coreness_blocks[jnp]"] == 0    # fused while_loop
+    assert budgets["ops.coreness_blocks[ell]"] == 1    # ONE degree bound
+    assert budgets["stream._route_window"] == 0        # pure device code
+    assert budgets["StreamSession.apply_window[clean]"] == 1  # verdict pull
+    # parity with tests/test_service.py (one get per answered batch):
+    assert budgets["queries.run_batch[core]"] == 1
+    assert budgets["queries.run_batch[topk_pagerank]"] == 1
+
+
+def test_audit_flags_extra_device_get():
+    # the "extra device_get in _route_window" scenario, in miniature
+    def leaky_route(x):
+        jax.device_get(x)
+        return x + 1
+
+    ep = EntryPoint(
+        name="leaky", invariant="routing is pure device code",
+        max_device_gets=0,
+        prepare=lambda: (leaky_route, (jnp.arange(4),)))
+    fs = run_audit([ep])
+    assert len(fs) == 1 and "1 device_get" in fs[0].message
+
+
+def test_audit_probe_flags_callback_primitives():
+    def hidden_host_dep(x):
+        return jax.pure_callback(
+            lambda a: a, jax.ShapeDtypeStruct(x.shape, x.dtype), x)
+
+    ep = EntryPoint(
+        name="cb", invariant="jaxpr is transfer-free",
+        max_device_gets=99,
+        prepare=lambda: (hidden_host_dep, (jnp.arange(4.0),)), probe=True)
+    fs = run_audit([ep])
+    assert len(fs) == 1 and "callback" in fs[0].message
+
+
+def test_forbidden_primitives_clean_on_pure_fn():
+    jaxpr = jax.make_jaxpr(lambda x: x * 2 + 1)(jnp.arange(3))
+    assert forbidden_primitives(jaxpr) == []
+
+
+# ---------------------------------------------------------------------------
+# CLI: deliberately breaking an invariant fails the gate
+# ---------------------------------------------------------------------------
+
+
+def test_cli_deliberate_violation_fails_then_baselines(tmp_path):
+    _write(tmp_path / "repro/runtime/bad.py", _ELL_BAD)  # unsorted splice
+    baseline = tmp_path / "baseline.json"
+    check = ["--root", str(tmp_path), "--baseline", str(baseline),
+             "--no-audit", "--check"]
+    assert tracelint_main(check) == 1
+    # grandfathering the findings turns the same gate green
+    assert tracelint_main(["--root", str(tmp_path), "--baseline",
+                           str(baseline), "--no-audit",
+                           "--write-baseline"]) == 0
+    assert tracelint_main(check) == 0
+
+
+def test_cli_report_artifact(tmp_path):
+    _write(tmp_path / "repro/runtime/bad.py", _ELL_BAD)
+    report = tmp_path / "findings.json"
+    rc = tracelint_main(["--root", str(tmp_path),
+                         "--baseline", str(tmp_path / "baseline.json"),
+                         "--no-audit", "--report", str(report)])
+    assert rc == 0  # informational run (no --check) always exits 0
+    data = json.loads(report.read_text())
+    assert data["total"] == len(data["new"]) == 2
+    assert all(f["rule"] == "sorted-ell" for f in data["new"])
+
+
+def test_cli_rejects_root_without_repro(tmp_path):
+    assert tracelint_main(["--root", str(tmp_path)]) == 2
