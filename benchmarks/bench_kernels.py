@@ -170,6 +170,11 @@ def run(seed: int = 0, smoke: bool = False) -> List[Tuple[str, float, str]]:
         rows.append(row(
             f"kernels/coreness/N{g.N}/{b}/hostloop", t_host,
             f"steps={steps_h}"))
+
+    # ---- skew sweep: hub-mirrored vs unsplit fixpoint -----------------
+    from . import bench_skew
+    rows += bench_skew.kernel_rows(seed=seed, smoke=smoke,
+                                   prefix="kernels/skew")
     return rows
 
 

@@ -1,0 +1,165 @@
+"""Hub-mirroring skew sweep (the BENCH_skew.json source).
+
+BA stand-ins (`snap_like("ego-Facebook")`, the paper's social-graph
+shape) at 2-3 skew levels — max/mean degree grows with scale because a
+BA hub's degree grows as sqrt(n) while the mean stays ~2k.  Per level:
+
+  * `skew/<lvl>/alloc` — counter row (no timing): the ELL allocation
+    `N*Cd` unsplit vs split, the inter/intra halo slot counts, and the
+    per-superstep mirror-merge payload, straight from
+    `hub_split.mirror_report`.  The acceptance gates ride here and are
+    ASSERTED (like bench_runtime's parity gates): at every level where
+    max degree >= 8x mean, splitting must cut the allocation >= 4x and
+    shrink the inter-block halo slots.
+  * `skew/<lvl>/coreness_{unsplit,split}` — the full min-H fixpoint on
+    the same logical graph through both layouts (jnp backend; the split
+    run goes through the mirror merge), bit-parity asserted at
+    primaries.  This is the direct read on what bounding Cd by the
+    split threshold buys the kernel pass on skewed graphs.
+  * `skew/<lvl>/window_{plain,mirror}` — host cost of applying one
+    8-edit window: `apply_updates_host` on the unsplit layout vs
+    `hub_split.apply_mirrored_edits` (slice routing + plan rebuild) on
+    the split one.
+
+`kernel_rows`/`stream_rows` expose the timing surfaces to
+`bench_kernels`/`bench_stream` so the skew trajectory also rides the
+files the hard/soft regression tiers already watch.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+import jax
+
+from repro.core import build_blocks
+from repro.core.hub_split import apply_mirrored_edits, mirror_report, \
+    split_hubs
+from repro.core.kcore import coreness
+from repro.core.partition import node_random_partition
+from repro.core.updates import apply_updates_host
+from repro.graphgen import snap_like
+
+from .common import timeit_us
+
+#: (level name, ego-Facebook scale, split threshold)
+LEVELS = (("lo", 0.05, 64), ("mid", 0.15, 64), ("hi", 0.4, 64))
+
+
+def _build_level(scale: float, threshold: int, seed: int, P: int = 8):
+    edges = snap_like("ego-Facebook", scale=scale, seed=seed)
+    n = int(edges.max()) + 1
+    deg = np.bincount(edges.ravel(), minlength=n)
+    # enough padding rows for every replica the split will allocate
+    replicas = int(np.maximum(0, -(-deg // threshold) - 1).sum())
+    assign = node_random_partition(n, P, seed=seed)
+    g = build_blocks(edges, n, assign, P=P, node_slack=replicas)
+    g2, plan = split_hubs(g, threshold=threshold)
+    return g, g2, plan, deg
+
+
+def _levels(smoke: bool):
+    return LEVELS[:2] if smoke else LEVELS
+
+
+def counter_rows(seed: int = 0, smoke: bool = False,
+                 built=None) -> List[Tuple[str, float, str]]:
+    rows = []
+    for (lvl, scale, t), (g, g2, plan, deg) in zip(
+            _levels(smoke), built or _sweep(seed, smoke)):
+        rep = mirror_report(g, g2, plan)
+        skew = float(deg.max() / deg.mean())
+        if skew >= 8.0:
+            # the PR's acceptance gate, asserted where it must hold
+            assert rep["alloc_ratio"] >= 4.0, (lvl, rep)
+            assert rep["inter_split"] < rep["inter_unsplit"], (lvl, rep)
+        rows.append((
+            f"skew/{lvl}/alloc", float("nan"),
+            f"skew={skew:.1f};ratio={rep['alloc_ratio']:.2f};"
+            f"slots={rep['slots_unsplit']}->{rep['slots_split']};"
+            f"inter={rep['inter_unsplit']}->{rep['inter_split']};"
+            f"merge={rep['merge_payload']};groups={rep['n_groups']}"))
+    return rows
+
+
+def _sweep(seed: int, smoke: bool):
+    return [_build_level(scale, t, seed)
+            for _, scale, t in _levels(smoke)]
+
+
+def kernel_rows(seed: int = 0, smoke: bool = False, prefix: str = "skew",
+                built=None) -> List[Tuple[str, float, str]]:
+    """Fused coreness fixpoint latency, unsplit vs split (+parity)."""
+    rows = []
+    reps = 3 if smoke else 10
+    for (lvl, scale, t), (g, g2, plan, _) in zip(
+            _levels(smoke), built or _sweep(seed, smoke)):
+        c0 = coreness(g, backend="jnp")
+        c1 = coreness(g2, backend="jnp", mirror=plan)
+        m0 = dict(zip(np.asarray(g.orig_id)[np.asarray(g.node_mask)]
+                      .tolist(),
+                      np.asarray(c0)[np.asarray(g.node_mask)].tolist()))
+        pm = np.asarray(plan.primary_mask)
+        m1 = dict(zip(np.asarray(g2.orig_id)[pm].tolist(),
+                      np.asarray(c1)[pm].tolist()))
+        assert m0 == m1, f"split coreness diverged at level {lvl}"
+        us0 = timeit_us(lambda: jax.block_until_ready(
+            coreness(g, backend="jnp")), n=reps)
+        us1 = timeit_us(lambda: jax.block_until_ready(
+            coreness(g2, backend="jnp", mirror=plan)), n=reps)
+        rows.append((f"{prefix}/{lvl}/coreness_unsplit", us0,
+                     f"Cd={g.Cd}"))
+        rows.append((f"{prefix}/{lvl}/coreness_split", us1,
+                     f"Cd={g2.Cd};groups={plan.n_groups}"))
+    return rows
+
+
+def _hub_window(g2, plan, k: int = 8):
+    """k inserts onto the heaviest primary (stays mirrored; primary ids)."""
+    pm = np.asarray(plan.primary_mask)
+    ldeg = np.asarray(plan.ldeg)
+    hub = int(np.argmax(np.where(pm, ldeg, -1)))
+    nbr = np.asarray(g2.nbr)
+    prow = np.asarray(plan.primary_row)
+    have = {int(prow[x]) for r in np.flatnonzero(prow == hub)
+            for x in nbr[r] if x >= 0}
+    out = []
+    for v in np.flatnonzero(pm):
+        v = int(v)
+        if v != hub and v not in have:
+            out.append((hub, v, +1))
+        if len(out) == k:
+            break
+    return out
+
+
+def stream_rows(seed: int = 0, smoke: bool = False, prefix: str = "skew",
+                built=None) -> List[Tuple[str, float, str]]:
+    """Host window-apply cost: plain splice vs mirrored slice routing."""
+    rows = []
+    reps = 3 if smoke else 10
+    for (lvl, scale, t), (g, g2, plan, _) in zip(
+            _levels(smoke), built or _sweep(seed, smoke)):
+        window = _hub_window(g2, plan)
+        # the same logical edits in each layout's own id space
+        o2 = np.asarray(g2.orig_id)
+        of_g = {int(o): i for i, o in enumerate(np.asarray(g.orig_id))
+                if o >= 0}
+        plain = [(of_g[int(o2[u])], of_g[int(o2[v])], op)
+                 for u, v, op in window]
+        us_plain = timeit_us(lambda: apply_updates_host(g, plain), n=reps)
+        us_mirror = timeit_us(
+            lambda: apply_mirrored_edits(g2, plan, window), n=reps)
+        rows.append((f"{prefix}/{lvl}/window_plain", us_plain,
+                     f"edits={len(window)}"))
+        rows.append((f"{prefix}/{lvl}/window_mirror", us_mirror,
+                     f"edits={len(window)};groups={plan.n_groups}"))
+    return rows
+
+
+def run(seed: int = 0, smoke: bool = False) -> List[Tuple[str, float, str]]:
+    built = _sweep(seed, smoke)
+    rows = counter_rows(seed, smoke, built=built)
+    rows += kernel_rows(seed, smoke, built=built)
+    rows += stream_rows(seed, smoke, built=built)
+    return rows

@@ -119,6 +119,11 @@ def run(seed: int = 0, smoke: bool = False) -> List[Tuple[str, float, str]]:
             f"balance={block_balance(gg):.2f};edge_cut={int(gg.edge_cut())};"
             f"escalated={stt.escalated};migrations={stt.migrations};"
             f"moved={stt.migrated_vertices}"))
+
+    # ---- skew sweep: mirrored vs plain host window apply --------------
+    from . import bench_skew
+    rows += bench_skew.stream_rows(seed=seed, smoke=smoke,
+                                   prefix="stream/skew")
     return rows
 
 

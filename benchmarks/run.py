@@ -51,7 +51,7 @@ import sys
 import traceback
 
 #: benches whose rows feed the machine-readable perf trajectory
-JSON_BENCHES = ("kernels", "stream", "workloads", "service")
+JSON_BENCHES = ("kernels", "stream", "workloads", "service", "skew")
 
 
 def write_bench_json(out_dir: str, bench: str, rows) -> pathlib.Path:
@@ -96,7 +96,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: table2,fig7,partitioning,static,"
                          "backends,kernels,runtime,stream,workloads,"
-                         "service,roofline")
+                         "service,skew,roofline")
     ap.add_argument("--profile", action="store_true",
                     help="also dump per-kernel roofline points "
                          "(PROFILE_kernels.json under --out-dir)")
@@ -106,8 +106,9 @@ def main() -> None:
 
     from . import (bench_backends, bench_kcore_maintenance, bench_kernels,
                    bench_vs_naive_kcore, bench_partitioning,
-                   bench_runtime, bench_service, bench_static_kcore,
-                   bench_stream, bench_workloads, roofline)
+                   bench_runtime, bench_service, bench_skew,
+                   bench_static_kcore, bench_stream, bench_workloads,
+                   roofline)
 
     backends = tuple(b for b in args.backends.split(",") if b)
     batch_sizes = tuple(int(r) for r in args.batch_sizes.split(",") if r)
@@ -144,6 +145,8 @@ def main() -> None:
         "workloads": lambda: bench_workloads.run(
             seed=args.seed, smoke=args.smoke),
         "service": lambda: bench_service.run(
+            seed=args.seed, smoke=args.smoke),
+        "skew": lambda: bench_skew.run(
             seed=args.seed, smoke=args.smoke),
         "roofline": lambda: roofline.run(full=args.full, seed=args.seed),
     }

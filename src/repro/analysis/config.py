@@ -100,6 +100,11 @@ HOST_BOUNDARIES: Dict[str, FrozenSet[str]] = {
     # host splice/validation module: the sanctioned numpy twin of the
     # jitted update path
     "repro/core/updates.py": frozenset({"*"}),
+    # hub splitting / mirror-plan maintenance: split planning, replica
+    # allocation, and per-edit slice splices are host-boundary work on
+    # the concrete adjacency (like halo-plan builds) — the per-superstep
+    # merge stage lives in kernels/ops.py and runtime/spmd.py, protected
+    "repro/core/hub_split.py": frozenset({"*"}),
     # host-side partitioners (numpy throughout)
     "repro/core/partition.py": frozenset({"*"}),
     "repro/core/partition_dynamic.py": frozenset({"*"}),
@@ -165,7 +170,7 @@ CACHE_SCHEMAS: Dict[str, Tuple[str, ...]] = {
     "repro/runtime/spmd.py::_compiled_reach": ("mesh", "H", "overlap"),
     "repro/runtime/spmd.py::_compiled_recompute": ("mesh", "H", "overlap"),
     "repro/runtime/spmd.py::_step_cache": (
-        "mesh", "H", "B", "Cn", "Cd", "overlap", "program"),
+        "mesh", "H", "B", "Cn", "Cd", "overlap", "program", "mirror"),
 }
 
 #: approved sorted-ELL splice/sort helpers: a `nbr` write whose value
@@ -176,6 +181,10 @@ SORTED_ELL_HELPERS: FrozenSet[str] = frozenset({
     "_sorted_delete_row",
     "_insert_sorted",
     "_delete_sorted",
+    # hub-split slice splices (host numpy, in-place on one (Cd,) row
+    # slice, shift-based like their jnp row twins above)
+    "_sorted_slice_insert",
+    "_sorted_slice_delete",
 })
 
 #: functions allowed to write `nbr` raw: the helpers themselves plus
@@ -186,6 +195,15 @@ SORTED_ELL_WRITERS: FrozenSet[str] = SORTED_ELL_HELPERS | frozenset({
     "build_blocks",
     "build_ell_random",
     "apply_updates_host",
+    # split_hubs rewires slot-by-slot into fresh replica rows, then
+    # re-establishes the invariant with a terminal sort_nbr_rows pass;
+    # apply_mirrored_edits splices via the approved slice helpers;
+    # run_common_mirror's canonicalized view routes through
+    # sort_nbr_rows too (the jnp.asarray dtype wrapper hides the call
+    # from the value-flow check)
+    "split_hubs",
+    "apply_mirrored_edits",
+    "run_common_mirror",
 })
 
 

@@ -151,6 +151,12 @@ class TriangleCountProgram(BlockProgram):
         # red[u] = ordered common-neighbor pairs = 2 * triangles at u
         return red // 2, state[1]
 
+    def mirror_state(self, state, primary_row: jax.Array):
+        # counts are per-vertex (replicate); neighbor rows are per-ROW
+        # slices — gathering them through primaries would duplicate the
+        # primary's slice onto every mirror.
+        return state[0][primary_row], state[1]
+
 
 class CorenessBlockProgram(BlockProgram):
     """§4.1 min-H coreness on the generic contract (parity witness)."""
@@ -181,16 +187,21 @@ def connected_components(
     executor=None,
     max_steps: Optional[int] = None,
     with_steps: bool = False,
+    mirror=None,
 ) -> Union[jax.Array, Tuple[jax.Array, jax.Array]]:
     """Canonical component labels: label[u] = min padded id of u's component.
 
     Returns (N,) int32 with -1 on padding rows (plus the superstep count
     as a device scalar when `with_steps=True`).  Identical integers on
     every backend; supersteps scale with the largest component diameter.
+
+    `mirror` (a `core.hub_split.MirrorPlan`) runs the hub-split dataflow;
+    mirror rows only ever carry their primary's id, so labels stay in the
+    unsplit id space and primaries match the unsplit run bit-exactly.
     """
     out = ops.run_block_program(
         g, ConnectedComponentsProgram(), backend=backend, executor=executor,
-        max_steps=max_steps, with_steps=with_steps)
+        max_steps=max_steps, with_steps=with_steps, mirror=mirror)
     state, steps = out if with_steps else (out, None)
     labels = jnp.where(g.node_mask, state, -1)
     return (labels, steps) if with_steps else labels
@@ -204,16 +215,20 @@ def pagerank(
     backend: str = "auto",
     executor=None,
     with_steps: bool = False,
+    mirror=None,
 ) -> Union[jax.Array, Tuple[jax.Array, jax.Array]]:
     """Push-style PageRank over the undirected graph; (N,) float32 ranks.
 
     `tol=None` runs exactly `max_steps` supersteps (the fixed-iteration
     variant); otherwise the fused loop halts once no node moves more than
-    `tol`.  Padding rows hold 0.0.
+    `tol`.  Padding rows hold 0.0.  Under `mirror` (hub split) the slice
+    partials re-associate the float sums — allclose to the unsplit run,
+    not bit-equal (the integer workloads ARE bit-equal).
     """
     prog = PageRankProgram(alpha=alpha, tol=tol, max_steps=max_steps)
     out = ops.run_block_program(
-        g, prog, backend=backend, executor=executor, with_steps=with_steps)
+        g, prog, backend=backend, executor=executor, with_steps=with_steps,
+        mirror=mirror)
     if with_steps:
         (rank, _), steps = out
         return rank, steps
@@ -225,16 +240,19 @@ def triangle_counts(
     backend: str = "auto",
     executor=None,
     with_steps: bool = False,
+    mirror=None,
 ) -> Union[jax.Array, Tuple[jax.Array, jax.Array]]:
     """Per-node triangle counts ((N,) int32, 0 on padding rows).
 
     tri[u] = number of triangles containing u; the global total is
     `triangle_total(counts)` = sum / 3 (each triangle has 3 corners).
-    One superstep on every backend.
+    One superstep on every backend.  Under `mirror` the runner routes
+    through the exact `hub_split.run_common_mirror` pass (canonicalized
+    rows + per-slice corrections) — counts at primaries are bit-exact.
     """
     out = ops.run_block_program(
         g, TriangleCountProgram(), backend=backend, executor=executor,
-        with_steps=with_steps)
+        with_steps=with_steps, mirror=mirror)
     if with_steps:
         (counts, _), steps = out
         return counts, steps
@@ -249,6 +267,7 @@ def fused_analytics(
     executor=None,
     with_steps: bool = False,
     init: Optional[Tuple[jax.Array, jax.Array]] = None,
+    mirror=None,
 ) -> Union[Tuple[jax.Array, jax.Array, jax.Array],
            Tuple[Tuple[jax.Array, jax.Array, jax.Array], jax.Array]]:
     """Coreness + CC labels + PageRank from ONE fused superstep loop.
@@ -274,6 +293,11 @@ def fused_analytics(
     its uniform init here, still runs its `steps` fixed iterations.
     This is the serving path's snapshot refresh: one fused loop, three
     fields, no standalone convergence budget for coreness/CC needed.
+
+    `mirror` (a `core.hub_split.MirrorPlan`) runs the whole fused loop
+    under the vertex-cut dataflow: one merge stage per field per
+    superstep, coreness/CC bit-exact vs the unsplit run, PageRank
+    allclose (float slice sums re-associate).
     """
     pr = PageRankProgram(alpha=alpha, tol=None, max_steps=steps)
     prog = MultiProgram(
@@ -282,15 +306,16 @@ def fused_analytics(
     state0 = None
     if init is not None:
         core0, labels0 = init
+        gi = g if mirror is None else ops._mirror_init_view(g, mirror)
         state0 = (
             jnp.asarray(core0, jnp.int32),
             jnp.where(g.node_mask, jnp.asarray(labels0, jnp.int32),
                       INT32_MAX),
-            pr.init(g),
+            pr.init(gi),
         )
     out = ops.run_block_program(
         g, prog, backend=backend, executor=executor, with_steps=with_steps,
-        state0=state0)
+        state0=state0, mirror=mirror)
     state, n = out if with_steps else (out, None)
     core, lab, (rank, _) = state
     results = (core, jnp.where(g.node_mask, lab, -1), rank)

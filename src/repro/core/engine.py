@@ -198,6 +198,20 @@ class BlockProgram:
         state'.  Must be jit-pure and elementwise over the node axis."""
         raise NotImplementedError
 
+    def mirror_state(self, state: Any, primary_row: jax.Array) -> Any:
+        """Replicate per-vertex state onto hub mirror rows (vertex cut).
+
+        Under a hub-split graph (`core.hub_split`) every mirror row must
+        carry its primary's state so neighbors reading a replica see the
+        logical value and replicas advance in lockstep through `update`.
+        The default gathers every array leaf through `primary_row` —
+        correct whenever all leaves are per-VERTEX (N-leading) values.
+        Programs with per-ROW state (e.g. triangle counting's neighbor-
+        row field) override this to protect those leaves.  Must be
+        idempotent: the runner applies it to caller warm starts too.
+        """
+        return jax.tree_util.tree_map(lambda a: a[primary_row], state)
+
     def changed(self, old: Any, new: Any) -> jax.Array:
         """Local convergence verdict (device bool scalar); the runner
         halts when no worker reports a change.  Default: any array leaf
@@ -275,6 +289,11 @@ class MultiProgram(BlockProgram):
         for p, o, n in zip(self.programs, old, new):
             out = out | p.changed(o, n)
         return out
+
+    def mirror_state(self, state: Tuple[Any, ...],
+                     primary_row: jax.Array) -> Tuple[Any, ...]:
+        return tuple(p.mirror_state(s, primary_row)
+                     for p, s in zip(self.programs, state))
 
 
 # One jitted wrapper per program INSTANCE, kept for the instance's

@@ -145,6 +145,7 @@ def build_blocks(
     Cn: Optional[int] = None,
     Cd: Optional[int] = None,
     deg_slack: int = 8,
+    node_slack: int = 0,
 ) -> GraphBlocks:
     """Construct GraphBlocks from an edge list and a node->block assignment.
 
@@ -158,6 +159,12 @@ def build_blocks(
            a multiple of 8).
     Cd:    degree capacity (default: max degree + deg_slack) — insertions
            beyond this raise at the host boundary.
+    node_slack: extra padding rows reserved per block on top of the default
+           Cn (ignored when Cn is given explicitly).  Padding rows are the
+           raw material of both `migrate_vertices` destinations and
+           `core.hub_split.split_hubs` mirror replicas — split-aware builds
+           reserve room here so hub slices can land in their readers'
+           blocks without growing Cn (which would re-key every row id).
     """
     edges = np.asarray(edges, dtype=np.int64)
     if edges.size:
@@ -173,7 +180,7 @@ def build_blocks(
 
     pop = np.bincount(assign, minlength=P)
     if Cn is None:
-        Cn = int(-(-max(1, pop.max()) // 8) * 8)
+        Cn = int(-(-(max(1, pop.max()) + max(0, int(node_slack))) // 8) * 8)
     deg = np.zeros(n, dtype=np.int64)
     if edges.size:
         np.add.at(deg, edges[:, 0], 1)

@@ -67,7 +67,7 @@ def coreness_step(
 
 def coreness(
     g: GraphBlocks, max_steps: int = 10_000, backend: str = "auto",
-    executor=None,
+    executor=None, mirror=None,
 ) -> jax.Array:
     """Coreness of every node (0 on padding rows), via the chosen backend.
 
@@ -77,7 +77,20 @@ def coreness(
     All backends return identical integers.  On the mesh backend pass a
     long-lived `SpmdExecutor` via `executor=` to skip the per-call halo
     plan build.
+
+    `mirror` (a `core.hub_split.MirrorPlan` for a split `g`) routes
+    through the generic `CorenessBlockProgram` under the vertex-cut
+    dataflow: per-slice h-index partials merge through count histograms,
+    so every row of a replica group carries the hub's exact coreness —
+    bit-identical at primaries to the unsplit run.
     """
+    if mirror is not None:
+        from .algorithms import CorenessBlockProgram
+
+        est = ops.run_block_program(
+            g, CorenessBlockProgram(), backend=backend, executor=executor,
+            max_steps=max_steps, mirror=mirror)
+        return jnp.where(g.node_mask, est, 0)
     return ops.coreness_blocks(g, backend=backend, max_steps=max_steps,
                                executor=executor)
 

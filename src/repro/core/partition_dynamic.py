@@ -116,14 +116,30 @@ def choose_node_moves(
     max_moves: int = 8,
     balance_slack: float = 1.05,
     pair_counts: Optional[np.ndarray] = None,
+    objective: str = "halo",
 ) -> list:
     """masterCompute move selection for live rebalancing (§4.2).
 
     Greedy, deterministic: while some block's load exceeds
     `balance_slack x mean`, move one of its real nodes to an underloaded
-    block with free node capacity, preferring the (node, destination)
-    pair with the best edge-cut gain — the node-level analogue of
-    `ub_update`'s "partition owning the most incident edges" rule.
+    block with free node capacity.  Two candidate objectives:
+
+      * ``"halo"`` (default) — degree-aware halo-volume minimization.
+        Moving u from b to b2 changes the per-superstep W2W payload by
+        2*(aff[u][b] - aff[u][b2]) slots (u's outgoing slots plus the
+        mirror-image slots of its neighbors), so the primary score is
+        the volume reduction aff[b2] - aff[b]; ties break toward the
+        smallest *residual* halo degree deg[u] - aff[b2] — the slots
+        the move cannot internalize and that keep paying W2W every
+        superstep — then toward destinations with the most existing
+        pair traffic (`pair_counts` weighted by that residual: heavy
+        boundary nodes go where their remaining halo overlaps traffic
+        that already flows).
+      * ``"load"`` — the original greedy (edge-cut gain, then heaviest
+        node, the node-level analogue of `ub_update`'s "partition
+        owning the most incident edges" rule), kept for the §4.2
+        experiments and tests that pin its move trajectories.
+
     `pair_counts` (`graph.halo_pair_counts`) orders destination
     candidates by existing W2W traffic, so ties resolve toward the
     blocks the overloaded block already talks to.
@@ -133,6 +149,9 @@ def choose_node_moves(
     Returns a list of (node_id, dest_block) — possibly empty when no
     admissible move helps.
     """
+    if objective not in ("halo", "load"):
+        raise ValueError(f"objective must be 'halo' or 'load', "
+                         f"got {objective!r}")
     nbr = np.asarray(g.nbr)
     mask = np.asarray(g.node_mask)
     deg = np.asarray(g.deg, dtype=np.int64)
@@ -155,16 +174,19 @@ def choose_node_moves(
         if pair_counts is not None:
             dests.sort(key=lambda b2: (-int(pair_counts[b, b2]), b2))
         rows = np.arange(b * Cn, (b + 1) * Cn)
-        # key maximized lexicographically: best cut gain, then heaviest
-        # node (most load shed per move), then lowest id, then the
-        # destination with the most existing W2W traffic (dests order)
+        real = rows[mask[rows]]
+        # per-node destination-block affinities, one bincount for the
+        # whole block (aff[i, p] = neighbors of real[i] living in p)
+        nb = nbr[real]
+        valid = nb >= 0
+        ri, si = np.nonzero(valid)
+        aff = np.zeros((len(real), P), np.int64)
+        np.add.at(aff, (ri, nb[ri, si] // Cn), 1)
         best = None
-        for u in rows[mask[rows]]:
+        for i, u in enumerate(real):
             u = int(u)
             if u in moved or deg[u] == 0:
                 continue
-            nb = nbr[u]
-            aff = np.bincount(nb[nb >= 0] // Cn, minlength=P)
             for j, b2 in enumerate(dests):
                 # post-move bound: never push the destination past the
                 # slack line, or a hub ping-pongs between blocks (each
@@ -172,8 +194,17 @@ def choose_node_moves(
                 # mesh path)
                 if load[b2] + deg[u] > balance_slack * mean:
                     continue
-                gain = int(aff[b2]) - int(aff[b])
-                cand = (gain, int(deg[u]), -u, -j)
+                gain = int(aff[i, b2]) - int(aff[i, b])
+                if objective == "halo":
+                    # key maximized lexicographically: W2W volume cut,
+                    # then least residual halo degree, then heaviest
+                    # node, lowest id, traffic-ordered destination
+                    residual = int(deg[u]) - int(aff[i, b2])
+                    cand = (gain, -residual, int(deg[u]), -u, -j)
+                else:
+                    # key: best cut gain, then heaviest node (most load
+                    # shed per move), lowest id, traffic-ordered dest
+                    cand = (gain, int(deg[u]), -u, -j)
                 if best is None or cand > best[0]:
                     best = (cand, u, b2)
         if best is None:

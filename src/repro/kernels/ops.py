@@ -830,11 +830,71 @@ def neighbor_combine_blocks(
     return _combine_dense(adj, field, combine, g.Cd)
 
 
+def _mirror_merge(red, field, nbr, mirror, combine: str) -> jax.Array:
+    """Merge per-slice partial aggregates across each hub replica group.
+
+    The combine-then-broadcast stage of the vertex-cut dataflow
+    (`core.hub_split`): entries of `red` at group rows are replaced by
+    the LOGICAL aggregate of the full sliced neighborhood; all other
+    rows pass through untouched.  Per combine:
+
+      min    — segmented min over the group's partials (exactly
+               associative: the slices partition the neighborhood, so
+               the merged min sees the identical value multiset).
+      sum    — segmented add (bit-exact for ints; float PageRank sums
+               re-associate across slices — allclose, not bit-equal).
+      hindex — partials do NOT compose through h values; the merge
+               recomputes per-slice count histograms (the
+               ``variant="count"`` formulation: cnt_t = #{values >= t},
+               t = 1..Km) which ADD exactly across slices, then reads
+               h = #{t : cnt_t >= t}.  Exact because a merged h-index
+               never exceeds the logical degree <= Km.
+
+    Pure device code; the scatter targets of pad entries are pushed out
+    of bounds (dropped) so a pad row id can never collide with a real
+    group row's write.
+    """
+    rows, gid, G = mirror.grp_rows, mirror.grp_gid, mirror.Gmax
+    live = gid < G
+    if combine == "min":
+        fill = jnp.iinfo(red.dtype).max
+        vals = jnp.where(live, red[rows], fill)
+        part = jnp.full((G + 1,), fill, red.dtype).at[gid].min(vals)
+        out = part[gid]
+    elif combine == "sum":
+        vals = jnp.where(live, red[rows], jnp.zeros((), red.dtype))
+        part = jnp.zeros((G + 1,), red.dtype).at[gid].add(vals)
+        out = part[gid]
+    elif combine == "hindex":
+        rn = nbr[rows]
+        ve = jnp.where(rn >= 0, field.astype(jnp.int32)[jnp.clip(rn, 0)], -1)
+        t = jnp.arange(1, mirror.Km + 1, dtype=jnp.int32)
+        hist = jnp.sum(ve[:, :, None] >= t[None, None, :], axis=1)
+        hist = jnp.where(live[:, None], hist, 0)
+        cnt = jnp.zeros((G + 1, mirror.Km), hist.dtype).at[gid].add(hist)
+        out = jnp.sum(cnt >= t[None, :], axis=1).astype(red.dtype)[gid]
+    else:
+        raise ValueError(
+            f"combine {combine!r} has no mirror merge; count_common routes "
+            "through core.hub_split.run_common_mirror")
+    tgt = jnp.where(live, rows, red.shape[0])  # OOB scatter drops pad writes
+    return red.at[tgt].set(jnp.where(live, out, jnp.zeros((), red.dtype)))
+
+
+def _mirror_merged(red, field, nbr, mirror, program):
+    """Apply `_mirror_merge` per field of a (possibly multi-) program."""
+    if program.combine == "multi":
+        return tuple(
+            _mirror_merge(r, f, nbr, mirror, c)
+            for r, f, c in zip(red, field, program.combines))
+    return _mirror_merge(red, field, nbr, mirror, program.combine)
+
+
 @functools.partial(
     jax.jit, static_argnames=("program", "b", "interpret", "max_steps",
                               "n_real"))
-def _block_program_fused(g, state0, adj, program, b: str, interpret: bool,
-                         max_steps: int, n_real: int):
+def _block_program_fused(g, state0, adj, mirror, program, b: str,
+                         interpret: bool, max_steps: int, n_real: int):
     """The generic fused fixpoint: program supersteps in ONE while_loop.
 
     The loop body is (halo field -> backend combine -> block-local update
@@ -842,8 +902,16 @@ def _block_program_fused(g, state0, adj, program, b: str, interpret: bool,
     costs ZERO per-superstep transfers on every backend and the superstep
     count comes back as a device scalar, exactly like the dedicated
     coreness fixpoints of PR 4.
+
+    `mirror` (a `core.hub_split.MirrorPlan` or None) arms the vertex-cut
+    dataflow: the update ctx carries the LOGICAL degrees and real-node
+    count, and a `_mirror_merge` stage between combine and update folds
+    per-slice partials into per-vertex aggregates.  The plan rides as a
+    jit OPERAND (its statics are treedef metadata), so single-device
+    mirrored streams never recompile on plan content changes.
     """
-    ctx = BlockCtx(deg=jnp.asarray(g.deg, jnp.int32), node_mask=g.node_mask,
+    deg = g.deg if mirror is None else mirror.ldeg
+    ctx = BlockCtx(deg=jnp.asarray(deg, jnp.int32), node_mask=g.node_mask,
                    n_real=n_real)
 
     def red_of(field):
@@ -868,13 +936,37 @@ def _block_program_fused(g, state0, adj, program, b: str, interpret: bool,
 
     def body(c):
         state, _, it = c
-        red = red_of(program.halo_field(state))
+        field = program.halo_field(state)
+        red = red_of(field)
+        if mirror is not None:
+            red = _mirror_merged(red, field, g.nbr, mirror, program)
         new = program.update(ctx, state, red)
         return new, program.changed(state, new), it + 1
 
     state, _, steps = jax.lax.while_loop(
         cond, body, (state0, jnp.bool_(True), jnp.int32(0)))
     return state, steps
+
+
+def _mirror_init_view(g, mirror):
+    """Logical facade for `program.init` under a mirrored run.
+
+    init formulas read degrees and the real-node mask (e.g. PageRank's
+    1/deg contributions and teleport mass); on a split graph the LOGICAL
+    quantities live in the plan, so init sees them through a replaced
+    view — then `mirror_state` replicates the per-primary values onto
+    mirror rows so replicas start (and stay) in lockstep.
+    """
+    import dataclasses as _dc
+    return _dc.replace(g, deg=mirror.ldeg, node_mask=mirror.primary_mask)
+
+
+def _mirror_state0(program, state0, mirror):
+    """Replicate a whole-graph state onto mirror rows (idempotent)."""
+    rep = getattr(program, "mirror_state", None)
+    if rep is not None:
+        return rep(state0, mirror.primary_row)
+    return jax.tree_util.tree_map(lambda a: a[mirror.primary_row], state0)
 
 
 def run_block_program(
@@ -886,6 +978,7 @@ def run_block_program(
     executor=None,
     with_steps: bool = False,
     state0: Optional[Any] = None,
+    mirror=None,  # core.hub_split.MirrorPlan for a hub-split graph
 ) -> Union[Any, Tuple[Any, jax.Array]]:
     """Run a `BlockProgram` to its halt fixpoint, via the chosen backend.
 
@@ -913,16 +1006,37 @@ def run_block_program(
     fixed-iteration sub-programs (PageRank) still execute.  The caller
     owns the contract that the state matches `program.init`'s structure
     (same pytree, shapes, dtypes).
+
+    `mirror` (optional) declares `g` a hub-split graph and arms the
+    vertex-cut dataflow (`core.hub_split`): init runs against the
+    logical degree/mask view, the state replicates onto mirror rows
+    (`program.mirror_state`), the per-superstep ctx carries logical
+    degrees and real-node count, and a merge stage folds per-slice
+    partials per replica group between combine and update —
+    "count_common" programs route through the exact
+    `hub_split.run_common_mirror` pass instead.  Results match the
+    unsplit graph exactly (bit-exact for integer combines).
     """
     b = resolve_backend(backend, g.N)
     if program.combine != "multi" and program.combine not in COMBINES:
         raise ValueError(
             f"unknown combine {program.combine!r}; expected one of "
             f"{COMBINES + ('multi',)}")
+    if mirror is not None and program.combine == "count_common":
+        from ..core.hub_split import run_common_mirror  # lazy: no cycle
+
+        return run_common_mirror(
+            g, mirror, program, backend=b, interpret=interpret,
+            with_steps=with_steps, state0=state0)
     ms = int(program.max_steps if max_steps is None else max_steps)
-    n_real = int(g.n_real)  # GraphBlocks property (duck-typed, host sync)
+    # GraphBlocks property read (duck-typed, host sync) — under a mirror
+    # the ctx must carry the LOGICAL vertex count, not the row count.
+    n_real = int(g.n_real) if mirror is None else int(mirror.n_logical)
     if state0 is None:
-        state0 = program.init(g)
+        state0 = program.init(g if mirror is None
+                              else _mirror_init_view(g, mirror))
+    if mirror is not None:
+        state0 = _mirror_state0(program, state0, mirror)
     if b == "ell_spmd":
         from ..runtime.spmd import (  # lazy: no import cycle
             SpmdBlockProgram, SpmdEngine, SpmdExecutor)
@@ -930,7 +1044,7 @@ def run_block_program(
         ex = executor if executor is not None else SpmdExecutor(g)
         eng = SpmdEngine(g, executor=ex)
         state, _ = eng.run_spmd(
-            SpmdBlockProgram(program, n_real), state0, None,
+            SpmdBlockProgram(program, n_real, mirror=mirror), state0, None,
             max_supersteps=ms)
         steps = jnp.int32(len(eng.traces))
         return (state, steps) if with_steps else state
@@ -938,6 +1052,6 @@ def run_block_program(
         interpret = not _on_tpu()
     adj = ref.ell_to_dense(g.nbr, g.N) if b == "dense" else None
     state, steps = _block_program_fused(
-        g, state0, adj, program=program, b=b, interpret=interpret,
+        g, state0, adj, mirror, program=program, b=b, interpret=interpret,
         max_steps=ms, n_real=n_real)
     return (state, steps) if with_steps else state

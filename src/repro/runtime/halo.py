@@ -317,3 +317,23 @@ def build_halo_plan(
         pair_elems=pair_elems,
         slot_intra=slot_intra, slot_inter=slot_inter,
     )
+
+
+def mirror_merge_payload(plan, n_fields: int = 1) -> int:
+    """Per-superstep collective payload of the hub-mirror merge, in elements.
+
+    A mirrored run (see `core.hub_split`) adds one combine-then-broadcast
+    collective per merged field per superstep: each worker folds its
+    resident replica-group rows into a dense (Gmax + 1,) per-group
+    partial table (hindex: (Gmax + 1, Km) count histograms) and the
+    tables merge with a single pmin/psum over the worker axis.  That
+    table IS the wire payload — independent of how many replica rows
+    exist or where they live, which is the point: the merge cost is
+    bounded by the number of split hubs, not by hub degree.
+
+    Returns elements per superstep for `n_fields` min/sum fields; an
+    hindex field costs `(Gmax + 1) * Km` instead, which callers account
+    for by passing the histogram width as extra fields if they need the
+    exact figure.  Counter only — no device code.
+    """
+    return (int(plan.Gmax) + 1) * int(n_fields)

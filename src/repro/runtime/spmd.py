@@ -464,6 +464,51 @@ class SpmdCorenessProgram(SpmdProgram):
         return mstate, None, jnp.logical_not(jnp.any(summary))
 
 
+def _mirror_merge_shard(red, nb_vals, mirror, combine: str, base, S: int):
+    """Cross-worker replica-group merge of per-slice partials (mesh form).
+
+    The on-mesh twin of `kernels.ops._mirror_merge`: each worker folds
+    only the group rows resident in its shard into the (Gmax+1[, Km])
+    per-group partial table, the tables merge across workers with ONE
+    pmin/psum collective per merged field, and every worker writes the
+    merged aggregates back to its own group rows — the combine-then-
+    broadcast step of the vertex-cut dataflow, riding the same mesh as
+    the halo exchange.  hindex merges through count-histogram partials
+    off the already-halo-served `nb_vals` (so no second exchange);
+    min/sum fold the per-slice reductions directly.  Scatter targets of
+    foreign/pad entries are pushed out of bounds (dropped).
+    """
+    G = mirror.Gmax
+    rows = jnp.asarray(mirror.grp_rows, jnp.int32)
+    gid = jnp.asarray(mirror.grp_gid, jnp.int32)
+    lrow = rows - base
+    mine = (gid < G) & (lrow >= 0) & (lrow < S)
+    li = jnp.clip(lrow, 0, S - 1)
+    if combine == "min":
+        fill = jnp.iinfo(red.dtype).max
+        vals = jnp.where(mine, red[li], fill)
+        part = jnp.full((G + 1,), fill, red.dtype).at[gid].min(vals)
+        out = jax.lax.pmin(part, AXIS)[gid]
+    elif combine == "sum":
+        vals = jnp.where(mine, red[li], jnp.zeros((), red.dtype))
+        part = jnp.zeros((G + 1,), red.dtype).at[gid].add(vals)
+        out = jax.lax.psum(part, AXIS)[gid]
+    elif combine == "hindex":
+        ve = nb_vals[li].astype(jnp.int32)       # (Rp, Cd) halo-served
+        t = jnp.arange(1, mirror.Km + 1, dtype=jnp.int32)
+        hist = jnp.sum(ve[:, :, None] >= t[None, None, :], axis=1)
+        hist = jnp.where(mine[:, None], hist, 0)
+        cnt = jnp.zeros((G + 1, mirror.Km), hist.dtype).at[gid].add(hist)
+        cnt = jax.lax.psum(cnt, AXIS)
+        out = jnp.sum(cnt >= t[None, :], axis=1).astype(red.dtype)[gid]
+    else:
+        raise ValueError(
+            f"combine {combine!r} has no mirror merge; count_common routes "
+            "through core.hub_split.run_common_mirror")
+    tgt = jnp.where(mine, li, S)  # OOB scatter drops foreign/pad writes
+    return red.at[tgt].set(jnp.where(mine, out, jnp.zeros((), red.dtype)))
+
+
 class SpmdBlockProgram(SpmdProgram):
     """Adapter: any `core.engine.BlockProgram` as an SPMD program.
 
@@ -476,30 +521,58 @@ class SpmdBlockProgram(SpmdProgram):
     decision.  `fusable=True`: the whole loop runs on-mesh through
     `SpmdEngine.run_spmd` with zero per-superstep host transfers.
 
+    `mirror` (a `core.hub_split.MirrorPlan`) arms the vertex-cut
+    dataflow: the update ctx carries the worker's slice of the LOGICAL
+    degrees, and `_mirror_merge_shard` folds per-slice partials per
+    replica group between combine and update.  The plan arrays are
+    closure-captured into the compiled step (shard_map constants), so
+    the plan's `uid` is part of program identity — and of the engine's
+    compiled-step cache key (see CACHE_SCHEMAS): mirrored mesh streams
+    recompile per plan rebuild, by design.
+
     Hash/eq delegate to the wrapped program (plus the static real-node
-    count), so reusing a program object reuses the per-(mesh, H)
-    compiled superstep.
+    count and mirror identity), so reusing a program object reuses the
+    per-(mesh, H) compiled superstep.
     """
 
     fusable = True
 
-    def __init__(self, prog, n_real: int):
+    def __init__(self, prog, n_real: int, mirror=None):
         self.prog = prog
         self.n_real = int(n_real)
         self.halo_fill = prog.halo_fill
+        self.mirror = mirror
+        self.mirror_uid = None if mirror is None else mirror.uid
 
     def __hash__(self):
-        return hash((type(self), self.prog, self.n_real))
+        return hash((type(self), self.prog, self.n_real, self.mirror_uid))
 
     def __eq__(self, other):
         return (type(other) is type(self) and other.prog == self.prog
-                and other.n_real == self.n_real)
+                and other.n_real == self.n_real
+                and other.mirror_uid == self.mirror_uid)
+
+    def summary_shape(self):
+        """Static W2M summary shape (the per-worker changed flag).
+
+        `SpmdEngine._summary_shape` uses this instead of abstract-eval:
+        the mirrored `worker_local` calls `lax.axis_index`, which only
+        exists inside shard_map — eval_shape outside the mesh would
+        fail, and the summary shape is a structural constant anyway.
+        """
+        return jax.ShapeDtypeStruct((1,), jnp.bool_)
 
     def halo_field(self, wstate):
         return self.prog.halo_field(wstate)
 
     def worker_local(self, ctx: LocalCtx, state, nb_vals, directive):
-        bctx = BlockCtx(deg=ctx.deg, node_mask=ctx.node_mask,
+        deg = ctx.deg
+        S = deg.shape[0]
+        if self.mirror is not None:
+            base = jax.lax.axis_index(AXIS) * S
+            deg = jax.lax.dynamic_slice(
+                jnp.asarray(self.mirror.ldeg, jnp.int32), (base,), (S,))
+        bctx = BlockCtx(deg=deg, node_mask=ctx.node_mask,
                         n_real=self.n_real)
         field = self.prog.halo_field(state)
         if self.prog.combine == "multi":
@@ -511,6 +584,15 @@ class SpmdBlockProgram(SpmdProgram):
                 in zip(self.prog.combines, field, nb_vals))
         else:
             red = combine_rows(self.prog.combine, field, nb_vals)
+        if self.mirror is not None:
+            base = jax.lax.axis_index(AXIS) * S
+            if self.prog.combine == "multi":
+                red = tuple(
+                    _mirror_merge_shard(r, nb, self.mirror, c, base, S)
+                    for r, nb, c in zip(red, nb_vals, self.prog.combines))
+            else:
+                red = _mirror_merge_shard(
+                    red, nb_vals, self.mirror, self.prog.combine, base, S)
         new = self.prog.update(bctx, state, red)
         changed = self.prog.changed(state, new)
         return new, changed.reshape(1)  # per-worker W2M flag
@@ -546,7 +628,8 @@ class SpmdEngine:
         B, Cn = ex.wm.B, ex.wm.Cn
         Cd = ex.plan.nbr_local.shape[1]
         overlap = ex.overlap
-        key = (ex.wm.mesh, H, B, Cn, Cd, overlap, program)
+        mirror = getattr(program, "mirror_uid", None)
+        key = (ex.wm.mesh, H, B, Cn, Cd, overlap, program, mirror)
         cached = self._step_cache.get(key)
         if cached is not None:
             return cached
@@ -576,7 +659,8 @@ class SpmdEngine:
         B, Cn = ex.wm.B, ex.wm.Cn
         Cd = ex.plan.nbr_local.shape[1]
         overlap = ex.overlap
-        key = ("fused", ex.wm.mesh, H, B, Cn, Cd, overlap, program)
+        mirror = getattr(program, "mirror_uid", None)
+        key = ("fused", ex.wm.mesh, H, B, Cn, Cd, overlap, program, mirror)
         cached = self._step_cache.get(key)
         if cached is not None:
             return cached
@@ -613,7 +697,14 @@ class SpmdEngine:
 
     def _summary_shape(self, program: SpmdProgram, wstate, directive):
         """Abstract-eval the gathered W2M summary (coordinator granularity:
-        leading axis P) for post-loop trace reconstruction."""
+        leading axis P) for post-loop trace reconstruction.
+
+        Programs may declare the shape statically via `summary_shape()`
+        (mirrored `SpmdBlockProgram`s must: their worker_local calls
+        `lax.axis_index`, which has no meaning outside shard_map)."""
+        hint = getattr(program, "summary_shape", None)
+        if hint is not None:
+            return hint()
         Cd = self.ex.plan.nbr_local.shape[1]
         field_s = jax.eval_shape(program.halo_field, wstate)
         nb_s = jax.tree_util.tree_map(

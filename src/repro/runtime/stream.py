@@ -302,6 +302,10 @@ class StreamSession:
         self._migrations = self._migrated = 0
         self._remap: Optional[np.ndarray] = None  # open-time -> current ids
         self._cc_merges = self._cc_recomputes = 0
+        # hub-split plan slot: always None on the plain session; the
+        # serving layer reads getattr(session, "mirror") uniformly across
+        # StreamSession and MirrorStream
+        self.mirror = None
 
     @property
     def windows_applied(self) -> int:
@@ -518,3 +522,87 @@ def run_stream(
     for window in _iter_windows(updates, R):
         session.apply_window(window)
     return session.result()
+
+
+class MirrorStream:
+    """Stream ingestion over a hub-split graph (vertex-cut maintenance).
+
+    `StreamSession`'s sibling for graphs that went through
+    `core.hub_split.split_hubs`: holds the split `GraphBlocks` plus its
+    `MirrorPlan` and ingests `(u, v, op)` edit windows where ids are
+    PRIMARY row ids of the split graph.  Each window goes through
+    `hub_split.apply_mirrored_edits` at the host boundary:
+
+      * inserts land in the endpoint's first serving row with spare
+        slice capacity — and when a vertex crosses the split threshold,
+        a fresh replica row is allocated from the block's padding pool
+        and the edge lands there (the ON-LINE split: no whole-graph
+        re-split, no rewiring of existing slots);
+      * deletes locate the unique serving-row pair that carries the
+        edge (MIRRORED delete) and splice it out of both sorted slices.
+
+    After each window the maintained analytics refresh with
+    mirror-aware runs — `kcore.coreness(..., mirror=plan)` and
+    optionally `connected_components(..., mirror=plan)` — which is
+    exact by the split==unsplit parity guarantee.  (The Theorem-1
+    clamped-recompute machinery reasons in the unsplit id space; a
+    candidate-bounded mirrored maintenance pass is future work, so this
+    session recomputes.  The rebuilt plan also carries a fresh `uid`,
+    so the mirrored SPMD step recompiles per edit window — stick to
+    single-device backends for fine-grained mirrored streams.)
+
+    Duck-types the slice of `StreamSession` the serving layer consumes:
+    `.g`, `.core`, `.labels`, `.backend`, `.executor` (always None —
+    plan maintenance under `SpmdExecutor` is future work),
+    `.windows_applied`, `.mirror`, and `result()`.
+    """
+
+    def __init__(self, g, plan, backend: str = "jnp",
+                 cc_labels: bool = False):
+        from ..core.hub_split import apply_mirrored_edits  # noqa: F401
+        from ..core.kcore import coreness
+
+        self.g = g
+        self.mirror = plan
+        self.backend = backend
+        self.executor = None
+        self._windows = 0
+        self._n_updates = 0
+        self.core = coreness(g, backend=backend, mirror=plan)
+        self._track_labels = bool(cc_labels)
+        self.labels = (connected_components(g, backend=backend, mirror=plan)
+                       if self._track_labels else None)
+
+    @property
+    def windows_applied(self) -> int:
+        return self._windows
+
+    def apply_window(self, window: List[Tuple[int, int, int]]) -> None:
+        """Apply one edit window (primary-row ids) and refresh analytics."""
+        from ..core.hub_split import apply_mirrored_edits
+        from ..core.kcore import coreness
+
+        if not window:
+            return
+        self.g, self.mirror = apply_mirrored_edits(
+            self.g, self.mirror, window)
+        self._windows += 1
+        self._n_updates += len(window)
+        self.core = coreness(self.g, backend=self.backend,
+                             mirror=self.mirror)
+        if self._track_labels:
+            self.labels = connected_components(
+                self.g, backend=self.backend, mirror=self.mirror)
+
+    def result(self) -> StreamResult:
+        """Current state as a `StreamResult` (routing/superstep stats are
+        not metered on the mirrored path; those counters report zeros)."""
+        zeros = StreamStats(
+            updates=self._n_updates, batches=self._windows, block_local=0,
+            escalated_cross_block=0, escalated_spill=0,
+            escalated_conflict=0, bfs_steps=0, recompute_steps=0,
+            per_block=tuple(0 for _ in range(self.g.P)))
+        return StreamResult(g=self.g, core=self.core, stats=zeros,
+                            labels=self.labels)
+
+    close = result

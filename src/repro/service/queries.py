@@ -15,7 +15,12 @@ epoch (the session's id space when the snapshot was cut; migrations make
 later epochs' spaces differ — `EpochSnapshot.orig_id` maps back to input
 ids).  Out-of-range ids are rejected at submit time by the server;
 padding-row ids are legal and answer with the padding conventions
-(core 0, degree 0, label -1).
+(core 0, degree 0, label -1).  Hub-split snapshots carry a host-side
+`primary` map (`core.hub_split.MirrorPlan.primary_row`): every queried
+id resolves through it before the gather, so a replica-row id answers
+with its hub's values, and `nbr_max_core` reads the snapshot's
+pre-merged `nbr_max` field (a hub's neighbors are sharded across its
+replica slices — no single row's gather sees them all).
 
 Query kinds:
 
@@ -148,6 +153,14 @@ def _pad_ids(vals: List[int], B: int) -> jax.Array:
     return jnp.asarray(out)
 
 
+def _resolve(snap: EpochSnapshot, ids: List[int]) -> List[int]:
+    """Map queried ids through the hub-split primary map (host-side,
+    no-op on unsplit snapshots)."""
+    if snap.primary is None:
+        return ids
+    return [int(snap.primary[i]) for i in ids]
+
+
 def run_batch(snap: EpochSnapshot, kind: str, queries: List[Query],
               k: int = 0) -> list:
     """Answer one same-kind batch against a snapshot.
@@ -169,19 +182,20 @@ def run_batch(snap: EpochSnapshot, kind: str, queries: List[Query],
         return [(ids_h[:q.k].tolist(), vals_h[:q.k].tolist())
                 for q in queries]
     B = batch_bucket(n)
+    us = _resolve(snap, [q.u for q in queries])
     if kind == "core":
-        out = _batch_gather(snap.core,
-                            _pad_ids([q.u for q in queries], B))
+        out = _batch_gather(snap.core, _pad_ids(us, B))
     elif kind == "degree":
-        out = _batch_gather(snap.deg,
-                            _pad_ids([q.u for q in queries], B))
+        out = _batch_gather(snap.deg, _pad_ids(us, B))
     elif kind == "nbr_max_core":
-        out = _batch_nbr_max_core(snap.core, snap.nbr,
-                                  _pad_ids([q.u for q in queries], B))
+        if snap.nbr_max is not None:  # hub-split: pre-merged across slices
+            out = _batch_gather(snap.nbr_max, _pad_ids(us, B))
+        else:
+            out = _batch_nbr_max_core(snap.core, snap.nbr, _pad_ids(us, B))
     elif kind == "same_component":
         out = _batch_same_component(
-            snap.labels, _pad_ids([q.u for q in queries], B),
-            _pad_ids([q.v for q in queries], B))
+            snap.labels, _pad_ids(us, B),
+            _pad_ids(_resolve(snap, [q.v for q in queries]), B))
     else:
         raise ValueError(f"unknown query kind {kind!r}; expected {KINDS}")
     ans = jax.device_get(out)

@@ -26,6 +26,13 @@ Double buffering: snapshots are immutable NamedTuples, so "front" and
 "back" collapse to an attribute swap — queries in flight keep whatever
 snapshot record they started with; `refresh()` builds the next epoch's
 record off to the side and publishes it by a single assignment.
+
+Hub-split sessions (`runtime.stream.MirrorStream`, or any session whose
+`.mirror` is a `core.hub_split.MirrorPlan`) refresh through the same
+fused loop under the vertex-cut dataflow: coreness/CC stay bit-exact at
+primaries, PageRank is allclose (float slice partials re-associate),
+and the snapshot gains the `primary`/`nbr_max` resolution fields the
+query layer uses (see `EpochSnapshot`).
 """
 from __future__ import annotations
 
@@ -33,6 +40,7 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..core.algorithms import fused_analytics
 
@@ -45,6 +53,16 @@ class EpochSnapshot(NamedTuple):
     invalidated mid-epoch).  Node addressing is the session's padded id
     space at this epoch; `orig_id` maps back to pre-partition input ids
     (stable across §4.2 migrations).
+
+    Hub-split sessions (`MirrorStream` / any session exposing a
+    `core.hub_split.MirrorPlan` on `.mirror`) publish two extra fields:
+    `primary` — the host-side row -> primary-row map queries resolve
+    through (replica-row ids answer with the hub's values), and
+    `nbr_max` — the group-merged neighbor-max-coreness field (a hub's
+    neighbors are sharded across its replica slices, so the plain
+    (N, Cd) gather on one row would see only one slice).  `deg` then
+    holds LOGICAL degrees and `rank` is masked to primaries (replica
+    rows read 0.0, so `topk_pagerank` never lists a hub twice).
     """
 
     epoch: int               # snapshot version, 0 at session open
@@ -52,10 +70,12 @@ class EpochSnapshot(NamedTuple):
     core: jax.Array          # (N,) int32 coreness (0 on padding)
     labels: jax.Array        # (N,) int32 CC labels (-1 on padding)
     rank: jax.Array          # (N,) float32 PageRank (0.0 on padding)
-    deg: jax.Array           # (N,) int32 degrees
+    deg: jax.Array           # (N,) int32 degrees (logical under mirror)
     nbr: jax.Array           # (N, Cd) int32 sorted-ELL adjacency
     node_mask: jax.Array     # (N,) bool real-node mask
     orig_id: jax.Array       # (N,) int32 original input ids
+    primary: Optional[np.ndarray] = None   # (N,) host row->primary map
+    nbr_max: Optional[jax.Array] = None    # (N,) group-merged nbr max core
 
 
 class AnalyticsState:
@@ -71,8 +91,9 @@ class AnalyticsState:
     def __init__(self, session, alpha: float = 0.85, pr_steps: int = 30):
         if session.labels is None:
             raise ValueError(
-                "AnalyticsState needs a label-tracking StreamSession: open "
-                "it with cc_labels=connected_components(g) so the refresh "
+                "AnalyticsState needs a label-tracking session: open "
+                "StreamSession with cc_labels=connected_components(g) "
+                "(or MirrorStream with cc_labels=True) so the refresh "
                 "can warm-start CC at its maintained fixpoint.")
         self._session = session
         self.alpha = float(alpha)
@@ -103,20 +124,40 @@ class AnalyticsState:
         """
         sess = self._session
         g = sess.g
+        mirror = getattr(sess, "mirror", None)
         core, labels, rank = fused_analytics(
             g, alpha=self.alpha, steps=self.pr_steps,
             backend=sess.backend, executor=sess.executor,
-            init=(sess.core, sess.labels))
+            init=(sess.core, sess.labels), mirror=mirror)
+        if mirror is None:
+            deg, primary, nbr_max = g.deg, None, None
+        else:
+            # hub-split session: publish logical degrees, resolve queries
+            # through the primary map, mask replica ranks out of top-k,
+            # and pre-merge neighbor-max-coreness across replica slices
+            # (one (N, Cd) gather + scatter-max per refresh — a single
+            # row's slice would see only part of a hub's neighborhood)
+            prow = jnp.asarray(mirror.primary_row, jnp.int32)
+            deg = jnp.asarray(mirror.ldeg, jnp.int32)
+            rank = jnp.where(jnp.asarray(mirror.primary_mask), rank, 0.0)
+            row_max = jnp.max(
+                jnp.where(g.nbr >= 0, core[jnp.clip(g.nbr, 0)], -1),
+                axis=1).astype(jnp.int32)
+            grp_max = jnp.full(g.N, -1, jnp.int32).at[prow].max(row_max)
+            nbr_max = grp_max[prow]
+            primary = np.asarray(mirror.primary_row, np.int32)
         back = EpochSnapshot(
             epoch=0 if self._front is None else self._front.epoch + 1,
             windows=sess.windows_applied,
             core=jnp.copy(core),
             labels=jnp.copy(labels),
             rank=jnp.copy(rank),
-            deg=jnp.copy(g.deg),
+            deg=jnp.copy(deg),
             nbr=jnp.copy(g.nbr),
             node_mask=jnp.copy(g.node_mask),
             orig_id=jnp.copy(g.orig_id),
+            primary=primary,
+            nbr_max=None if nbr_max is None else jnp.copy(nbr_max),
         )
         self._front = back  # publish
         self.refreshes += 1

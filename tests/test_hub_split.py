@@ -1,0 +1,316 @@
+"""Hub splitting / mirroring: split == unsplit, exactly, everywhere.
+
+The tentpole contract of the skew-aware vertex cut
+(`core.hub_split.split_hubs`): a hub's adjacency row is sliced across
+primary + replica rows (bounding Cd by the split threshold), mirrors
+compute PARTIAL aggregates through the existing combines, and the
+combine-then-broadcast merge makes every workload land on the value the
+unsplit graph produces —
+
+  * coreness (min/hindex), CC labels, triangle counts: BIT-exact;
+  * PageRank: allclose (float slice partials re-associate);
+
+on jnp / dense / ell / ell_spmd alike.  This file runs on whatever
+devices exist (W=1 covers the full shard_map path); the multi-device CI
+job re-runs it under `XLA_FLAGS=--xla_force_host_platform_device_count=8`
+so the mirror merge's pmin/psum crosses real device boundaries.
+
+Also under test: the ONLINE path (threshold-crossing inserts allocating
+a fresh replica mid-stream, mirrored deletes splicing the one serving
+pair) against freshly built oracle graphs, the allocation / halo-payload
+counters the PR's acceptance gates ride on, and the query service
+resolving replica-row ids through the primary map.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from _hyp import given, settings, st
+
+from repro.core import build_blocks, coreness
+from repro.core.algorithms import (
+    CorenessBlockProgram, connected_components, fused_analytics, pagerank,
+    triangle_counts,
+)
+from repro.core.hub_split import (
+    apply_mirrored_edits, groups_of, mirror_report, split_hubs,
+)
+from repro.core.partition import node_random_partition
+from repro.graphgen import barabasi_albert
+from repro.kernels import ops
+from repro.runtime.halo import mirror_merge_payload
+from repro.runtime.stream import MirrorStream
+from repro.service import AnalyticsState, core_of, degree_of, same_component
+from repro.service.queries import batch_bucket, nbr_max_core_of, run_batch
+
+BACKENDS = ("jnp", "dense", "ell", "ell_spmd")
+PR_STEPS = 12
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _skewed_graph(n, seed, P=8, threshold=8, extra=0):
+    """A split-worthy graph: BA skew + two planted hubs, random cut."""
+    rng = np.random.default_rng(seed)
+    edges = {(0, v) for v in range(1, 1 + threshold * 4)}
+    edges |= {(1, v) for v in range(2 + threshold * 4,
+                                    2 + threshold * 5)}
+    for u, v in barabasi_albert(n, 3, seed=seed):
+        if u != v:
+            edges.add((min(u, v), max(u, v)))
+    edges = np.array(sorted(edges))
+    assign = rng.integers(0, P, n)
+    g = build_blocks(edges, n, assign, P=P, node_slack=32 + extra)
+    return g, edges, assign
+
+
+def _bymap(oid, vals):
+    return dict(zip(oid.tolist(), vals.tolist()))
+
+
+def _parts(oid, labels):
+    """CC partition structure keyed by original ids (label values are
+    row ids of each graph's own space — compare the grouping)."""
+    groups = {}
+    for o, l in zip(oid.tolist(), labels.tolist()):
+        groups.setdefault(l, set()).add(o)
+    return frozenset(frozenset(s) for s in groups.values())
+
+
+def _oracles(g, mask, oid):
+    return dict(
+        core=_bymap(oid, np.asarray(coreness(g, backend="jnp"))[mask]),
+        tri=_bymap(oid, np.asarray(triangle_counts(g, backend="jnp"))[mask]),
+        cc=_parts(oid, np.asarray(connected_components(g,
+                                                       backend="jnp"))[mask]),
+        pr=_bymap(oid, np.asarray(pagerank(
+            g, backend="jnp", tol=None, max_steps=PR_STEPS))[mask]),
+    )
+
+
+def _check_split(g2, plan, want, backend):
+    pm = np.asarray(plan.primary_mask)
+    oid = np.asarray(g2.orig_id)[pm]
+    core = _bymap(oid, np.asarray(coreness(
+        g2, backend=backend, mirror=plan))[pm])
+    assert core == want["core"], f"coreness diverged on {backend}"
+    tri = _bymap(oid, np.asarray(triangle_counts(
+        g2, backend=backend, mirror=plan))[pm])
+    assert tri == want["tri"], f"triangles diverged on {backend}"
+    cc = _parts(oid, np.asarray(connected_components(
+        g2, backend=backend, mirror=plan))[pm])
+    assert cc == want["cc"], f"CC partition diverged on {backend}"
+    pr = _bymap(oid, np.asarray(pagerank(
+        g2, backend=backend, tol=None, max_steps=PR_STEPS,
+        mirror=plan))[pm])
+    keys = sorted(want["pr"])
+    np.testing.assert_allclose([pr[k] for k in keys],
+                               [want["pr"][k] for k in keys], atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# split == unsplit parity, every backend
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from((8, 12, 16)))
+def test_split_parity_all_backends(seed, threshold):
+    g, _, _ = _skewed_graph(110, seed, threshold=threshold)
+    g2, plan = split_hubs(g, threshold=threshold)
+    assert plan.n_groups >= 1 and g2.Cd < g.Cd
+    mask = np.asarray(g.node_mask)
+    want = _oracles(g, mask, np.asarray(g.orig_id)[mask])
+    for b in BACKENDS:
+        _check_split(g2, plan, want, b)
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(0, 10_000))
+def test_split_parity_fused(seed):
+    """fused_analytics under mirror == the three standalone runs."""
+    g, _, _ = _skewed_graph(100, seed, threshold=10)
+    g2, plan = split_hubs(g, threshold=10)
+    pm = np.asarray(plan.primary_mask)
+    oid = np.asarray(g2.orig_id)[pm]
+    for b in ("jnp", "ell_spmd"):
+        core, labels, rank = fused_analytics(
+            g2, steps=PR_STEPS, backend=b, mirror=plan)
+        mask = np.asarray(g.node_mask)
+        want = _oracles(g, mask, np.asarray(g.orig_id)[mask])
+        assert _bymap(oid, np.asarray(core)[pm]) == want["core"]
+        assert _parts(oid, np.asarray(labels)[pm]) == want["cc"]
+        pr = _bymap(oid, np.asarray(rank)[pm])
+        keys = sorted(want["pr"])
+        np.testing.assert_allclose([pr[k] for k in keys],
+                                   [want["pr"][k] for k in keys],
+                                   atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# online split / mirrored delete
+# ---------------------------------------------------------------------------
+
+
+def _fresh_oracle(edges_set, n, assign, P=8):
+    gr = build_blocks(np.array(sorted(edges_set)), n, assign, P=P)
+    mask = np.asarray(gr.node_mask)
+    return _oracles(gr, mask, np.asarray(gr.orig_id)[mask])
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(0, 10_000))
+def test_online_split_and_mirrored_delete(seed):
+    threshold = 8
+    n = 100
+    g, edges, assign = _skewed_graph(n, seed, threshold=threshold, extra=32)
+    g2, plan = split_hubs(g, threshold=threshold)
+    pm = np.asarray(plan.primary_mask)
+    row_of = {int(o): i for i, o in enumerate(np.asarray(g2.orig_id))
+              if pm[i]}
+    cur = set(map(tuple, edges.tolist()))
+    deg = np.zeros(n, np.int64)
+    for u, v in cur:
+        deg[u] += 1
+        deg[v] += 1
+    # push a sub-threshold vertex across the threshold -> online split
+    tgt = int(np.argmax(np.where(deg < threshold, deg, -1)))
+    edits = []
+    for v in np.argsort(deg)[::-1]:
+        v = int(v)
+        e = (min(tgt, v), max(tgt, v))
+        if v != tgt and e not in cur:
+            edits.append((tgt, v, +1))
+            cur.add(e)
+        if len(edits) == threshold + 4:
+            break
+    # ... and a MIRRORED delete: drop one of hub 0's sliced edges
+    hub_e = next(e for e in sorted(cur) if e[0] == 0)
+    edits.append((hub_e[0], hub_e[1], -1))
+    cur.discard(hub_e)
+
+    g3, plan3 = apply_mirrored_edits(
+        g2, plan, [(row_of[u], row_of[v], op) for u, v, op in edits])
+    assert plan3.n_groups > plan.n_groups, "insert burst must split tgt"
+    assert len(groups_of(plan3).get(row_of[tgt], [])) >= 2
+    assert plan3.uid != plan.uid  # fresh plan -> fresh SPMD cache entry
+
+    want = _fresh_oracle(cur, n, assign)
+    for b in ("jnp", "ell_spmd"):
+        _check_split(g3, plan3, want, b)
+
+
+@settings(max_examples=2, deadline=None)
+@given(st.integers(0, 10_000))
+def test_mirror_stream_windows(seed):
+    """MirrorStream ingestion: maintained core/labels stay exact."""
+    threshold = 8
+    n = 90
+    g, edges, assign = _skewed_graph(n, seed, threshold=threshold, extra=32)
+    g2, plan = split_hubs(g, threshold=threshold)
+    sess = MirrorStream(g2, plan, backend="jnp", cc_labels=True)
+    pm = np.asarray(plan.primary_mask)
+    row_of = {int(o): i for i, o in enumerate(np.asarray(g2.orig_id))
+              if pm[i]}
+    cur = set(map(tuple, edges.tolist()))
+    rng = np.random.default_rng(seed + 1)
+    for _ in range(2):
+        window, tried = [], set()
+        while len(window) < 6:
+            u, v = (int(x) for x in rng.integers(0, n, 2))
+            e = (min(u, v), max(u, v))
+            if u == v or e in tried:
+                continue
+            tried.add(e)
+            if e in cur:
+                window.append((e[0], e[1], -1))
+                cur.discard(e)
+            else:
+                window.append((e[0], e[1], +1))
+                cur.add(e)
+        sess.apply_window(
+            [(row_of[u], row_of[v], op) for u, v, op in window])
+    assert sess.windows_applied == 2
+    want = _fresh_oracle(cur, n, assign)
+    pm2 = np.asarray(sess.mirror.primary_mask)
+    oid = np.asarray(sess.g.orig_id)[pm2]
+    assert _bymap(oid, np.asarray(sess.core)[pm2]) == want["core"]
+    assert _parts(oid, np.asarray(sess.labels)[pm2]) == want["cc"]
+
+
+# ---------------------------------------------------------------------------
+# the acceptance counters (allocation / halo payload)
+# ---------------------------------------------------------------------------
+
+
+def test_allocation_and_halo_counters():
+    """On a BA graph with max degree >= 8x mean, splitting shrinks the
+    N*Cd allocation >= 4x and the W2W inter-block halo payload."""
+    edges = barabasi_albert(600, 3, seed=7)
+    n = int(edges.max()) + 1
+    deg = np.bincount(edges.ravel(), minlength=n)
+    assert deg.max() >= 8 * deg.mean(), "generator lost its skew"
+    assign = node_random_partition(n, 8, seed=7)
+    g = build_blocks(edges, n, assign, P=8, node_slack=64)
+    g2, plan = split_hubs(g, threshold=16)
+    rep = mirror_report(g, g2, plan)
+    assert rep["alloc_ratio"] >= 4.0, rep
+    assert rep["slots_split"] == g2.N * g2.Cd
+    assert rep["inter_split"] < rep["inter_unsplit"], rep
+    # the merge's per-superstep W2W payload is O(hubs), not O(edges)
+    assert rep["merge_payload"] == mirror_merge_payload(plan)
+    assert rep["merge_payload"] == int(plan.Gmax) + 1
+    assert rep["merge_payload"] < rep["inter_unsplit"] - rep["inter_split"]
+    # and the counters describe a graph whose answers are still exact
+    mask = np.asarray(g.node_mask)
+    want = _bymap(np.asarray(g.orig_id)[mask],
+                  np.asarray(coreness(g, backend="jnp"))[mask])
+    pm = np.asarray(plan.primary_mask)
+    got = _bymap(np.asarray(g2.orig_id)[pm],
+                 np.asarray(coreness(g2, backend="jnp", mirror=plan))[pm])
+    assert got == want
+
+
+# ---------------------------------------------------------------------------
+# service resolution through the primary map
+# ---------------------------------------------------------------------------
+
+
+def test_service_resolves_replica_rows():
+    g, _, _ = _skewed_graph(100, seed=3, threshold=8)
+    g2, plan = split_hubs(g, threshold=8)
+    sess = MirrorStream(g2, plan, backend="jnp", cc_labels=True)
+    state = AnalyticsState(sess, pr_steps=PR_STEPS)
+    snap = state.snapshot
+    assert snap.primary is not None and snap.nbr_max is not None
+
+    groups = groups_of(plan)
+    hub, rows = next((h, r) for h, r in groups.items() if len(r) >= 2)
+    replica = next(r for r in rows if r != hub)
+
+    # primary-row and replica-row ids answer with the hub's values
+    for q, field in ((core_of, sess.core),
+                     (degree_of, jnp.asarray(plan.ldeg))):
+        a_hub = run_batch(snap, q(hub).kind, [q(hub)])
+        a_rep = run_batch(snap, q(replica).kind, [q(replica)])
+        assert a_hub == a_rep == [int(field[hub])]
+
+    # nbr_max_core sees the WHOLE sharded neighborhood of the hub
+    nbr = np.asarray(g2.nbr)
+    nbrs = sorted({int(x) for r in rows for x in nbr[r] if x >= 0})
+    want = max(int(sess.core[np.asarray(plan.primary_row)[x]])
+               for x in nbrs)
+    got = run_batch(snap, "nbr_max_core", [nbr_max_core_of(replica)])
+    assert got == [want]
+
+    # same_component accepts replica ids on either side
+    q = same_component(replica, nbrs[0])
+    assert run_batch(snap, q.kind, [q]) == [True]
+
+    # replica rows never rank in top-k (rank masked to primaries)
+    assert float(snap.rank[replica]) == 0.0

@@ -58,7 +58,7 @@ def _lower(g, program, b):
     """Force a fresh trace of the fused superstep loop (no jit cache)."""
     state0 = program.init(g)
     ops._block_program_fused.lower(
-        g, state0, None, program=program, b=b, interpret=True,
+        g, state0, None, None, program=program, b=b, interpret=True,
         max_steps=5, n_real=int(g.n_real))
 
 
