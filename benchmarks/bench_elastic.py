@@ -1,0 +1,158 @@
+"""Elasticity costs: snapshot save/restore, capacity growth, recovery.
+
+What the elastic machinery costs at each scale, so regressions in the
+host-side relocation/serialization paths show up in the BENCH trajectory:
+
+  * `elastic/save/N<n>` — blocking `save_session` (device->host pull of
+    every array + atomic rename); derived carries the on-disk byte size.
+  * `elastic/restore/N<n>` — `restore_session` from the committed step
+    (manifest-driven, no `like` template).
+  * `elastic/grow_cd/N<n>`, `elastic/grow_cn/N<n>` — one live-session
+    capacity escalation (pad-and-rekey relocation + analytics ride-along
+    + remap compose).  Growth doubles the respective capacity, so this
+    is the worst-case single step of the pow2 escalation ladder.
+  * `elastic/recover/N<n>` — the full worker-loss drill: restore from
+    the snapshot, evacuate the dead block across the survivors
+    (`migrate_vertices` permutation), replay a 2-window log tail.
+
+All rows run on the jnp backend (host relocation dominates; the
+device-side executor re-key is covered by bench_stream's spmd rows) and
+time the SECOND call of everything jitted, so compile time stays out of
+the trajectory.
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import build_blocks, connected_components, coreness
+from repro.core.partition import node_random_partition
+from repro.graphgen import barabasi_albert
+from repro.runtime.recovery import ElasticCoordinator
+from repro.runtime.stream import StreamSession
+from repro.checkpoint import CheckpointManager, restore_session, save_session
+
+from .common import row
+
+
+def _session(n: int, seed: int, P: int = 8) -> StreamSession:
+    edges = barabasi_albert(n, 4, seed=seed)
+    nn = int(edges.max()) + 1
+    assign = node_random_partition(nn, P, seed=seed + 1)
+    g = build_blocks(edges, nn, assign, P=P, deg_slack=8, node_slack=8)
+    return StreamSession(g, coreness(g, backend="jnp"), R=8,
+                         cc_labels=connected_components(g), auto_grow=True)
+
+
+def _windows(sess: StreamSession, k: int, seed: int):
+    g = sess.g
+    rng = np.random.default_rng(seed)
+    real = np.flatnonzero(np.asarray(g.node_mask))
+    nbr = np.asarray(g.nbr)
+    cur = set()
+    for i in real:
+        for j in nbr[i]:
+            if j >= 0:
+                cur.add((min(int(i), int(j)), max(int(i), int(j))))
+    out = []
+    for _ in range(k):
+        w = []
+        while len(w) < 6:
+            u, v = (int(real[rng.integers(0, len(real))]) for _ in range(2))
+            key = (min(u, v), max(u, v))
+            if u != v and key not in cur:
+                cur.add(key)
+                w.append((u, v, +1))
+        out.append(w)
+    return out
+
+
+def _time_ms(fn, repeats: int = 3) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e3
+
+
+def run(seed: int = 0, smoke: bool = False) -> List[Tuple[str, float, str]]:
+    rows = []
+    sizes = (300,) if smoke else (300, 1200, 4800)
+    for n in sizes:
+        tmp = tempfile.mkdtemp()
+        try:
+            mgr = CheckpointManager(tmp, keep_n=2)
+            sess = _session(n, seed)
+            for w in _windows(sess, 2, seed + 2):
+                sess.apply_window(w)  # realistic mid-stream state
+
+            us_save = 1e3 * _time_ms(
+                lambda: save_session(mgr, sess, step=1))
+            step_dir = mgr.dir / "step_00000001"
+            nbytes = sum(p.stat().st_size for p in step_dir.iterdir())
+            rows.append(row(f"elastic/save/N{n}", us_save,
+                            f"bytes={nbytes};P={sess.g.P};Cn={sess.g.Cn};"
+                            f"Cd={sess.g.Cd}"))
+
+            us_restore = 1e3 * _time_ms(
+                lambda: restore_session(mgr, step=1))
+            rows.append(row(f"elastic/restore/N{n}", us_restore,
+                            f"bytes={nbytes}"))
+
+            # growth: each measurement needs a fresh session (grow
+            # mutates); time the pow2 doubling step
+            def grow_cd():
+                s = _session(n, seed)
+                t0 = time.perf_counter()
+                s.grow(Cd=s.g.Cd * 2)
+                return time.perf_counter() - t0
+
+            def grow_cn():
+                s = _session(n, seed)
+                t0 = time.perf_counter()
+                s.grow(Cn=s.g.Cn * 2)
+                return time.perf_counter() - t0
+
+            for name, fn in (("grow_cd", grow_cd), ("grow_cn", grow_cn)):
+                best = min(fn() for _ in range(3))
+                rows.append(row(f"elastic/{name}/N{n}", best * 1e6,
+                                f"N={sess.g.N}"))
+
+            # the worker-loss drill end to end (restore + evacuate +
+            # 2-window replay); coordinator rebuilt per repeat
+            def drill():
+                coord = ElasticCoordinator(_session(n, seed), mgr2)
+                for w in ws_drill:
+                    coord.apply_window(w)
+                coord.checkpoint()
+                tail = _windows(coord.session, 2, seed + 7)
+                for w in tail:
+                    coord.apply_window(w)
+                t0 = time.perf_counter()
+                coord.recover_worker(0)
+                return time.perf_counter() - t0
+
+            tmp2 = tempfile.mkdtemp()
+            try:
+                mgr2 = CheckpointManager(tmp2, keep_n=2)
+                ws_drill = _windows(_session(n, seed), 2, seed + 5)
+                best = min(drill() for _ in range(2))
+                rows.append(row(f"elastic/recover/N{n}", best * 1e6,
+                                "dead_blocks=1;replay_windows=2"))
+            finally:
+                shutil.rmtree(tmp2, ignore_errors=True)
+        finally:
+            shutil.rmtree(tmp, ignore_errors=True)
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import print_rows
+    print_rows(run())

@@ -51,7 +51,8 @@ import sys
 import traceback
 
 #: benches whose rows feed the machine-readable perf trajectory
-JSON_BENCHES = ("kernels", "stream", "workloads", "service", "skew")
+JSON_BENCHES = ("kernels", "stream", "workloads", "service", "skew",
+                "elastic")
 
 
 def write_bench_json(out_dir: str, bench: str, rows) -> pathlib.Path:
@@ -104,8 +105,8 @@ def main() -> None:
                     help="directory for the BENCH_*.json trajectory files")
     args = ap.parse_args()
 
-    from . import (bench_backends, bench_kcore_maintenance, bench_kernels,
-                   bench_vs_naive_kcore, bench_partitioning,
+    from . import (bench_backends, bench_elastic, bench_kcore_maintenance,
+                   bench_kernels, bench_vs_naive_kcore, bench_partitioning,
                    bench_runtime, bench_service, bench_skew,
                    bench_static_kcore, bench_stream, bench_workloads,
                    roofline)
@@ -147,6 +148,8 @@ def main() -> None:
         "service": lambda: bench_service.run(
             seed=args.seed, smoke=args.smoke),
         "skew": lambda: bench_skew.run(
+            seed=args.seed, smoke=args.smoke),
+        "elastic": lambda: bench_elastic.run(
             seed=args.seed, smoke=args.smoke),
         "roofline": lambda: roofline.run(full=args.full, seed=args.seed),
     }

@@ -53,7 +53,9 @@ REACHABILITY_ROOTS: Tuple[str, ...] = (
     "repro.runtime",
     "repro.service",
     "repro.graphgen",
-    "repro.checkpoint",
+    # repro.checkpoint is no longer a root of its own: the recovery
+    # coordinator (repro.runtime.recovery) imports it, so it is regular
+    # product surface reached from repro.runtime
 )
 
 #: the literal token a quarantined package's `__init__` docstring must
@@ -96,6 +98,9 @@ HOST_BOUNDARIES: Dict[str, FrozenSet[str]] = {
         "n_real", "m_real", "halo_slot_counts", "halo_pair_counts",
         "to_networkx_edges", "migrate_vertices", "edge_exists_host",
         "degree_host", "orig_of",
+        # capacity escalation: pad-and-rekey relocation is host numpy on
+        # the concrete adjacency, like build_blocks / migrate_vertices
+        "grow_blocks", "grow", "relocate_rows", "add_vertices_host",
     }),
     # host splice/validation module: the sanctioned numpy twin of the
     # jitted update path
@@ -144,6 +149,9 @@ HOST_BOUNDARIES: Dict[str, FrozenSet[str]] = {
         "__init__", "apply_updates", "rebuild", "run_spmd", "run",
         "_plan_arrays", "_halo_args", "k_reachable_batch",
         "restricted_recompute", "step_build_count",
+        # capacity escalation: full plan rebuild at the new (Cn, Cd),
+        # same boundary as rebuild
+        "grow", "refresh_fields",
     }),
     # stream host driver: window padding (np), the ONE bundled verdict
     # pull per window, and host routing arithmetic; _route_window and
@@ -151,7 +159,16 @@ HOST_BOUNDARIES: Dict[str, FrozenSet[str]] = {
     "repro/runtime/stream.py": frozenset({
         "apply_window", "stats", "_owner_blocks", "owner_block",
         "route_updates", "__init__",
+        # elasticity + snapshots: grow/add_vertices/migrate mutate the
+        # concrete host graph (like migrate_vertices); state_dict /
+        # from_state are the checkpoint boundary (one bundled transfer
+        # per snapshot); _cur/_compose_perm are host id arithmetic
+        "grow", "add_vertices", "migrate", "state_dict", "from_state",
+        "_cur", "_compose_perm",
     }),
+    # crash-recovery coordinator: evacuation planning, window-log replay
+    # and the kill/restore drill are host protocol work by construction
+    "repro/runtime/recovery.py": frozenset({"*"}),
     # the ONE device_get per answered batch + host padding
     "repro/service/queries.py": frozenset({"run_batch", "_pad_ids"}),
     # snapshot cut/publish: host boundary between stream and serving
@@ -204,6 +221,14 @@ SORTED_ELL_WRITERS: FrozenSet[str] = SORTED_ELL_HELPERS | frozenset({
     "split_hubs",
     "apply_mirrored_edits",
     "run_common_mirror",
+    # grow_blocks value-remaps nbr through a MONOTONE rekey (row slots
+    # keep their relative order, pads stay right-justified), so the
+    # sorted-ELL invariant survives without a re-sort — the property
+    # tests/test_growth.py checks against a from-scratch rebuild
+    "grow_blocks",
+    # snapshot restore re-adopts arrays saved from an invariant-holding
+    # graph verbatim (checkpoints are bit-exact copies)
+    "from_state",
 })
 
 

@@ -1,5 +1,9 @@
-"""Fault-tolerant checkpointing (atomic, keep-N, async, elastic remesh)."""
+"""Fault-tolerant checkpointing for the graph runtime: atomic keep-N
+snapshots of `GraphBlocks` + analytics + stream-session state, restorable
+onto a different mesh shape (elastic remesh after worker loss)."""
 from .manager import CheckpointManager
-from .elastic import remesh_restore, save_train_state
+from .elastic import (remesh_restore, restore_session, save_session,
+                      save_train_state)
 
-__all__ = ["CheckpointManager", "remesh_restore", "save_train_state"]
+__all__ = ["CheckpointManager", "remesh_restore", "restore_session",
+           "save_session", "save_train_state"]

@@ -1,63 +1,127 @@
-"""Elastic restart: resume the same checkpoint on a different mesh.
+"""Elastic restart: resume a graph stream on a different mesh shape.
 
-Node-failure runbook (documented here, simulated on CPU in tests):
+Worker-loss runbook (simulated on CPU in tests/test_faults.py):
 
-  1. A collective times out / heartbeat misses -> the run controller marks
-     the slice degraded and tears the job down (distributed/fault.py).
-  2. The launcher restarts on the surviving topology (e.g. 15x16 instead of
-     16x16, or single-pod instead of 2 pods), passing --resume auto.
-  3. `remesh_restore` rebuilds the sharding rules against the NEW mesh and
-     restores the latest committed checkpoint onto it.  Because checkpoints
-     are topology-independent (full logical arrays, see manager.py), no
-     reshard preprocessing job is needed.
-  4. The data pipeline cursor (saved with the train state) makes batch
-     delivery exactly-once across the restart.
+  1. A worker drops out mid-stream (preemption, hardware loss) — its
+     shards are gone.  The coordinator (`runtime.recovery`) stops
+     feeding windows.
+  2. The surviving topology restarts: `restore_session` rebuilds the
+     stream session from the last COMMITTED snapshot.  Checkpoints are
+     topology-independent (full logical arrays, see manager.py), so the
+     restore may target ANY worker count with W | P — pass `W` to remesh
+     onto the survivors; node arrays are placed with the new mesh's
+     leading-axis sharding.
+  3. The coordinator re-assigns the dead worker's blocks across the
+     survivors (`StreamSession.migrate` — the §4.2 permutation
+     machinery) and replays the window-log tail recorded since the
+     snapshot.  Replay is deterministic and the snapshot carries the
+     composed id remap, so the recovered state is bit-identical to a
+     run that never crashed (see `runtime.recovery.recover_worker`).
 
-The same path implements scale-UP (new nodes join): restore onto the larger
-mesh and continue.
+The same path implements scale-UP (new devices join): restore with a
+larger `W`.  Snapshots carry everything `StreamSession.state_dict` /
+`MirrorStream.state_dict` emit — graph blocks, maintained analytics
+(coreness / CC labels), the open-time id remap, and every counter — plus
+the capacities (P, Cn, Cd) in the manifest meta, so a restore works even
+after capacity escalations the restoring process never saw.
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Optional, Tuple
 
-import jax
-from jax.sharding import Mesh
-
-from repro.distributed import sharding as SH
 from .manager import CheckpointManager
 
 
-def remesh_restore(
-    mgr: CheckpointManager,
-    step: Optional[int],
-    params_like: Any,
-    opt_like: Any,
-    new_mesh: Mesh,
-):
-    """Restore (params, opt_state) onto `new_mesh` with recomputed shardings.
+def save_session(mgr: CheckpointManager, session, step: Optional[int] = None,
+                 blocking: bool = True, extra_meta: Optional[dict] = None
+                 ) -> int:
+    """Snapshot a `StreamSession` / `MirrorStream` at `step` (default:
+    its `windows_applied` clock).  `extra_meta` (JSON-able) rides along
+    under meta["extra"] — the recovery coordinator stores its window-log
+    cursor there.  Returns the step saved."""
+    arrays, meta = session.state_dict()
+    if extra_meta is not None:
+        meta = {**meta, "extra": extra_meta}
+    if step is None:
+        step = int(session.windows_applied)
+    mgr.save(step, arrays, blocking=blocking, meta=meta)
+    return step
 
-    `*_like` are pytrees of ShapeDtypeStruct or arrays describing the target
-    structure (e.g. from jax.eval_shape of init on the new mesh).
+
+def restore_session(mgr: CheckpointManager, step: Optional[int] = None,
+                    W=None, backend: Optional[str] = None,
+                    executor=None) -> Tuple[int, object, dict]:
+    """Rebuild a stream session from the latest (or given) committed
+    snapshot — onto a possibly DIFFERENT mesh shape.
+
+    `W`/`backend`/`executor` override the snapshot's topology (the
+    remesh path; W must divide the snapshot's P).  Under the SPMD
+    backend the graph's node arrays are device_put with the new worker
+    mesh's leading-axis sharding before the session adopts them.
+    Returns ``(step, session, meta)``; meta is the manifest meta (the
+    coordinator reads its log cursor out of meta.get("extra")).
     """
     if step is None:
         step = mgr.latest_step()
-    if step is None:
-        raise FileNotFoundError(f"no checkpoint to restore in {mgr.dir}")
-    pshard = SH.param_shardings(params_like, new_mesh)
-    params = mgr_restore_tree(mgr, step, "params", params_like, pshard)
-    oshard = SH.opt_shardings(opt_like, params_like, new_mesh)
-    opt = mgr_restore_tree(mgr, step, "opt", opt_like, oshard)
-    return step, params, opt
+        if step is None:
+            raise FileNotFoundError(
+                f"no committed checkpoint to restore in {mgr.dir}")
+    meta = mgr.load_meta(step)
+    if not meta or "kind" not in meta:
+        raise ValueError(
+            f"step {step} carries no session meta; was it saved with "
+            "save_session?")
+    shardings = None
+    if meta["kind"] == "stream_session":
+        from ..core.kcore_dynamic import SPMD_BACKEND
+        be = meta["backend"] if backend is None else backend
+        if be == SPMD_BACKEND:
+            shardings = _node_shardings(meta, W)
+    arrays = mgr.restore_dict(step, shardings=shardings)
+    if meta["kind"] == "mirror_stream":
+        from ..runtime.stream import MirrorStream
+        session = MirrorStream.from_state(arrays, meta, backend=backend)
+    elif meta["kind"] == "stream_session":
+        from ..runtime.stream import StreamSession
+        session = StreamSession.from_state(
+            arrays, meta, W=W, backend=backend, executor=executor)
+    else:
+        raise ValueError(f"unknown snapshot kind {meta['kind']!r}")
+    return step, session, meta
 
 
-def mgr_restore_tree(mgr: CheckpointManager, step: int, name: str, like, shardings):
-    sub = CheckpointManager(str(mgr.dir / name), keep_n=mgr.keep_n)
-    return sub.restore(step, like, shardings)
+#: restore_session IS the remesh path — the alias documents intent at
+#: call sites that restore onto a different worker count after a loss
+remesh_restore = restore_session
+
+
+def _node_shardings(meta: dict, W) -> Optional[dict]:
+    """Leading-axis shardings for the graph's node arrays on the restore
+    mesh (None when the mesh would be trivial)."""
+    import jax
+
+    from ..runtime.mesh import best_worker_count, make_worker_mesh
+
+    P, Cn = int(meta["P"]), int(meta["Cn"])
+    if W is None:
+        W = best_worker_count(P, len(jax.devices()))
+    if W <= 1:
+        return None
+
+    class _Geom:  # duck-typed GraphBlocks for make_worker_mesh
+        pass
+
+    g = _Geom()
+    g.P, g.Cn = P, Cn
+    sh = make_worker_mesh(g, W=W).node_sharding()
+    keys = ("core", "labels", "g.deg", "g.nbr", "g.node_mask", "g.orig_id")
+    return {k: sh for k in keys}
 
 
 def save_train_state(mgr: CheckpointManager, step: int, params, opt_state,
                      blocking: bool = True):
-    """Save params and optimizer state as sibling sub-checkpoints."""
+    """Save params and optimizer state as sibling sub-checkpoints (the
+    seed-era LLM launch path, kept for `repro.launch.train`)."""
     CheckpointManager(str(mgr.dir / "params"), mgr.keep_n).save(
         step, params, blocking=blocking)
     CheckpointManager(str(mgr.dir / "opt"), mgr.keep_n).save(

@@ -61,11 +61,23 @@ class CheckpointManager:
             CheckpointManager._threads[str(self.dir.resolve())] = t
 
     # ------------------------------------------------------------------ save
-    def save(self, step: int, tree: Params, blocking: bool = True):
-        """Snapshot `tree` at `step`.  Non-blocking saves copy to host first."""
+    def save(self, step: int, tree: Params, blocking: bool = True,
+             meta: Optional[dict] = None):
+        """Snapshot `tree` at `step`.  Non-blocking saves copy to host first.
+
+        `meta` (JSON-able dict) rides in the manifest — the graph path
+        stores session statics/counters there so a restore needs NO
+        pre-built `like` template (`restore_dict` + `load_meta`): crash
+        recovery cannot know the capacities the stream had grown to.
+        When `tree` is a flat dict of arrays, the manifest also records
+        the key order, making the checkpoint fully self-describing.
+        """
         flat, treedef = _flatten_with_paths(tree)
         host_leaves = [np.asarray(jax.device_get(x)) for x in flat]
         treedef_str = str(treedef)
+        keys = (sorted(str(k) for k in tree)
+                if isinstance(tree, dict) and len(tree) == len(flat)
+                else None)
 
         if self._thread is not None:
             self._thread.join()  # one in-flight async save at a time
@@ -78,6 +90,10 @@ class CheckpointManager:
             tmp.mkdir(parents=True)
             manifest = {"step": step, "treedef": treedef_str,
                         "leaves": []}
+            if keys is not None:
+                manifest["keys"] = keys
+            if meta is not None:
+                manifest["meta"] = meta
             for i, leaf in enumerate(host_leaves):
                 np.save(tmp / f"leaf_{i:05d}.npy", leaf)
                 manifest["leaves"].append(
@@ -117,6 +133,42 @@ class CheckpointManager:
     def latest_step(self) -> Optional[int]:
         steps = self.all_steps()
         return steps[-1] if steps else None
+
+    def _manifest(self, step: int) -> dict:
+        d = self.dir / f"step_{step:08d}"
+        if not (d / "COMMIT").exists():
+            raise FileNotFoundError(f"no committed checkpoint at {d}")
+        return json.loads((d / "manifest.json").read_text())
+
+    def load_meta(self, step: int) -> Optional[dict]:
+        """The `meta` dict saved with `step` (None if none was)."""
+        return self._manifest(step).get("meta")
+
+    def restore_dict(self, step: int, shardings: Optional[dict] = None
+                     ) -> dict:
+        """Restore a flat-dict checkpoint WITHOUT a `like` template.
+
+        Only valid for checkpoints saved from a flat dict of arrays (the
+        manifest then carries the key order) — the elastic graph path:
+        shapes/dtypes come from the files themselves, so the caller need
+        not know what capacities the graph had grown to.  `shardings`
+        optionally maps keys to NamedShardings for placement on a new
+        mesh; unlisted keys get default placement.
+        """
+        manifest = self._manifest(step)
+        keys = manifest.get("keys")
+        if keys is None:
+            raise ValueError(
+                f"step {step} was not saved from a flat dict; use "
+                "restore(step, like) with a structure template")
+        d = self.dir / f"step_{step:08d}"
+        out = {}
+        for i, k in enumerate(keys):
+            arr = np.load(d / f"leaf_{i:05d}.npy")
+            sh = (shardings or {}).get(k)
+            out[k] = (jax.device_put(arr, sh) if sh is not None
+                      else jax.device_put(arr))
+        return out
 
     def restore(self, step: int, like: Params, shardings: Params = None) -> Params:
         """Restore into the structure of `like` (shapes validated).

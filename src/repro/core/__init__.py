@@ -1,7 +1,9 @@
 """BLADYG core: block-centric processing of large dynamic graphs in JAX."""
 from .graph import (
-    GraphBlocks, build_blocks, build_ell_random, insert_edge, delete_edge,
-    migrate_vertices, to_networkx_edges, halo_slot_counts, halo_pair_counts,
+    CapacityError, GraphBlocks, add_vertices_host, build_blocks,
+    build_ell_random, grow_blocks, insert_edge, delete_edge,
+    migrate_vertices, relocate_rows, to_networkx_edges, halo_slot_counts,
+    halo_pair_counts,
 )
 from .engine import (
     BladygEngine, BladygProgram, BlockCtx, BlockProgram, Mode, MessageStats,
@@ -31,9 +33,10 @@ from .cliques import MaximalCliques, bron_kerbosch
 from . import partition, partition_dynamic, updates
 
 __all__ = [
-    "GraphBlocks", "build_blocks", "build_ell_random", "insert_edge", "delete_edge",
-    "migrate_vertices", "to_networkx_edges", "halo_slot_counts",
-    "halo_pair_counts",
+    "CapacityError", "GraphBlocks", "add_vertices_host", "build_blocks",
+    "build_ell_random", "grow_blocks", "insert_edge", "delete_edge",
+    "migrate_vertices", "relocate_rows", "to_networkx_edges",
+    "halo_slot_counts", "halo_pair_counts",
     "BladygEngine", "BladygProgram", "BlockCtx", "BlockProgram",
     "MultiProgram",
     "ConnectedComponentsProgram", "CorenessBlockProgram", "PageRankProgram",

@@ -43,6 +43,12 @@ PAD = -1  # padding sentinel for neighbor slots / node ids
 _PAD_KEY = np.iinfo(np.int32).max
 
 
+class CapacityError(ValueError):
+    """An operation needs more node (Cn) or degree (Cd) capacity than the
+    blocks hold.  Subclasses ValueError so existing overflow handling keeps
+    working; the elastic stream path catches this specifically to grow."""
+
+
 def sort_nbr_rows(nbr: np.ndarray) -> np.ndarray:
     """Canonicalize ELL rows to the sorted-ELL invariant (host-side).
 
@@ -109,6 +115,10 @@ class GraphBlocks:
         own = (jnp.arange(self.N) // self.Cn)[:, None]
         cross = (nb_block != own) & (self.nbr >= 0)
         return jnp.sum(cross) // 2
+
+    def grow(self, Cn: Optional[int] = None, Cd: Optional[int] = None):
+        """Capacity escalation — see `grow_blocks`.  Returns (g2, rekey)."""
+        return grow_blocks(self, Cn, Cd)
 
 
 def _relabel(
@@ -362,7 +372,7 @@ def migrate_vertices(g: GraphBlocks, moves, *arrays):
         if u in seen:
             raise ValueError(f"duplicate move for node {u}")
         if not free[b2]:
-            raise ValueError(
+            raise CapacityError(
                 f"block {b2} has no free node capacity (Cn={Cn})")
         seen.add(u)
         t = free[b2].pop(0)
@@ -381,6 +391,133 @@ def migrate_vertices(g: GraphBlocks, moves, *arrays):
     )
     out = tuple(jnp.asarray(np.asarray(a)[inv]) for a in arrays)
     return (g2, perm) + out
+
+
+def grow_blocks(g: GraphBlocks, Cn: Optional[int] = None,
+                Cd: Optional[int] = None):
+    """Capacity escalation: pure pad-and-rekey to new (Cn, Cd).
+
+    Block ``b``'s rows move from ``[b*Cn, b*Cn+Cn)`` to ``[b*Cn2,
+    b*Cn2+Cn2)`` keeping their in-block slot ``r``, so the id map is
+
+        ``rekey[b*Cn + r] = b*Cn2 + r``
+
+    which is *globally monotone* whenever ``Cn2 >= Cn`` — remapped
+    neighbor rows therefore stay ascending and the sorted-ELL invariant
+    survives the rekey without a re-sort.  ``orig_id`` rides the
+    relocation, so original-id semantics are untouched.  Growing is
+    always legal; *shrinking* is legal exactly when the contents fit
+    (every real node sits at ``r < Cn2`` and every degree is ``<= Cd2``)
+    — the inverse of a grow that saw no migrations qualifies, which is
+    what makes grow-then-shrink an id-stable round trip.
+
+    Host-side preprocessing (raises under a trace), like
+    `migrate_vertices`.  Returns ``(g2, rekey)`` with ``rekey`` the
+    (N_old,) old-id -> new-id map (-1 for rows dropped by a shrink —
+    necessarily padding).  Relocate any per-node arrays you hold with
+    `relocate_rows`; note CC labels also need their *values* rekeyed
+    (they hold padded ids): relocation first, then ``rekey[label]``.
+    Min-member label canonicality commutes with the monotone rekey, so
+    relabeled labels stay canonical bit-for-bit.
+    """
+    if isinstance(g.nbr, jax.core.Tracer):
+        raise TypeError(
+            "grow_blocks is host-side preprocessing; it cannot run "
+            "under jit/vmap tracing."
+        )
+    Cn2 = g.Cn if Cn is None else int(Cn)
+    Cd2 = g.Cd if Cd is None else int(Cd)
+    if Cn2 < 1 or Cd2 < 1:
+        raise ValueError(f"capacities must be >= 1, got Cn={Cn2} Cd={Cd2}")
+    mask = np.asarray(g.node_mask)
+    deg = np.asarray(g.deg)
+    if Cn2 < g.Cn:
+        slots = np.flatnonzero(mask) % g.Cn
+        if slots.size and slots.max() >= Cn2:
+            raise CapacityError(
+                f"cannot shrink Cn {g.Cn} -> {Cn2}: a real node occupies "
+                f"slot {int(slots.max())}")
+    if Cd2 < g.Cd and deg.size and deg.max() > Cd2:
+        raise CapacityError(
+            f"cannot shrink Cd {g.Cd} -> {Cd2}: max degree is "
+            f"{int(deg.max())}")
+    N2 = g.P * Cn2
+    old_r = np.arange(g.N) % g.Cn
+    rekey = np.where(old_r < Cn2,
+                     (np.arange(g.N) // g.Cn) * Cn2 + old_r, -1)
+    r2 = np.arange(N2) % Cn2
+    src = np.where(r2 < g.Cn, (np.arange(N2) // Cn2) * g.Cn + r2, -1)
+    have = src >= 0
+    srcc = np.maximum(src, 0)
+    Cmin = min(g.Cd, Cd2)
+    nbr = np.asarray(g.nbr)
+    vals = nbr[srcc, :Cmin]
+    vals = np.where(vals >= 0, rekey[np.maximum(vals, 0)], PAD)
+    nbr2 = np.full((N2, Cd2), PAD, nbr.dtype)
+    nbr2[:, :Cmin] = np.where(have[:, None], vals, PAD)
+    g2 = GraphBlocks(
+        nbr=jnp.asarray(nbr2, jnp.int32),
+        deg=jnp.asarray(np.where(have, deg[srcc], 0), jnp.int32),
+        node_mask=jnp.asarray(np.where(have, mask[srcc], False)),
+        orig_id=jnp.asarray(
+            np.where(have, np.asarray(g.orig_id)[srcc], PAD), jnp.int32),
+        P=g.P, Cn=Cn2, Cd=Cd2,
+    )
+    return g2, rekey
+
+
+def relocate_rows(arr, rekey: np.ndarray, N2: int, fill=0) -> np.ndarray:
+    """Scatter an (N_old, ...) per-node array onto the post-`grow_blocks`
+    node axis: row ``u`` lands at ``rekey[u]``; unsourced rows get `fill`.
+    Host-side (numpy in, numpy out)."""
+    arr = np.asarray(arr)
+    out = np.full((N2,) + arr.shape[1:], fill, arr.dtype)
+    ok = rekey >= 0
+    out[rekey[ok]] = arr[ok]
+    return out
+
+
+def add_vertices_host(g: GraphBlocks, block: int, count: int = 1,
+                      orig_ids=None):
+    """Vertex arrival: activate `count` padding rows of `block` as fresh
+    real (degree-0) nodes.
+
+    Rows are taken lowest-index-first (deterministic, so a replayed log
+    reproduces the same ids).  New nodes get original ids `orig_ids`, or
+    consecutive ids after the current max when omitted.  Raises
+    `CapacityError` when the block lacks free rows — the caller's cue to
+    `grow_blocks` and retry.  Returns ``(g2, new_ids)`` with `new_ids`
+    the (count,) padded ids of the new vertices.  Host-side.
+    """
+    if isinstance(g.nbr, jax.core.Tracer):
+        raise TypeError(
+            "add_vertices_host is host-side preprocessing; it cannot "
+            "run under jit/vmap tracing."
+        )
+    b, count = int(block), int(count)
+    if not 0 <= b < g.P:
+        raise ValueError(f"block {b} outside [0, {g.P})")
+    if count < 1:
+        raise ValueError(f"count must be >= 1, got {count}")
+    mask = np.asarray(g.node_mask).copy()
+    free = np.flatnonzero(~mask[b * g.Cn:(b + 1) * g.Cn]) + b * g.Cn
+    if len(free) < count:
+        raise CapacityError(
+            f"block {b} has {len(free)} free node rows, needs {count} "
+            f"(Cn={g.Cn})")
+    rows = free[:count]
+    orig = np.asarray(g.orig_id).copy()
+    if orig_ids is None:
+        base = int(orig.max(initial=-1)) + 1
+        orig_ids = np.arange(base, base + count)
+    orig_ids = np.asarray(orig_ids, np.int64)
+    if orig_ids.shape != (count,):
+        raise ValueError(f"need {count} orig_ids, got {orig_ids.shape}")
+    mask[rows] = True
+    orig[rows] = orig_ids
+    g2 = dataclasses.replace(
+        g, node_mask=jnp.asarray(mask), orig_id=jnp.asarray(orig, jnp.int32))
+    return g2, rows
 
 
 def to_networkx_edges(g: GraphBlocks) -> np.ndarray:

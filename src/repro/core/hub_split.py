@@ -55,8 +55,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .graph import (PAD, GraphBlocks, _occurrence_ranks, halo_slot_counts,
-                    sort_nbr_rows)
+from .graph import (PAD, CapacityError, GraphBlocks, _occurrence_ranks,
+                    halo_slot_counts, relocate_rows, sort_nbr_rows)
 
 #: monotonic MirrorPlan identity counter — the SPMD fused loop closes over
 #: the plan arrays (they are compile-time constants of the shard_map'd
@@ -153,9 +153,10 @@ def _alloc_replica(free: Dict[int, List[int]], pref: int, own: int) -> int:
     for b in sorted(free):
         if free[b]:
             return free[b].pop(0)
-    raise ValueError(
+    raise CapacityError(
         "no free padding rows left for hub mirror replicas; rebuild the "
-        "graph with node capacity headroom (build_blocks(node_slack=...))")
+        "graph with node capacity headroom (build_blocks(node_slack=...)) "
+        "or grow Cn (graph.grow_blocks / MirrorStream auto_grow)")
 
 
 # ---------------------------------------------------------------------------
@@ -318,6 +319,25 @@ def _plan_from_groups(N: int, deg_logical_of_row: np.ndarray,
         Gmax=Gmax, Km=Km, threshold=int(threshold),
         n_logical=int(n_logical), uid=_next_uid(),
     )
+
+
+def grow_plan(plan: MirrorPlan, rekey: np.ndarray, g2: GraphBlocks
+              ) -> MirrorPlan:
+    """Relocate a MirrorPlan onto the post-`graph.grow_blocks` node axis.
+
+    `rekey` is the (N_old,) old-id -> new-id map grow_blocks returned and
+    `g2` the grown graph.  The rekey is monotone, so group ordering and
+    the canonical within-group row order survive; the rebuilt plan is the
+    relocated original with a fresh `uid` (the mirrored compiled step
+    re-keys exactly once per grow).  Host-side.
+    """
+    groups = {int(rekey[h]): [int(rekey[r]) for r in rs]
+              for h, rs in groups_of(plan).items()}
+    ldeg = relocate_rows(np.asarray(plan.ldeg), rekey, g2.N, 0)
+    return _plan_from_groups(
+        N=g2.N, deg_logical_of_row=ldeg, mask=np.asarray(g2.node_mask),
+        groups=groups, threshold=plan.threshold,
+        n_logical=plan.n_logical)
 
 
 # ---------------------------------------------------------------------------

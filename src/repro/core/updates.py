@@ -19,7 +19,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .graph import GraphBlocks, insert_edge, delete_edge, PAD
+from .graph import CapacityError, GraphBlocks, insert_edge, delete_edge, PAD
 
 Update = Tuple[int, int, int]  # (u, v, op)  op=+1 insert, -1 delete
 
@@ -132,7 +132,8 @@ def apply_updates_host(g: GraphBlocks, updates: List[Update]) -> GraphBlocks:
             if (nbr[u] == v).any():
                 raise ValueError(f"edge ({u},{v}) already present")
             if deg[u] >= g.Cd or deg[v] >= g.Cd:
-                raise ValueError(f"degree capacity Cd={g.Cd} exceeded at ({u},{v})")
+                raise CapacityError(
+                    f"degree capacity Cd={g.Cd} exceeded at ({u},{v})")
             _insert_sorted(nbr, deg, u, v)
             _insert_sorted(nbr, deg, v, u)
         else:

@@ -38,7 +38,11 @@ from .spmd import (
     hindex_spmd,
 )
 from .stream import (
-    StreamResult, StreamSession, StreamStats, route_updates, run_stream)
+    MirrorStream, StreamResult, StreamSession, StreamStats, route_updates,
+    run_stream)
+from .recovery import (
+    ElasticCoordinator, WindowLog, blocks_of_worker, evacuate_blocks,
+    kill_session, plan_evacuation, recover_worker)
 
 __all__ = [
     "AXIS", "WorkerMesh", "best_worker_count", "make_worker_mesh",
@@ -46,6 +50,8 @@ __all__ = [
     "SpmdExecutor", "SpmdEngine", "SpmdProgram", "SpmdCorenessProgram",
     "SpmdBlockProgram",
     "coreness_spmd", "hindex_spmd", "frontier_spmd",
-    "StreamResult", "StreamSession", "StreamStats", "route_updates",
-    "run_stream",
+    "MirrorStream", "StreamResult", "StreamSession", "StreamStats",
+    "route_updates", "run_stream",
+    "ElasticCoordinator", "WindowLog", "blocks_of_worker",
+    "evacuate_blocks", "kill_session", "plan_evacuation", "recover_worker",
 ]

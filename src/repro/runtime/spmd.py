@@ -306,6 +306,9 @@ class SpmdExecutor:
         self.full_rebuilds = 0
         #: incremental plan maintenance calls (`apply_updates`)
         self.plan_updates = 0
+        #: capacity escalations followed (`grow`) — each re-keys the
+        #: compiled caches exactly once
+        self.grows = 0
         self._refresh(g)
 
     def _refresh(self, g) -> None:
@@ -336,6 +339,28 @@ class SpmdExecutor:
             g, self.wm, H_min=self.plan.H, K_min=self.plan.K)
         self._refresh(g)
         self.full_rebuilds += 1
+
+    def grow(self, g) -> None:
+        """Follow a capacity escalation (`core.graph.grow_blocks`): refit
+        the worker mesh to the new Cn — same W, same devices, only the
+        block-fold geometry changes — and build a fresh halo plan at the
+        new capacities (the old H/K floors describe the old id space, so
+        they do not carry over).  Downstream, the per-(mesh, H) compiled
+        steps re-specialize on the new shard shapes exactly once per
+        grow and then keep hitting — the same pow2-bucket policy that
+        keeps the steady-state stream at zero recompiles.
+        """
+        self.wm = make_worker_mesh(
+            g, W=self.wm.W, devices=list(self.wm.mesh.devices.flat))
+        self.plan = build_halo_plan(g, self.wm)
+        self._refresh(g)
+        self.grows += 1
+
+    def refresh_fields(self, g) -> None:
+        """Re-stage per-node fields (node_mask/deg) after a change that
+        leaves the adjacency — and hence the halo plan — untouched
+        (e.g. vertex arrival on padding rows)."""
+        self._refresh(g)
 
     @property
     def _tables(self):

@@ -75,8 +75,10 @@ import numpy as np
 from ..core import kcore_dynamic as kd
 from ..core import partition_dynamic as pd
 from ..core.algorithms import connected_components, merge_labels
-from ..core.graph import halo_pair_counts, migrate_vertices
+from ..core.graph import (CapacityError, add_vertices_host, grow_blocks,
+                          halo_pair_counts, migrate_vertices, relocate_rows)
 from ..core.kcore_dynamic import SPMD_BACKEND
+from .halo import _pow2_ceil
 
 
 class StreamStats(NamedTuple):
@@ -97,6 +99,7 @@ class StreamStats(NamedTuple):
     migrated_vertices: int = 0   # vertices moved across blocks in total
     cc_merges: int = 0           # CC labels maintained by O(1) label merges
     cc_recomputes: int = 0       # CC label recomputations (delete/migration)
+    grows: int = 0               # capacity escalations (Cn/Cd pad-and-rekey)
 
     @property
     def escalated(self) -> int:
@@ -263,6 +266,7 @@ class StreamSession:
         rebalance_threshold: Optional[float] = None,
         rebalance_max_moves: int = 8,
         cc_labels: Optional[jax.Array] = None,
+        auto_grow: bool = False,
     ):
         if R < 1:
             raise ValueError(f"R must be >= 1, got {R}")
@@ -302,6 +306,16 @@ class StreamSession:
         self._migrations = self._migrated = 0
         self._remap: Optional[np.ndarray] = None  # open-time -> current ids
         self._cc_merges = self._cc_recomputes = 0
+        #: capacity escalation — `apply_window`/`add_vertices` grow the
+        #: blocks (pad-and-rekey) instead of raising CapacityError
+        self._auto_grow = bool(auto_grow)
+        self._grows = 0
+        #: id space size at open: window ids below this are open-time
+        #: padded ids; ids at/above are `add_vertices` handles resolved
+        #: through `_virtual` (their CURRENT padded ids, kept composed
+        #: across migrations and grows just like `_remap`)
+        self._n_open = g.N
+        self._virtual: List[int] = []
         # hub-split plan slot: always None on the plain session; the
         # serving layer reads getattr(session, "mirror") uniformly across
         # StreamSession and MirrorStream
@@ -319,12 +333,23 @@ class StreamSession:
                 f"window of {len(window)} updates exceeds R={self.R}")
         if not window:
             return
-        g, core, ex, spmd = self.g, self.core, self.executor, self._spmd
         backend, W, tot = self.backend, self._W, self._tot
-        if self._remap is not None:
-            window = [(int(self._remap[u]), int(self._remap[v]), op)
-                      for u, v, op in window]
-        kd._validate_updates_host(g, window)
+        window = [(self._cur(u), self._cur(v), op) for u, v, op in window]
+        while True:
+            try:
+                kd._validate_updates_host(self.g, window)
+                break
+            except CapacityError:
+                if not self._auto_grow:
+                    raise
+                # a row in this window is out of degree capacity: escalate
+                # Cd to the next pow2 and re-key the window ids (the grow
+                # relocates every row), then re-validate — one doubling
+                # almost always suffices (a window adds at most R edges).
+                rekey = self.grow(Cd=_pow2_ceil(self.g.Cd + 1))
+                window = [(int(rekey[u]), int(rekey[v]), op)
+                          for u, v, op in window]
+        g, core, ex, spmd = self.g, self.core, self.executor, self._spmd
         tot["batches"] += 1
         R = self.R
         n = len(window)
@@ -395,8 +420,7 @@ class StreamSession:
                     pair_counts=halo_pair_counts(g))
                 if moves:
                     g, perm, core = migrate_vertices(g, moves, core)
-                    self._remap = (perm if self._remap is None
-                                   else perm[self._remap])
+                    self._compose_perm(perm)
                     self._migrations += 1
                     self._migrated += len(moves)
                     migrated_now = True
@@ -421,6 +445,213 @@ class StreamSession:
                 self._cc_merges += int(ins_mask.sum())
         self.g, self.core = g, core
 
+    # ---- elastic growth / recovery surface ------------------------------
+
+    def _cur(self, u) -> int:
+        """Resolve an open-time id (or `add_vertices` handle) to the
+        CURRENT padded id, through the composed migration/grow remap."""
+        u = int(u)
+        if u >= self._n_open:
+            i = u - self._n_open
+            if i >= len(self._virtual):
+                raise ValueError(
+                    f"unknown vertex handle {u} (have "
+                    f"{len(self._virtual)} post-open vertices)")
+            return self._virtual[i]
+        if self._remap is None:
+            return u
+        cur = int(self._remap[u])
+        if cur < 0:
+            raise ValueError(f"open-time id {u} no longer exists")
+        return cur
+
+    def _compose_perm(self, perm: np.ndarray) -> None:
+        """Fold a node-axis permutation/rekey into the open-time id maps."""
+        if self._remap is None:
+            self._remap = np.asarray(perm, np.int64).copy()
+        else:
+            self._remap = np.where(
+                self._remap >= 0, perm[np.maximum(self._remap, 0)], -1)
+        self._virtual = [int(perm[x]) for x in self._virtual]
+
+    def grow(self, Cn: Optional[int] = None,
+             Cd: Optional[int] = None) -> np.ndarray:
+        """Capacity escalation on the LIVE session: pad-and-rekey the
+        blocks to (Cn, Cd) — see `core.graph.grow_blocks` — relocating
+        the maintained coreness and CC labels along (label *values* are
+        padded ids, so they ride the same monotone rekey and stay
+        canonical), folding the rekey into the open-time id remap, and
+        re-keying the executor's mesh/plan (`SpmdExecutor.grow`).  The
+        compiled caches re-specialize exactly once per grow; steady
+        state stays at zero recompiles.  Returns the rekey map.
+        """
+        g2, rekey = grow_blocks(self.g, Cn, Cd)
+        core = relocate_rows(jax.device_get(self.core), rekey, g2.N, 0)
+        self.core = jnp.asarray(core)
+        if self.labels is not None:
+            lab = relocate_rows(jax.device_get(self.labels), rekey, g2.N, -1)
+            lab = np.where(lab >= 0, rekey[np.maximum(lab, 0)], -1)
+            self.labels = jnp.asarray(lab.astype(np.int32))
+        self._compose_perm(rekey)
+        self.g = g2
+        if self._spmd:
+            self.executor.grow(g2)
+        self._grows += 1
+        return rekey
+
+    def add_vertices(self, block: int, count: int = 1) -> List[int]:
+        """Vertex arrival: activate `count` fresh degree-0 nodes in
+        `block` (`core.graph.add_vertices_host`), growing Cn first when
+        the block is full and auto-grow is armed.  Returns stable
+        HANDLES — ids in the session's open-time id space, usable in
+        later windows like any open-time id (they survive migrations and
+        grows; allocation is deterministic, so a replayed log hands back
+        the same handles)."""
+        while True:
+            try:
+                g2, rows = add_vertices_host(self.g, block, count)
+                break
+            except CapacityError:
+                if not self._auto_grow:
+                    raise
+                self.grow(Cn=_pow2_ceil(self.g.Cn + 1))
+        self.g = g2
+        if self._spmd:
+            self.executor.refresh_fields(g2)
+        if self._track_labels:
+            # a fresh isolated vertex is its own component (canonical
+            # label == own padded id); coreness 0 already holds
+            r = jnp.asarray(rows)
+            self.labels = self.labels.at[r].set(
+                r.astype(self.labels.dtype))
+        base = self._n_open + len(self._virtual)
+        self._virtual.extend(int(x) for x in rows)
+        return list(range(base, base + len(rows)))
+
+    def migrate(self, moves) -> np.ndarray:
+        """Execute an explicit vertex migration (caller-chosen moves —
+        the worker-loss recovery path evacuates a dead worker's blocks
+        through this).  Same machinery as the §4.2 rebalance: a pure
+        node-axis permutation composed into the id remap, an executor
+        plan rebuild, and one CC re-propagation when labels are tracked
+        (canonical ids are padded ids, which the permutation renames).
+        Returns the permutation."""
+        g, perm, core = migrate_vertices(self.g, moves, self.core)
+        self.g, self.core = g, core
+        self._compose_perm(perm)
+        self._migrations += 1
+        self._migrated += len(moves)
+        if self._spmd:
+            self.executor.rebuild(g)
+        if self._track_labels:
+            self.labels = connected_components(
+                g, backend=self.backend, executor=self.executor)
+            self._cc_recomputes += 1
+        return perm
+
+    def state_dict(self):
+        """Everything needed to resume this stream elsewhere: a flat
+        dict of arrays (a pytree `checkpoint.CheckpointManager` can
+        save) plus a JSON-able meta dict of statics and counters.  The
+        snapshot is topology-independent — `from_state` may rebuild on a
+        different worker mesh (see `checkpoint.elastic`).  Arrays are
+        COPIES: the apply path donates the live graph buffers, so shared
+        references would die with the next window."""
+        g = self.g
+        arrays = {
+            "core": jnp.copy(self.core),
+            "g.deg": jnp.copy(g.deg),
+            "g.nbr": jnp.copy(g.nbr),
+            "g.node_mask": jnp.copy(g.node_mask),
+            "g.orig_id": jnp.copy(g.orig_id),
+            "rec_dev": jnp.copy(self._rec_dev),
+        }
+        if self.labels is not None:
+            arrays["labels"] = jnp.copy(self.labels)
+        if self._remap is not None:
+            arrays["remap"] = jnp.asarray(self._remap)
+        spmd, ex = self._spmd, self.executor
+        meta = {
+            "kind": "stream_session",
+            "P": g.P, "Cn": g.Cn, "Cd": g.Cd,
+            "R": self.R, "backend": self.backend,
+            "auto_grow": self._auto_grow,
+            "track_labels": self._track_labels,
+            "has_remap": self._remap is not None,
+            "n_open": self._n_open,
+            "virtual": [int(x) for x in self._virtual],
+            "rebalance_threshold": self._rebalance_threshold,
+            "rebalance_max_moves": self._rebalance_max_moves,
+            "tot": {k: int(v) for k, v in self._tot.items()},
+            "counters": {
+                "n_updates": self._n_updates,
+                "n_local": self._n_local,
+                "esc_cross": self._esc_cross,
+                "esc_spill": self._esc_spill,
+                "esc_conflict": self._esc_conflict,
+                "migrations": self._migrations,
+                "migrated": self._migrated,
+                "cc_merges": self._cc_merges,
+                "cc_recomputes": self._cc_recomputes,
+                "grows": self._grows,
+                "plan_updates":
+                    (ex.plan_updates - self._ex_updates0) if spmd else 0,
+                "plan_rebuilds":
+                    (ex.full_rebuilds - self._ex_rebuilds0) if spmd else 0,
+                "per_block": [int(x) for x in self._per_block],
+            },
+        }
+        return arrays, meta
+
+    @classmethod
+    def from_state(cls, arrays, meta, W=None, backend: Optional[str] = None,
+                   executor=None) -> "StreamSession":
+        """Rebuild a session from `state_dict` output.  `W`/`backend`/
+        `executor` override the snapshot's mesh shape — the elastic
+        remesh path: the arrays are full logical (N,)/(N, Cd) values, so
+        any worker count with W | P can adopt them."""
+        from ..core.graph import GraphBlocks
+        g = GraphBlocks(
+            nbr=jnp.asarray(arrays["g.nbr"], jnp.int32),
+            deg=jnp.asarray(arrays["g.deg"], jnp.int32),
+            node_mask=jnp.asarray(arrays["g.node_mask"]),
+            orig_id=jnp.asarray(arrays["g.orig_id"], jnp.int32),
+            P=int(meta["P"]), Cn=int(meta["Cn"]), Cd=int(meta["Cd"]))
+        sess = cls(
+            g, arrays["core"], R=int(meta["R"]),
+            backend=meta["backend"] if backend is None else backend,
+            W=W, executor=executor,
+            rebalance_threshold=meta["rebalance_threshold"],
+            rebalance_max_moves=int(meta["rebalance_max_moves"]),
+            cc_labels=arrays.get("labels") if meta["track_labels"] else None,
+            auto_grow=bool(meta["auto_grow"]))
+        sess._rec_dev = jnp.asarray(arrays["rec_dev"], jnp.int32)
+        sess._remap = (np.asarray(jax.device_get(arrays["remap"]), np.int64)
+                       if meta["has_remap"] else None)
+        sess._n_open = int(meta["n_open"])
+        sess._virtual = [int(x) for x in meta["virtual"]]
+        sess._tot = {k: int(v) for k, v in meta["tot"].items()}
+        c = meta["counters"]
+        sess._n_updates = int(c["n_updates"])
+        sess._n_local = int(c["n_local"])
+        sess._esc_cross = int(c["esc_cross"])
+        sess._esc_spill = int(c["esc_spill"])
+        sess._esc_conflict = int(c["esc_conflict"])
+        sess._migrations = int(c["migrations"])
+        sess._migrated = int(c["migrated"])
+        sess._cc_merges = int(c["cc_merges"])
+        sess._cc_recomputes = int(c["cc_recomputes"])
+        sess._grows = int(c["grows"])
+        sess._per_block = np.asarray(c["per_block"], np.int64)
+        if sess._spmd:
+            # re-base the executor counter offsets so stats() keeps
+            # counting from the snapshot's accumulated totals
+            sess._ex_updates0 = (sess.executor.plan_updates
+                                 - int(c["plan_updates"]))
+            sess._ex_rebuilds0 = (sess.executor.full_rebuilds
+                                  - int(c["plan_rebuilds"]))
+        return sess
+
     def stats(self) -> StreamStats:
         """Routing/superstep accounting over every window applied so far."""
         spmd, ex = self._spmd, self.executor
@@ -442,6 +673,7 @@ class StreamSession:
             migrated_vertices=self._migrated,
             cc_merges=self._cc_merges,
             cc_recomputes=self._cc_recomputes,
+            grows=self._grows,
         )
 
     def result(self) -> StreamResult:
@@ -468,6 +700,7 @@ def run_stream(
     rebalance_threshold: Optional[float] = None,
     rebalance_max_moves: int = 8,
     cc_labels: Optional[jax.Array] = None,
+    auto_grow: bool = False,
 ) -> StreamResult:
     """Ingest an update stream; returns a `StreamResult` (g, core, stats,
     labels).
@@ -518,7 +751,8 @@ def run_stream(
     session = StreamSession(
         g, core, R=R, backend=backend, W=W, executor=executor,
         rebalance_threshold=rebalance_threshold,
-        rebalance_max_moves=rebalance_max_moves, cc_labels=cc_labels)
+        rebalance_max_moves=rebalance_max_moves, cc_labels=cc_labels,
+        auto_grow=auto_grow)
     for window in _iter_windows(updates, R):
         session.apply_window(window)
     return session.result()
@@ -558,7 +792,7 @@ class MirrorStream:
     """
 
     def __init__(self, g, plan, backend: str = "jnp",
-                 cc_labels: bool = False):
+                 cc_labels: bool = False, auto_grow: bool = False):
         from ..core.hub_split import apply_mirrored_edits  # noqa: F401
         from ..core.kcore import coreness
 
@@ -572,20 +806,68 @@ class MirrorStream:
         self._track_labels = bool(cc_labels)
         self.labels = (connected_components(g, backend=backend, mirror=plan)
                        if self._track_labels else None)
+        #: grow Cn (pad-and-rekey, plan relocated) when the replica pool
+        #: runs dry mid-window, instead of raising CapacityError
+        self._auto_grow = bool(auto_grow)
+        self._grows = 0
+        #: open-time row ids -> current (grows rekey every row); window
+        #: ids stay open-time primary-row ids, like StreamSession's
+        self._remap: Optional[np.ndarray] = None
 
     @property
     def windows_applied(self) -> int:
         return self._windows
 
+    def grow(self, Cn: Optional[int] = None,
+             Cd: Optional[int] = None) -> np.ndarray:
+        """Capacity escalation under the vertex cut: pad-and-rekey the
+        split graph (`core.graph.grow_blocks`) and relocate the
+        `MirrorPlan` along (`core.hub_split.grow_plan` — fresh uid, so
+        the mirrored compiled step re-keys once).  Analytics recompute
+        mirror-aware, which is exact by split==unsplit parity.  Returns
+        the rekey map."""
+        from ..core.hub_split import grow_plan
+        from ..core.kcore import coreness
+
+        g2, rekey = grow_blocks(self.g, Cn, Cd)
+        self.mirror = grow_plan(self.mirror, rekey, g2)
+        self.g = g2
+        self._remap = (np.asarray(rekey, np.int64).copy()
+                       if self._remap is None
+                       else np.where(self._remap >= 0,
+                                     rekey[np.maximum(self._remap, 0)], -1))
+        self._grows += 1
+        self.core = coreness(g2, backend=self.backend, mirror=self.mirror)
+        if self._track_labels:
+            self.labels = connected_components(
+                g2, backend=self.backend, mirror=self.mirror)
+        return rekey
+
     def apply_window(self, window: List[Tuple[int, int, int]]) -> None:
-        """Apply one edit window (primary-row ids) and refresh analytics."""
+        """Apply one edit window (open-time primary-row ids) and refresh
+        analytics.  With auto-grow armed, a window that exhausts the
+        replica pool grows Cn IN FLIGHT: `apply_mirrored_edits` mutates
+        copies, so the failed attempt leaves no partial state — the
+        whole window re-applies on the grown graph."""
         from ..core.hub_split import apply_mirrored_edits
         from ..core.kcore import coreness
 
         if not window:
             return
-        self.g, self.mirror = apply_mirrored_edits(
-            self.g, self.mirror, window)
+        if self._remap is not None:
+            window = [(int(self._remap[u]), int(self._remap[v]), op)
+                      for u, v, op in window]
+        while True:
+            try:
+                g2, plan2 = apply_mirrored_edits(self.g, self.mirror, window)
+                break
+            except CapacityError:
+                if not self._auto_grow:
+                    raise
+                rekey = self.grow(Cn=_pow2_ceil(self.g.Cn + 1))
+                window = [(int(rekey[u]), int(rekey[v]), op)
+                          for u, v, op in window]
+        self.g, self.mirror = g2, plan2
         self._windows += 1
         self._n_updates += len(window)
         self.core = coreness(self.g, backend=self.backend,
@@ -594,6 +876,83 @@ class MirrorStream:
             self.labels = connected_components(
                 self.g, backend=self.backend, mirror=self.mirror)
 
+    def state_dict(self):
+        """Snapshot arrays + meta, `StreamSession.state_dict`-shaped
+        (graph and plan leaves in the flat dict, statics in meta)."""
+        g, p = self.g, self.mirror
+        arrays = {
+            "core": jnp.copy(self.core),
+            "g.deg": jnp.copy(g.deg),
+            "g.nbr": jnp.copy(g.nbr),
+            "g.node_mask": jnp.copy(g.node_mask),
+            "g.orig_id": jnp.copy(g.orig_id),
+            "plan.grp_gid": jnp.copy(p.grp_gid),
+            "plan.grp_rows": jnp.copy(p.grp_rows),
+            "plan.ldeg": jnp.copy(p.ldeg),
+            "plan.primary_mask": jnp.copy(p.primary_mask),
+            "plan.primary_row": jnp.copy(p.primary_row),
+            "plan.row_gid": jnp.copy(p.row_gid),
+        }
+        if self.labels is not None:
+            arrays["labels"] = jnp.copy(self.labels)
+        if self._remap is not None:
+            arrays["remap"] = jnp.asarray(self._remap)
+        meta = {
+            "kind": "mirror_stream",
+            "P": g.P, "Cn": g.Cn, "Cd": g.Cd,
+            "backend": self.backend,
+            "auto_grow": self._auto_grow,
+            "track_labels": self._track_labels,
+            "has_remap": self._remap is not None,
+            "Gmax": p.Gmax, "Km": p.Km, "threshold": p.threshold,
+            "n_logical": p.n_logical,
+            "windows": self._windows,
+            "n_updates": self._n_updates,
+            "grows": self._grows,
+        }
+        return arrays, meta
+
+    @classmethod
+    def from_state(cls, arrays, meta,
+                   backend: Optional[str] = None) -> "MirrorStream":
+        """Rebuild a mirrored session from `state_dict` output.  The
+        restored plan carries a fresh uid (plan identity is per-process),
+        so the first mirrored step after restore compiles once."""
+        from ..core.graph import GraphBlocks
+        from ..core.hub_split import MirrorPlan, _next_uid
+        g = GraphBlocks(
+            nbr=jnp.asarray(arrays["g.nbr"], jnp.int32),
+            deg=jnp.asarray(arrays["g.deg"], jnp.int32),
+            node_mask=jnp.asarray(arrays["g.node_mask"]),
+            orig_id=jnp.asarray(arrays["g.orig_id"], jnp.int32),
+            P=int(meta["P"]), Cn=int(meta["Cn"]), Cd=int(meta["Cd"]))
+        plan = MirrorPlan(
+            primary_row=jnp.asarray(arrays["plan.primary_row"], jnp.int32),
+            ldeg=jnp.asarray(arrays["plan.ldeg"], jnp.int32),
+            primary_mask=jnp.asarray(arrays["plan.primary_mask"]),
+            grp_rows=jnp.asarray(arrays["plan.grp_rows"], jnp.int32),
+            grp_gid=jnp.asarray(arrays["plan.grp_gid"], jnp.int32),
+            row_gid=jnp.asarray(arrays["plan.row_gid"], jnp.int32),
+            Gmax=int(meta["Gmax"]), Km=int(meta["Km"]),
+            threshold=int(meta["threshold"]),
+            n_logical=int(meta["n_logical"]), uid=_next_uid())
+        sess = cls(g, plan,
+                   backend=meta["backend"] if backend is None else backend,
+                   cc_labels=bool(meta["track_labels"]),
+                   auto_grow=bool(meta["auto_grow"]))
+        # restore the maintained analytics verbatim (the ctor recomputed
+        # them — bit-identical by the parity contract, but the snapshot
+        # is the source of truth)
+        sess.core = jnp.asarray(arrays["core"], jnp.int32)
+        if meta["track_labels"]:
+            sess.labels = jnp.asarray(arrays["labels"], jnp.int32)
+        sess._remap = (np.asarray(jax.device_get(arrays["remap"]), np.int64)
+                       if meta["has_remap"] else None)
+        sess._windows = int(meta["windows"])
+        sess._n_updates = int(meta["n_updates"])
+        sess._grows = int(meta["grows"])
+        return sess
+
     def result(self) -> StreamResult:
         """Current state as a `StreamResult` (routing/superstep stats are
         not metered on the mirrored path; those counters report zeros)."""
@@ -601,7 +960,8 @@ class MirrorStream:
             updates=self._n_updates, batches=self._windows, block_local=0,
             escalated_cross_block=0, escalated_spill=0,
             escalated_conflict=0, bfs_steps=0, recompute_steps=0,
-            per_block=tuple(0 for _ in range(self.g.P)))
+            per_block=tuple(0 for _ in range(self.g.P)),
+            grows=self._grows)
         return StreamResult(g=self.g, core=self.core, stats=zeros,
                             labels=self.labels)
 

@@ -63,6 +63,12 @@ class EpochSnapshot(NamedTuple):
     (N, Cd) gather on one row would see only one slice).  `deg` then
     holds LOGICAL degrees and `rank` is masked to primaries (replica
     rows read 0.0, so `topk_pagerank` never lists a hub twice).
+
+    Padded row ids are only comparable between two snapshots whose
+    `(Cn, grows)` match: a capacity escalation (`StreamSession.grow`)
+    re-keys every padded id monotonically, so a row id cached from an
+    older epoch silently points at a different vertex afterwards.
+    Cross-epoch joins must go through `orig_id`, the stable key.
     """
 
     epoch: int               # snapshot version, 0 at session open
@@ -76,6 +82,9 @@ class EpochSnapshot(NamedTuple):
     orig_id: jax.Array       # (N,) int32 original input ids
     primary: Optional[np.ndarray] = None   # (N,) host row->primary map
     nbr_max: Optional[jax.Array] = None    # (N,) group-merged nbr max core
+    Cn: int = 0              # per-block node capacity at this epoch
+    Cd: int = 0              # degree capacity at this epoch
+    grows: int = 0           # capacity escalations before this epoch
 
 
 class AnalyticsState:
@@ -158,6 +167,9 @@ class AnalyticsState:
             orig_id=jnp.copy(g.orig_id),
             primary=primary,
             nbr_max=None if nbr_max is None else jnp.copy(nbr_max),
+            Cn=int(g.Cn),
+            Cd=int(g.Cd),
+            grows=int(getattr(sess, "_grows", 0)),
         )
         self._front = back  # publish
         self.refreshes += 1

@@ -1,44 +1,81 @@
-"""Checkpointing: atomicity, keep-N, async, restore, elastic remesh."""
-import json
+"""Checkpointing: atomicity, keep-N, async, restore, elastic sessions.
+
+The manager is exercised against the objects it actually checkpoints in
+this codebase — `GraphBlocks` pytrees and live stream sessions — not
+synthetic parameter trees: the graph path is what crash recovery
+(`runtime.recovery`) depends on.
+"""
 import shutil
-from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import CheckpointManager
-from repro.launch.mesh import make_test_mesh
-from repro.distributed import sharding as SH
+from repro.checkpoint import (CheckpointManager, restore_session,
+                              save_session)
+from repro.core import build_blocks, coreness
+from repro.core.algorithms import connected_components
+from repro.core.partition import node_random_partition
+from repro.core.updates import sample_deletions, sample_insertions
+from repro.graphgen import barabasi_albert
+from repro.runtime.stream import StreamSession
+
+
+@pytest.fixture(scope="module")
+def g0():
+    edges = barabasi_albert(120, 3, seed=3)
+    n = int(edges.max()) + 1
+    assign = node_random_partition(n, 4, seed=1)
+    return build_blocks(edges, n, assign, P=4, deg_slack=24)
 
 
 @pytest.fixture
-def tree():
-    k = jax.random.PRNGKey(0)
-    return {"a": jax.random.normal(k, (16, 8)),
-            "b": {"c": jnp.arange(5, dtype=jnp.int32)}}
+def tree(g0):
+    # a GraphBlocks IS a pytree (registered dataclass): the checkpoint
+    # manager must handle it as-is, plus nested analytics alongside
+    return {"g": g0, "analytics": {"core": coreness(g0, backend="jnp")}}
+
+
+def _assert_tree_equal(a, b):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 
 
 def test_save_restore_roundtrip(tmp_path, tree):
     mgr = CheckpointManager(str(tmp_path), keep_n=2)
     mgr.save(3, tree)
     like = jax.tree.map(lambda x: jnp.zeros_like(x), tree)
-    out = mgr.restore(3, like)
-    for a, b in zip(jax.tree_util.tree_leaves(tree),
-                    jax.tree_util.tree_leaves(out)):
-        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    _assert_tree_equal(tree, mgr.restore(3, like))
 
 
 def test_uncommitted_checkpoint_ignored(tmp_path, tree):
     mgr = CheckpointManager(str(tmp_path))
     mgr.save(1, tree)
-    # fake a crashed save
+    # fake a crashed save: directory present, COMMIT missing
     bad = tmp_path / "step_00000002"
     shutil.copytree(tmp_path / "step_00000001", bad)
     (bad / "COMMIT").unlink()
     assert mgr.all_steps() == [1]
     assert mgr.latest_step() == 1
+
+
+def test_torn_tmp_dir_ignored(tmp_path, tree):
+    """A crash mid-write leaves step_XXXX.tmp — never listed, never
+    restorable, and a later save of the same step replaces it."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, tree)
+    torn = tmp_path / "step_00000002.tmp"
+    torn.mkdir()
+    (torn / "leaf_00000.npy").write_bytes(b"\x93NUMPY garbage")
+    assert mgr.all_steps() == [1]
+    with pytest.raises(FileNotFoundError):
+        mgr.restore_dict(2)
+    mgr.save(2, tree)  # overwrites the torn tmp on its way through
+    assert mgr.all_steps() == [1, 2]
 
 
 def test_keep_n_garbage_collection(tmp_path, tree):
@@ -53,28 +90,14 @@ def test_async_save_then_restore(tmp_path, tree):
     mgr.save(7, tree, blocking=False)
     mgr.wait()
     assert mgr.latest_step() == 7
-    out = mgr.restore(7, tree)
-    np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(tree["a"]))
+    _assert_tree_equal(tree, mgr.restore(7, tree))
 
 
 def test_structure_mismatch_raises(tmp_path, tree):
     mgr = CheckpointManager(str(tmp_path))
     mgr.save(1, tree)
     with pytest.raises(ValueError, match="leaves"):
-        mgr.restore(1, {"a": tree["a"]})
-
-
-def test_elastic_restore_onto_new_mesh(tmp_path, tree):
-    """Same checkpoint restores under different mesh shardings (the
-    node-failure / scale-up path)."""
-    mgr = CheckpointManager(str(tmp_path))
-    mgr.save(5, tree)
-    mesh = make_test_mesh(dp=1, tp=jax.device_count())
-    sh = SH.param_shardings(tree, mesh)
-    out = mgr.restore(5, tree, sh)
-    np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(tree["a"]))
-    # leaves actually carry the new sharding
-    assert out["a"].sharding.mesh.shape == mesh.shape
+        mgr.restore(1, {"g": tree["g"]})
 
 
 def test_dtype_cast_on_restore(tmp_path):
@@ -82,3 +105,93 @@ def test_dtype_cast_on_restore(tmp_path):
     mgr.save(1, {"w": jnp.ones((4,), jnp.float32)})
     out = mgr.restore(1, {"w": jnp.zeros((4,), jnp.bfloat16)})
     assert out["w"].dtype == jnp.bfloat16
+
+
+def test_flat_dict_self_describing(tmp_path, g0):
+    """Flat-dict checkpoints restore with NO template: the manifest
+    carries key order and meta — crash recovery cannot know what
+    capacities the stream had grown to."""
+    mgr = CheckpointManager(str(tmp_path))
+    arrays = {"g.nbr": g0.nbr, "g.deg": g0.deg, "core": coreness(g0)}
+    meta = {"kind": "unit", "Cn": g0.Cn, "Cd": g0.Cd}
+    mgr.save(5, arrays, meta=meta)
+    assert mgr.load_meta(5) == meta
+    out = mgr.restore_dict(5)
+    assert set(out) == set(arrays)
+    for k in arrays:
+        np.testing.assert_array_equal(np.asarray(out[k]),
+                                      np.asarray(arrays[k]))
+
+
+def test_restore_dict_needs_flat_dict(tmp_path, tree):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, tree)  # nested — not key-addressable
+    with pytest.raises(ValueError, match="flat dict"):
+        mgr.restore_dict(1)
+
+
+def _open(g0):
+    core = coreness(g0, backend="jnp")
+    labels = connected_components(g0, backend="jnp")
+    return StreamSession(jax.tree.map(jnp.copy, g0), core, R=4,
+                         cc_labels=labels)
+
+
+def _windows(g, k=6, seed=9):
+    ups = (sample_insertions(g, 2 * k, "inter", seed=seed)
+           + sample_deletions(g, 2 * k, "intra", seed=seed + 1))
+    return [ups[i::k] for i in range(k)]
+
+
+def test_session_snapshot_roundtrip(tmp_path, g0):
+    """save_session/restore_session: the restored session continues the
+    stream bit-identically to one that was never interrupted."""
+    ws = _windows(g0)
+    a, b = _open(g0), _open(g0)
+    for w in ws[:3]:
+        a.apply_window(w)
+        b.apply_window(w)
+    mgr = CheckpointManager(str(tmp_path))
+    step = save_session(mgr, a, extra_meta={"note": 1})
+    assert step == 3
+    step2, c, meta = restore_session(mgr)
+    assert step2 == 3 and meta["extra"] == {"note": 1}
+    assert c.windows_applied == a.windows_applied
+    for w in ws[3:]:
+        b.apply_window(w)
+        c.apply_window(w)
+    np.testing.assert_array_equal(np.asarray(b.core), np.asarray(c.core))
+    np.testing.assert_array_equal(np.asarray(b.labels),
+                                  np.asarray(c.labels))
+    np.testing.assert_array_equal(np.asarray(b.g.nbr), np.asarray(c.g.nbr))
+    sa, sc = b.stats(), c.stats()
+    assert sc.updates == sa.updates
+    assert sc.batches == sa.batches
+    assert sc.per_block == sa.per_block
+
+
+def test_restore_session_requires_meta(tmp_path, g0):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"x": g0.deg})
+    with pytest.raises(ValueError, match="session meta"):
+        restore_session(mgr, step=1)
+
+
+def test_restore_session_empty_dir(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    with pytest.raises(FileNotFoundError):
+        restore_session(mgr)
+
+
+def test_snapshot_survives_buffer_donation(tmp_path, g0):
+    """The apply path donates the live graph buffers: a snapshot taken
+    BEFORE further windows must hold copies, not references."""
+    ws = _windows(g0)
+    sess = _open(g0)
+    sess.apply_window(ws[0])
+    mgr = CheckpointManager(str(tmp_path))
+    arrays, _ = sess.state_dict()
+    for w in ws[1:]:
+        sess.apply_window(w)  # donates / recycles the old buffers
+    for k, arr in arrays.items():
+        np.asarray(arr)  # raises if the snapshot aliased a donated buffer

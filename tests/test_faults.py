@@ -1,0 +1,391 @@
+"""Fault injection: worker loss, torn checkpoints, chaotic recovery.
+
+The crash-recovery contract (`runtime.recovery` + `checkpoint`):
+
+  * a torn save (crash mid-write: ``step_XXXX.tmp``, or a step directory
+    missing its COMMIT marker) is NEVER listed or loaded — recovery
+    always starts from the last atomically committed snapshot;
+  * killing a worker at an arbitrary window and recovering (restore →
+    evacuate its blocks onto the survivors → replay the window-log tail)
+    lands on EXACTLY the logical state of a run that never crashed:
+    per-vertex coreness, component structure, and topology all match the
+    never-crashed oracle, and the maintained analytics are bit-identical
+    to a from-scratch recompute on the recovered topology;
+  * restore may target a DIFFERENT worker count (W' | P) — the single
+    1-CPU tier-1 run exercises W'=1; the forced-8-device CI job re-runs
+    this file so the same snapshots restore across 1<->8 device meshes.
+
+This file doubles as the e2e elasticity acceptance drill: a stream that
+starts at tight capacities, triples its edge count through automatic
+escalation, survives a mid-stream worker loss, and finishes with
+(core, labels, pagerank) bit-identical to a from-scratch recompute —
+with compiled-cache re-specialization counter-bounded at one per grow
+and zero in steady state.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from _hyp import given, settings, st
+
+from repro.checkpoint import CheckpointManager, restore_session, save_session
+from repro.core import build_blocks, coreness
+from repro.core.algorithms import connected_components, pagerank
+from repro.core.partition import node_random_partition
+from repro.graphgen import erdos_renyi
+from repro.kernels import ops
+from repro.runtime import spmd as spmd_mod
+from repro.runtime.mesh import best_worker_count
+from repro.runtime.recovery import (ElasticCoordinator, WindowLog,
+                                    blocks_of_worker, kill_session,
+                                    plan_evacuation)
+from repro.runtime.stream import StreamSession
+from repro.service import AnalyticsState
+
+P = 8
+N_NODES = 96
+PR_STEPS = 10
+
+
+def _graph(seed=2, deg_slack=1, node_slack=2):
+    edges = erdos_renyi(N_NODES, 200, seed=seed)
+    assign = node_random_partition(N_NODES, P, seed=seed + 1)
+    g = build_blocks(edges, N_NODES, assign, P=P, deg_slack=deg_slack,
+                     node_slack=node_slack)
+    return g, edges
+
+
+def _session(g, backend="jnp", W=None):
+    return StreamSession(
+        jax.tree.map(jnp.copy, g), coreness(g, backend="jnp"), R=8,
+        backend=backend, W=W, cc_labels=connected_components(g),
+        auto_grow=True)
+
+
+def _windows(g, n_w, seed, insert_bias=0.7):
+    """Random edit windows in the OPEN-TIME padded id space."""
+    rng = np.random.default_rng(seed)
+    mask = np.asarray(g.node_mask).astype(bool)
+    real = np.flatnonzero(mask)
+    nbr = np.asarray(g.nbr)
+    cur = set()
+    for i in real:
+        for j in nbr[i]:
+            if j >= 0:
+                cur.add((min(int(i), int(j)), max(int(i), int(j))))
+    out = []
+    for _ in range(n_w):
+        w = []
+        while len(w) < 6:
+            u = int(real[rng.integers(0, len(real))])
+            v = int(real[rng.integers(0, len(real))])
+            key = (min(u, v), max(u, v))
+            if u == v:
+                continue
+            if key in cur and rng.random() > insert_bias:
+                cur.discard(key)
+                w.append((u, v, -1))
+            elif key not in cur:
+                cur.add(key)
+                w.append((u, v, +1))
+        out.append(w)
+    return out
+
+
+class _EditStream:
+    """Stateful window generator in the session's OPEN-TIME id space.
+
+    `apply_window` names vertices as of session open (grows/migrations
+    remap internally), so a generator that spans capacity escalations
+    must keep issuing open-time ids — regenerating from the CURRENT
+    graph would double-remap."""
+
+    def __init__(self, g, seed):
+        mask = np.asarray(g.node_mask).astype(bool)
+        self.real = np.flatnonzero(mask)
+        nbr = np.asarray(g.nbr)
+        self.cur = set()
+        for i in self.real:
+            for j in nbr[i]:
+                if j >= 0:
+                    self.cur.add((min(int(i), int(j)), max(int(i), int(j))))
+        self.rng = np.random.default_rng(seed)
+
+    def window(self, size=6, insert_bias=0.7):
+        w = []
+        while len(w) < size:
+            u = int(self.real[self.rng.integers(0, len(self.real))])
+            v = int(self.real[self.rng.integers(0, len(self.real))])
+            key = (min(u, v), max(u, v))
+            if u == v:
+                continue
+            if key in self.cur and self.rng.random() > insert_bias:
+                self.cur.discard(key)
+                w.append((u, v, -1))
+            elif key not in self.cur:
+                self.cur.add(key)
+                w.append((u, v, +1))
+        return w
+
+
+def _logical_state(sess):
+    """Per-orig-id analytics + topology: the permutation-free view two
+    differently-migrated sessions can be compared in."""
+    g = sess.g
+    mask = np.asarray(g.node_mask).astype(bool)
+    oid = np.asarray(g.orig_id)
+    core = dict(zip(oid[mask].tolist(),
+                    np.asarray(sess.core)[mask].tolist()))
+    comps = {}
+    for i in np.flatnonzero(mask):
+        comps.setdefault(int(np.asarray(sess.labels)[i]), set()).add(
+            int(oid[i]))
+    parts = sorted(tuple(sorted(s)) for s in comps.values())
+    nbr = np.asarray(g.nbr)
+    edges = set()
+    for i in np.flatnonzero(mask):
+        for j in nbr[i]:
+            if j >= 0:
+                edges.add((min(int(oid[i]), int(oid[j])),
+                           max(int(oid[i]), int(oid[j]))))
+    return core, parts, edges
+
+
+def _assert_exact_vs_recompute(sess):
+    """Maintained analytics == from-scratch recompute, bit for bit."""
+    np.testing.assert_array_equal(
+        np.asarray(sess.core), np.asarray(coreness(sess.g, backend="jnp")))
+    np.testing.assert_array_equal(
+        np.asarray(sess.labels),
+        np.asarray(connected_components(sess.g, backend="jnp")))
+
+
+# ---------------------------------------------------------------------------
+# torn checkpoints
+# ---------------------------------------------------------------------------
+
+
+def test_torn_checkpoint_never_loaded(tmp_path):
+    """Crash injections at every stage of a save — tmp dir with partial
+    leaves, step dir missing COMMIT — are invisible to recovery."""
+    g, _ = _graph()
+    sess = _session(g)
+    mgr = CheckpointManager(str(tmp_path), keep_n=3)
+    save_session(mgr, sess, step=1)
+
+    # crash A: mid-write, only the tmp dir exists
+    torn_tmp = tmp_path / "step_00000007.tmp"
+    torn_tmp.mkdir()
+    (torn_tmp / "leaf_00000.npy").write_bytes(b"partial garbage")
+    # crash B: leaves + manifest written, COMMIT never landed
+    torn_dir = tmp_path / "step_00000008"
+    torn_dir.mkdir()
+    (torn_dir / "leaf_00000.npy").write_bytes(b"also garbage")
+    (torn_dir / "manifest.json").write_text("{}")
+
+    assert mgr.all_steps() == [1]
+    step, restored, _ = restore_session(mgr)
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(restored.g.nbr),
+                                  np.asarray(sess.g.nbr))
+    with pytest.raises(FileNotFoundError):
+        restore_session(mgr, step=8)
+
+
+def test_kill_session_buffers_unusable(tmp_path):
+    """After the loss drill, the dead session's device buffers are gone:
+    serving from the corpse raises instead of silently reading stale
+    pre-crash state."""
+    g, _ = _graph()
+    sess = _session(g)
+    kill_session(sess)
+    with pytest.raises(RuntimeError):
+        np.asarray(sess.core) + 0
+
+
+# ---------------------------------------------------------------------------
+# evacuation planning
+# ---------------------------------------------------------------------------
+
+
+def test_plan_evacuation_balanced_and_complete():
+    g, _ = _graph(node_slack=24)
+    dead = blocks_of_worker(0, P, P)  # one block per worker
+    moves = plan_evacuation(g, dead)
+    mask = np.asarray(g.node_mask)
+    assert len(moves) == int(mask[: g.Cn].sum())
+    assert all(d not in dead for _, d in moves)
+    # balanced: most-free-first keeps destination loads within one
+    loads = {}
+    for _, d in moves:
+        loads[d] = loads.get(d, 0) + 1
+    free = {b: int(g.Cn - mask[b * g.Cn:(b + 1) * g.Cn].sum())
+            for b in range(P) if b not in dead}
+    slack_after = [free[b] - loads.get(b, 0) for b in free]
+    assert max(slack_after) - min(slack_after) <= 1
+
+
+def test_plan_evacuation_raises_when_survivors_full():
+    # every block exactly full (Cn == per-block occupancy): the planner
+    # must refuse and tell the caller to grow Cn
+    edges = erdos_renyi(N_NODES, 200, seed=2)
+    assign = np.arange(N_NODES) % P
+    g = build_blocks(edges, N_NODES, assign, P=P, Cn=N_NODES // P,
+                     deg_slack=4)
+    with pytest.raises(Exception) as ei:
+        plan_evacuation(g, [0])
+    assert "grow Cn" in str(ei.value)
+
+
+# ---------------------------------------------------------------------------
+# chaos: kill a worker at a random window, recover, compare to oracle
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(0, 10_000))
+def test_chaos_worker_loss_recovery(seed):
+    """Property drill: random edit stream, checkpoint at a random
+    window, worker killed at a random later window, torn-save debris
+    injected — recovery replays to the never-crashed oracle's logical
+    state and its analytics are bit-exact vs recompute."""
+    rng = np.random.default_rng(seed)
+    g, _ = _graph(seed=int(rng.integers(0, 100)), node_slack=4)
+    ws = _windows(g, 8, seed=seed + 1)
+    ckpt_at = int(rng.integers(1, 7))
+    kill_at = int(rng.integers(ckpt_at, 9))
+    dead_w = int(rng.integers(0, P))
+
+    import tempfile, shutil
+    tmp = tempfile.mkdtemp()
+    try:
+        mgr = CheckpointManager(tmp, keep_n=2)
+        coord = ElasticCoordinator(_session(g), mgr)
+        oracle = _session(g)
+        for i, w in enumerate(ws):
+            if i == ckpt_at:
+                coord.checkpoint()
+            if i == kill_at:
+                # torn-save debris right where recovery will look
+                torn = mgr.dir / f"step_{90 + i:08d}.tmp"
+                torn.mkdir()
+                (torn / "leaf_00000.npy").write_bytes(b"x")
+                coord.recover_worker(dead_w)
+            coord.apply_window(w)
+            oracle.apply_window(w)
+        if kill_at >= len(ws):  # kill after the stream drained
+            coord.recover_worker(dead_w)
+        got = _logical_state(coord.session)
+        want = _logical_state(oracle)
+        assert got[0] == want[0], "coreness diverged"
+        assert got[1] == want[1], "components diverged"
+        assert got[2] == want[2], "topology diverged"
+        _assert_exact_vs_recompute(coord.session)
+        # the torn step never surfaced
+        assert all(s < 90 for s in mgr.all_steps())
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+# ---------------------------------------------------------------------------
+# remesh restore: snapshots cross device topologies
+# ---------------------------------------------------------------------------
+
+
+def test_restore_across_mesh_shapes(tmp_path):
+    """A snapshot saved from one worker mesh restores onto every W' | P
+    the current device pool supports (the 8-forced-device CI job crosses
+    real 1<->8 boundaries; 1 device exercises the W'=1 fold)."""
+    nd = jax.device_count()
+    W0 = best_worker_count(P, nd)
+    g, _ = _graph()
+    sess = _session(g, backend="ell_spmd", W=W0)
+    for w in _windows(g, 3, seed=5):
+        sess.apply_window(w)
+    mgr = CheckpointManager(str(tmp_path))
+    save_session(mgr, sess)
+    want_core = np.asarray(sess.core)
+    want_nbr = np.asarray(sess.g.nbr)
+    candidates = sorted({w for w in (1, 2, 4, 8)
+                         if P % w == 0 and w <= nd and nd % w == 0})
+    for W in candidates:
+        _, restored, _ = restore_session(mgr, W=W, backend="ell_spmd")
+        np.testing.assert_array_equal(np.asarray(restored.core), want_core)
+        np.testing.assert_array_equal(np.asarray(restored.g.nbr), want_nbr)
+        # and the restored session still ingests
+        restored.apply_window(_windows(restored.g, 1, seed=9)[0])
+        _assert_exact_vs_recompute(restored)
+
+
+# ---------------------------------------------------------------------------
+# the e2e elasticity acceptance drill
+# ---------------------------------------------------------------------------
+
+
+def test_e2e_elastic_acceptance(tmp_path):
+    """Start at tight capacities; TRIPLE the edge count via automatic
+    escalation; checkpoint; lose a worker mid-stream; recover onto the
+    surviving mesh; keep streaming.  Final (core, labels, pagerank) are
+    bit-identical to a from-scratch recompute, and compiled-cache
+    re-specialization is counter-bounded: at most one per grow, zero in
+    steady state."""
+    nd = jax.device_count()
+    W0 = best_worker_count(P, nd)
+    backend = "ell_spmd"
+    g, edges = _graph(deg_slack=1, node_slack=2)
+    m0 = g.m_real
+    sess = _session(g, backend=backend, W=W0)
+    mgr = CheckpointManager(str(tmp_path), keep_n=3)
+    coord = ElasticCoordinator(sess, mgr)
+
+    # all windows speak OPEN-TIME ids (grows remap internally)
+    stream = _EditStream(g, seed=0)
+
+    # phase 1: insert-heavy windows until the edge count triples —
+    # tight Cd=deg-slack-1 capacities force automatic escalation
+    while coord.session.g.m_real < 3 * m0:
+        coord.apply_window(stream.window(insert_bias=1.0))
+    grows_p1 = coord.session._grows
+    assert grows_p1 >= 1, "tripling never hit a capacity wall"
+    assert coord.session.g.m_real >= 3 * m0
+    _assert_exact_vs_recompute(coord.session)
+
+    # phase 2: checkpoint, stream on, then lose a worker
+    coord.checkpoint()
+    for _ in range(2):
+        coord.apply_window(stream.window())
+    W_new = W0 if W0 == 1 else W0 // 2  # recover onto fewer workers
+    # the lost worker is one of the paper's logical block-workers: under
+    # a single-device fold (W0=1) that is one block, not the whole mesh
+    coord.recover_worker(0, W_old=(W0 if W0 > 1 else P), W=W_new,
+                         backend=backend)
+    # the dead worker's blocks were evacuated
+    g2 = coord.session.g
+    mask = np.asarray(g2.node_mask)
+    for b in blocks_of_worker(0, P, W0 if W0 > 1 else P):
+        assert mask[b * g2.Cn:(b + 1) * g2.Cn].sum() == 0
+
+    # phase 3: steady-state streaming on the recovered session — zero
+    # fresh compiled-step builds unless a further grow happens
+    coord.apply_window(stream.window())  # warm the new mesh
+    grows0 = coord.session._grows
+    builds0 = spmd_mod.step_build_count()
+    traces0 = ops.gather_trace_count()
+    for _ in range(3):
+        coord.apply_window(stream.window())
+    grew = coord.session._grows - grows0
+    assert spmd_mod.step_build_count() - builds0 <= grew
+    if grew == 0:
+        assert ops.gather_trace_count() == traces0
+
+    # final: analytics bit-identical to from-scratch recompute
+    final = coord.session
+    _assert_exact_vs_recompute(final)
+    state = AnalyticsState(final, pr_steps=PR_STEPS)
+    snap = state.snapshot
+    np.testing.assert_array_equal(
+        np.asarray(snap.rank),
+        np.asarray(pagerank(final.g, tol=None, max_steps=PR_STEPS)))
+    assert snap.grows == final._grows >= grows_p1

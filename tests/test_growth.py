@@ -1,0 +1,297 @@
+"""Capacity escalation: pad-and-rekey growth, end to end.
+
+The elastic contract (`core.graph.grow_blocks` and the session `grow`
+surface built on it):
+
+  * growth is PURE relocation — `grow_blocks(g, Cn2, Cd2)` produces the
+    graph `build_blocks` would have produced at the larger capacities,
+    bit for bit, because the rekey `b*Cn + r -> b*Cn2 + r` is globally
+    monotone (sorted-ELL rows survive a value remap without a re-sort);
+  * growth is reversible — grow-then-shrink round-trips bit-identically
+    (orig_id is the witness: relocation never renames a vertex);
+  * escalation is automatic and exact — a window that would overflow
+    `Cd` (or a replica pool that would exhaust `Cn`) grows the graph and
+    retries, and the stream's maintained analytics still match a
+    from-scratch recompute on the final topology;
+  * escalation is CHEAP afterwards — compiled caches re-specialize once
+    per grow and steady state returns to zero retraces (counter-asserted
+    below, the same counters the service tests pin).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CapacityError, add_vertices_host, build_blocks,
+                        coreness, grow_blocks)
+from repro.core.algorithms import connected_components
+from repro.core.graph import migrate_vertices
+from repro.core.hub_split import split_hubs
+from repro.core.partition import node_random_partition
+from repro.core.updates import (apply_updates_host, sample_deletions,
+                                sample_insertions)
+from repro.graphgen import barabasi_albert, erdos_renyi
+from repro.kernels import ops
+from repro.runtime import spmd as spmd_mod
+from repro.runtime.stream import MirrorStream, StreamSession
+from repro.service import AnalyticsState
+
+
+def _graph(n=96, m=240, P=4, seed=2, deg_slack=2, node_slack=0):
+    edges = erdos_renyi(n, m, seed=seed)
+    assign = node_random_partition(n, P, seed=seed + 1)
+    return build_blocks(edges, n, assign, P=P, deg_slack=deg_slack,
+                        node_slack=node_slack), edges, assign
+
+
+def _assert_graph_equal(a, b):
+    for f in ("nbr", "deg", "node_mask", "orig_id"):
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)), err_msg=f)
+
+
+# ---------------------------------------------------------------------------
+# grow_blocks: relocation == rebuild
+# ---------------------------------------------------------------------------
+
+
+def test_grow_equals_rebuild():
+    """Growing capacities relocates to EXACTLY the graph a from-scratch
+    build at those capacities produces — the strongest possible
+    statement that no invariant (sorted-ELL, padding, ids) bends."""
+    g, edges, assign = _graph()
+    for Cn2, Cd2 in ((g.Cn * 2, g.Cd), (g.Cn, g.Cd * 2),
+                     (g.Cn * 2, g.Cd * 4)):
+        g2, rekey = grow_blocks(g, Cn=Cn2, Cd=Cd2)
+        want = build_blocks(edges, g.N and int(np.asarray(g.node_mask).sum()),
+                            assign, P=g.P, Cn=Cn2, Cd=Cd2)
+        _assert_graph_equal(g2, want)
+        # the rekey is monotone over real rows (sorted-ELL survives)
+        real = rekey[rekey >= 0]
+        assert np.all(np.diff(real) > 0)
+
+
+def test_grow_then_shrink_roundtrip():
+    """Shrinking back to the original capacities restores the original
+    graph bit for bit — orig_id never changes across grow/shrink."""
+    g, _, _ = _graph()
+    g2, _ = grow_blocks(g, Cn=g.Cn * 4, Cd=g.Cd * 2)
+    g3, _ = grow_blocks(g2, Cn=g.Cn, Cd=g.Cd)
+    _assert_graph_equal(g, g3)
+
+
+def test_shrink_below_contents_raises():
+    g, _, _ = _graph()
+    with pytest.raises(CapacityError):
+        grow_blocks(g, Cd=1)  # max real degree exceeds 1
+    full_rows = int(np.asarray(g.node_mask)[:g.Cn].sum())
+    with pytest.raises(CapacityError):
+        grow_blocks(g, Cn=max(1, full_rows - 1))
+
+
+def test_grow_under_trace_raises():
+    """Growth is a HOST boundary: calling it under jit must fail
+    loudly, not silently trace a data-dependent shape."""
+    g, _, _ = _graph()
+
+    @jax.jit
+    def f(gg):
+        g2, _ = grow_blocks(gg, Cn=gg.Cn * 2)
+        return g2.deg
+
+    with pytest.raises(TypeError):
+        f(g)
+
+
+def test_add_vertices_deterministic_and_capped():
+    g, _, _ = _graph(node_slack=3)
+    g2, rows = add_vertices_host(g, 1, 2)
+    g3, rows_again = add_vertices_host(g, 1, 2)
+    rows, rows_again = list(map(int, rows)), list(map(int, rows_again))
+    assert rows == rows_again  # lowest-free-rows-first: replayable
+    assert all(g.Cn <= r < 2 * g.Cn for r in rows)
+    with pytest.raises(CapacityError):
+        add_vertices_host(g2, 1, g.Cn)  # block 1 cannot take Cn more
+
+
+# ---------------------------------------------------------------------------
+# streaming escalation: host/jit parity, counters, analytics exactness
+# ---------------------------------------------------------------------------
+
+
+def _overflow_windows(g, k=4, seed=5):
+    """Insert-heavy windows guaranteed to overflow a tight Cd."""
+    rng = np.random.default_rng(seed)
+    mask = np.asarray(g.node_mask).astype(bool)
+    real = np.flatnonzero(mask)
+    nbr = np.asarray(g.nbr)
+    present = set()
+    for i in real:
+        for j in nbr[i]:
+            if j >= 0:
+                present.add((min(int(i), int(j)), max(int(i), int(j))))
+    hub = int(real[np.argmax(np.asarray(g.deg)[real])])
+    out, cur = [], set(present)
+    for _ in range(k):
+        w = []
+        while len(w) < 6:
+            u = hub if rng.random() < 0.5 else int(
+                real[rng.integers(0, len(real))])
+            v = int(real[rng.integers(0, len(real))])
+            key = (min(u, v), max(u, v))
+            if u == v or key in cur:
+                continue
+            cur.add(key)
+            w.append((u, v, +1))
+        out.append(w)
+    return out
+
+
+def test_cd_escalation_matches_host_and_recompute():
+    """auto_grow sessions ingest windows that overflow Cd; the final
+    graph matches the host oracle applied to an ALREADY-grown graph, and
+    maintained core/labels match a from-scratch recompute — on the jnp
+    and the spmd backend alike (host/jit bit-parity across a grow)."""
+    g, _, _ = _graph(deg_slack=1)
+    ws = _overflow_windows(g)
+    flat = [u for w in ws for u in w]
+    for backend in ("jnp", "ell_spmd"):
+        sess = StreamSession(
+            jax.tree.map(jnp.copy, g), coreness(g, backend="jnp"), R=8,
+            backend=backend, cc_labels=connected_components(g),
+            auto_grow=True)
+        for w in ws:
+            sess.apply_window(w)
+        assert sess._grows >= 1  # the windows genuinely overflowed
+        # host oracle: pre-grow a copy to the session's final capacities,
+        # splice the same edits host-side
+        g_big, rekey = grow_blocks(g, Cn=sess.g.Cn, Cd=sess.g.Cd)
+        host = apply_updates_host(
+            g_big, [(int(rekey[u]), int(rekey[v]), op) for u, v, op in flat])
+        _assert_graph_equal(sess.g, host)
+        np.testing.assert_array_equal(
+            np.asarray(sess.core),
+            np.asarray(coreness(sess.g, backend="jnp")))
+        np.testing.assert_array_equal(
+            np.asarray(sess.labels),
+            np.asarray(connected_components(sess.g, backend="jnp")))
+
+
+def test_escalation_counters_one_retrace_per_grow():
+    """Cache accounting across a grow: the compiled window step
+    re-specializes exactly once (new (Cn, Cd) key), steady state returns
+    to ZERO fresh traces, and the executor/session counters agree."""
+    g, _, _ = _graph(deg_slack=1)
+    ws = _overflow_windows(g, k=6)
+    sess = StreamSession(
+        jax.tree.map(jnp.copy, g), coreness(g, backend="jnp"), R=8,
+        backend="ell_spmd", cc_labels=connected_components(g),
+        auto_grow=True)
+    sess.apply_window(ws[0])  # warm the caches at the open capacities
+    grows0, builds0 = sess._grows, spmd_mod.step_build_count()
+    traces0 = ops.gather_trace_count()
+    for w in ws[1:]:
+        sess.apply_window(w)
+    grew = sess._grows - grows0
+    assert grew >= 1
+    assert sess.executor.grows == sess._grows
+    assert sess.stats().grows == sess._grows
+    # one compiled-step build per capacity change, not per window
+    assert spmd_mod.step_build_count() - builds0 <= grew
+    # steady state after the last grow: zero fresh traces / builds
+    builds1, traces1 = spmd_mod.step_build_count(), ops.gather_trace_count()
+    for w in _overflow_windows(sess.g, k=2, seed=11):
+        sess.apply_window(w)
+    if sess._grows == grows0 + grew:  # no further escalation happened
+        assert spmd_mod.step_build_count() == builds1
+        assert ops.gather_trace_count() == traces1
+
+
+def test_snapshot_versions_across_grow():
+    """EpochSnapshot carries (Cn, Cd, grows): readers can detect that a
+    grow re-keyed the padded id space between two epochs."""
+    g, _, _ = _graph(deg_slack=1)
+    sess = StreamSession(
+        jax.tree.map(jnp.copy, g), coreness(g, backend="jnp"), R=8,
+        cc_labels=connected_components(g), auto_grow=True)
+    state = AnalyticsState(sess, pr_steps=8)
+    s0 = state.snapshot
+    assert (s0.Cn, s0.Cd, s0.grows) == (g.Cn, g.Cd, 0)
+    for w in _overflow_windows(g):
+        sess.apply_window(w)
+    assert sess._grows >= 1
+    s1 = state.refresh()
+    assert s1.epoch == s0.epoch + 1
+    assert s1.grows == sess._grows
+    assert s1.Cd == sess.g.Cd > s0.Cd
+
+
+# ---------------------------------------------------------------------------
+# migration + growth interplay (the recovery path's building blocks)
+# ---------------------------------------------------------------------------
+
+
+def test_migrate_after_grow_keeps_orig_ids():
+    """A §4.2 migration on a grown graph still tracks vertices by
+    orig_id — growth never confuses the permutation machinery."""
+    g, _, _ = _graph()
+    g2, _ = grow_blocks(g, Cn=g.Cn * 2)
+    core2 = jnp.asarray(coreness(g2, backend="jnp"))
+    mask = np.asarray(g2.node_mask).astype(bool)
+    movers = np.flatnonzero(mask[: g2.Cn])[:3]  # 3 nodes out of block 0
+    moves = [(int(u), 1 + int(u) % (g2.P - 1)) for u in movers]
+    g3, perm, core3 = migrate_vertices(g2, moves, core2)
+    want = dict(zip(np.asarray(g2.orig_id)[mask].tolist(),
+                    np.asarray(core2)[mask].tolist()))
+    mask3 = np.asarray(g3.node_mask).astype(bool)
+    got = dict(zip(np.asarray(g3.orig_id)[mask3].tolist(),
+                   np.asarray(core3)[mask3].tolist()))
+    assert got == want
+
+
+# ---------------------------------------------------------------------------
+# in-flight MirrorStream growth (replica-pool exhaustion mid-window)
+# ---------------------------------------------------------------------------
+
+
+def _skewed(n=90, seed=4, P=4, threshold=6, node_slack=2):
+    edges = {(0, v) for v in range(1, 1 + threshold * 3)}
+    for u, v in barabasi_albert(n, 3, seed=seed):
+        if u != v:
+            edges.add((min(u, v), max(u, v)))
+    edges = np.array(sorted(edges))
+    assign = node_random_partition(n, P, seed=seed + 1)
+    return build_blocks(edges, n, assign, P=P,
+                        node_slack=node_slack), edges, assign
+
+
+def test_mirror_inflight_grow():
+    """A window whose threshold-crossing inserts exhaust the replica
+    pool mid-window triggers an in-flight Cn grow and a clean retry:
+    nothing half-applies, and the maintained coreness still equals the
+    mirror-aware recompute on the final graph."""
+    g, edges, assign = _skewed()
+    g2, plan = split_hubs(g, threshold=6)
+    sess = MirrorStream(g2, plan, backend="jnp", cc_labels=True,
+                        auto_grow=True)
+    pm = np.asarray(plan.primary_mask)
+    row_of = {int(o): i for i, o in enumerate(np.asarray(g2.orig_id))
+              if pm[i]}
+    # push many new neighbors onto one vertex: each threshold crossing
+    # wants a fresh replica row; a tiny node_slack runs out quickly
+    tgt = 2
+    cur = set(map(tuple, edges.tolist()))
+    window = []
+    for v in range(90):
+        e = (min(tgt, v), max(tgt, v))
+        if tgt != v and e not in cur:
+            cur.add(e)
+            window.append((row_of[tgt], row_of[v], +1))
+        if len(window) == 24:
+            break
+    Cn0 = sess.g.Cn
+    sess.apply_window(window)
+    assert sess._grows >= 1 and sess.g.Cn > Cn0
+    assert sess.result().stats.grows == sess._grows
+    want = np.asarray(coreness(sess.g, backend="jnp", mirror=sess.mirror))
+    np.testing.assert_array_equal(np.asarray(sess.core), want)
